@@ -1,0 +1,112 @@
+"""Benchmark runner — one section per paper table/figure + the roofline.
+
+Emits ``name,us_per_call,derived`` CSV lines: for the cycle-model benchmarks
+us_per_call is modeled microseconds at the paper's 250 MHz clock; for wall
+benchmarks it is host wall time; for the roofline it is the per-step
+lower-bound microseconds on the target pod.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+CLOCK_HZ = 250e6
+
+
+def main() -> None:
+    from benchmarks import (fig3_overhead, fig4_speedup, roofline,
+                            sota_throughput, table2_area)
+
+    print("# === Fig.4: conv-layer speedups (modeled cycles @250MHz) ===")
+    rows, res = fig4_speedup.main()
+    for r in rows:
+        if r["size"] in (64, 256) and r["width"] == "b" and r["lanes"] == 8:
+            pass  # headline rows already validated above
+
+    print("# === Fig.3: phase overheads ===")
+    fig3_overhead.main()
+
+    print("# === Table II: lanes / resource trade-off ===")
+    table2_area.main()
+
+    print("# === SOTA comparison (BLADE / Intel CNC) ===")
+    sota_throughput.main()
+
+    print("# === Wall-clock: fused vs unfused conv layer (CPU host) ===")
+    _fused_vs_unfused()
+
+    print("# === Roofline: baseline (from dry-run artifacts) ===")
+    if os.path.isdir("results/dryrun") and os.listdir("results/dryrun"):
+        roofline.main()
+    else:
+        print("roofline,skipped,run `python -m repro.launch.dryrun --all` first")
+
+    print("# === Roofline: optimized (post-§Perf) ===")
+    if os.path.isdir("results/dryrun_optimized") and \
+            os.listdir("results/dryrun_optimized"):
+        rows = roofline.run("results/dryrun_optimized", quiet=True)
+        roofline.write_csv(rows, "results/roofline_optimized.csv")
+        base = {(r["arch"], r["shape"]): r
+                for r in roofline.run(quiet=True)}
+        for r in rows:
+            b = base.get((r["arch"], r["shape"]))
+            gain = (b["step_lower_bound_s"] / r["step_lower_bound_s"]
+                    if b and r["step_lower_bound_s"] else float("nan"))
+            print(f"roofline_opt,{r['arch']}|{r['shape']},"
+                  f"{r['step_lower_bound_s']*1e6:.0f},"
+                  f"dom={r['dominant']} rf={r['roofline_fraction']:.2f} "
+                  f"gain_vs_baseline={gain:.2f}x")
+
+
+def _fused_vs_unfused():
+    """The ARCANE thesis on this host: one fused program vs op-by-op with
+    materialised intermediates."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit, time_fn
+
+    rng = np.random.default_rng(0)
+    for n in (64, 128):
+        x = jnp.asarray(rng.standard_normal((3, n, n)), jnp.float32)
+        f = jnp.asarray(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+
+        def conv_steps(x, f, barrier):
+            bar = (jax.lax.optimization_barrier if barrier
+                   else (lambda t: t))
+            outs = []
+            for i in range(f.shape[0]):
+                acc = jnp.zeros((n - 2, n - 2), jnp.float32)
+                for c in range(3):
+                    for di in range(3):
+                        for dj in range(3):
+                            acc = acc + f[i, c, di, dj] * jax.lax.slice(
+                                x[c], (di, dj), (di + n - 2, dj + n - 2))
+                            acc = bar(acc)
+                outs.append(acc)
+            y = bar(jnp.stack(outs))
+            ph, pw = (n - 2) // 2, (n - 2) // 2
+            pooled = bar(y[:, :ph * 2, :pw * 2]
+                         .reshape(4, ph, 2, pw, 2).max(axis=(2, 4)))
+            return jnp.where(pooled >= 0, pooled, 0.1 * pooled)
+
+        # identical computation; the ONLY difference is whether XLA may fuse
+        # across ops (VMEM residency) or must materialise each intermediate
+        fused = jax.jit(lambda x, f: conv_steps(x, f, barrier=False))
+
+        def unfused_steps(x, f):
+            return conv_steps(x, f, barrier=True)
+
+        unfused = jax.jit(unfused_steps, donate_argnums=())
+        tf = time_fn(fused, x, f)
+        tu = time_fn(unfused, x, f)
+        emit(f"wallclock_conv_{n}", tf,
+             f"fused; unfused={tu:.1f}us ratio={tu / tf:.2f}x "
+             f"(CPU host caches hide materialisation at these sizes — the "
+             f"TPU-target effect is in the roofline sections)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Table II analogue: per-lane-configuration resource/throughput trade-off.
+
+No silicon here, so "area" maps to the quantities that trade against
+throughput in this reproduction (and on the TPU target):
+
+  * modeled peak GOPS per configuration (lanes × packed int8 × 2 OP/MAC at
+    the paper's 250 MHz) — the paper's computational-capability axis;
+  * effective GOPS on the worst-case workload (int32 3×3 conv, 256²) from the
+    C-RT cycle model — utilisation of that peak;
+  * control overhead share (decode+schedule cycles) — the paper's point that
+    cache-controller logic stays <4 % of area shows up here as <5 % of
+    cycles;
+  * paper's synthesized areas quoted for reference, with the throughput/area
+    trend checked: ARCANE's incremental lanes buy near-linear peak GOPS at
+    sub-linear area growth (the Table II claim).
+"""
+from __future__ import annotations
+
+from repro.core.encoding import ElemWidth
+from benchmarks.fig4_speedup import arcane_cycles, conv_cost
+
+CLOCK_HZ = 250e6
+PAPER_AREA_UM2 = {2: 2.88e6, 4: 3.03e6, 8: 3.34e6}
+PAPER_OVERHEAD_PCT = {2: 21.7, 4: 28.3, 8: 41.3}
+BASELINE_AREA = 2.36e6
+N_VPUS = 4
+
+
+def peak_gops(lanes: int) -> float:
+    """Single VPU instance, int8: lanes × 4 MAC/cycle × 2 OP."""
+    return lanes * 4 * 2 * CLOCK_HZ / 1e9
+
+
+def run(quiet: bool = False):
+    rows = []
+    for lanes in (2, 4, 8):
+        total, shares = arcane_cycles(256, 256, 3, ElemWidth.B, lanes)
+        cost = conv_cost(256, 256, 3, ElemWidth.B)
+        eff = (cost.ops / (total / CLOCK_HZ)) / 1e9
+        ctrl = shares["preamble"]
+        rows.append({
+            "lanes": lanes,
+            "peak_gops_1vpu": peak_gops(lanes),
+            "peak_gops_4vpu": N_VPUS * peak_gops(lanes),
+            "effective_gops": eff,
+            "utilization": eff / peak_gops(lanes),
+            "control_share": ctrl,
+            "paper_area_um2": PAPER_AREA_UM2[lanes],
+            "paper_overhead_pct": PAPER_OVERHEAD_PCT[lanes],
+            "gops_per_mm2": N_VPUS * peak_gops(lanes)
+            / (PAPER_AREA_UM2[lanes] / 1e6),
+        })
+        if not quiet:
+            r = rows[-1]
+            print(f"table2,{lanes}-lane,{total},peak={r['peak_gops_1vpu']:.1f}"
+                  f"GOPS eff={r['effective_gops']:.1f} "
+                  f"util={r['utilization']:.2f} ctrl={ctrl:.3f} "
+                  f"gops/mm2={r['gops_per_mm2']:.1f}")
+    return rows
+
+
+def validate(rows) -> dict:
+    by = {r["lanes"]: r for r in rows}
+    res = {
+        # paper: 8-lane peak = 17 GOPS/instance at 265 MHz → 16 at 250 MHz
+        "peak_8lane_matches_paper": abs(by[8]["peak_gops_1vpu"] - 16.0) < 1.0,
+        # near-linear peak growth with lanes
+        "peak_scales_with_lanes": (by[8]["peak_gops_1vpu"]
+                                   > 3.5 * by[2]["peak_gops_1vpu"]),
+        # paper: area grows sub-linearly (+21.7% → +41.3% for 4× lanes) so
+        # GOPS/mm² must improve with lanes
+        "efficiency_improves": (by[8]["gops_per_mm2"]
+                                > by[2]["gops_per_mm2"]),
+        # controller cycles stay small (paper: control logic < 4% area)
+        "control_share_small": all(r["control_share"] < 0.05 for r in rows),
+    }
+    return res
+
+
+def main():
+    rows = run(quiet=True)
+    for k, v in validate(rows).items():
+        print(f"table2_validate,{k},{v}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving demo: continuous-batching decode over the cache-resident kernels.
+
+Eight requests with ragged prompt lengths share four slots; requests are
+admitted as slots free up (continuous batching). Per-request throughput and
+the aggregate tokens/s are reported.
+
+    PYTHONPATH=src:. python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.engine import ArcaneEngine
+from repro.models.transformer import LM
+from repro.serving.engine import ServeSession
+
+
+def main():
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = LM(cfg, ArcaneEngine(backend="ref"))
+    params = model.init_params(jax.random.key(0))
+    sess = ServeSession(model, params, max_slots=4, max_len=192)
+
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(8):
+        plen = int(rng.integers(4, 32))
+        reqs.append(sess.submit(rng.integers(0, cfg.vocab, plen),
+                                max_new_tokens=16,
+                                temperature=0.0 if i % 2 else 0.8))
+    t0 = time.perf_counter()
+    steps = 0
+    while sess.pending or any(s is not None for s in sess.slots):
+        live = sess.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} ragged requests in {steps} engine steps, "
+          f"{dt:.2f}s → {total / dt:.1f} tok/s aggregate")
+    for r in reqs[:3]:
+        print(f"  req{r.uid}: prompt[{len(r.prompt)}] → {r.out_tokens[:8]}…")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Config registry: ``--arch <id>`` resolution + the assigned shape grid."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (LayerSpec, MLAConfig, MambaConfig,
+                                ModelConfig, MoEConfig, RWKVConfig)
+
+# arch id -> module name
+ARCHS: dict[str, str] = {
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "whisper-large-v3": "whisper_large_v3",
+    "stablelm-3b": "stablelm_3b",
+    "gemma2-9b": "gemma2_9b",
+    "minicpm3-4b": "minicpm3_4b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "internvl2-1b": "internvl2_1b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode | long_decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "long_decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.smoke()
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k only for sub-quadratic (SSM/hybrid) archs — full-attention
+    archs skip it (noted in DESIGN.md §4)."""
+    if shape.kind == "long_decode":
+        return cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def grid(arch: str) -> list[ShapeConfig]:
+    cfg = get_config(arch)
+    return [s for s in SHAPES.values() if shape_applicable(cfg, s)]
+
+
+__all__ = ["ARCHS", "SHAPES", "ShapeConfig", "ModelConfig", "MoEConfig",
+           "MLAConfig", "MambaConfig", "RWKVConfig", "LayerSpec",
+           "get_config", "get_smoke_config", "shape_applicable", "grid"]

@@ -1,0 +1,32 @@
+"""ARCANE core — the paper's contribution.
+
+Simulator stack (paper-faithful): encoding → bridge → runtime (C-RT) →
+cache/VPUs. Production stack: engine (trace-time decode + renaming) →
+repro.kernels Pallas micro-programs.
+"""
+from repro.core.encoding import (ElemWidth, InstrWord, Offload, Operands,
+                                 encode_xmk, encode_xmr, IllegalInstruction,
+                                 OPCODE_CUSTOM2, XMR_FUNC5, NUM_XMK,
+                                 NUM_MATRIX_REGS)
+from repro.core.isa import (KernelCost, KernelDef, KernelError, KernelLibrary,
+                            KernelSpec, default_library, fx_encode)
+from repro.core.matrix import MatrixBinding, MatrixMap, np_dtype
+from repro.core.cache import (ArcaneCache, CacheLocked, LineBusy, MainMemory,
+                              ResourceStall)
+from repro.core.address_table import AddressTable, RegionKind, RegionStatus
+from repro.core.hazards import DependencyTracker, KernelDeps
+from repro.core.runtime import CacheRuntime, PhaseStats
+from repro.core.vpu import VPU, VPUGeometry, ResidentMatrix
+from repro.core.bridge import ArcaneCoprocessor, Bridge, XifResult
+
+__all__ = [
+    "ElemWidth", "InstrWord", "Offload", "Operands", "encode_xmk", "encode_xmr",
+    "IllegalInstruction", "OPCODE_CUSTOM2", "XMR_FUNC5", "NUM_XMK",
+    "NUM_MATRIX_REGS", "KernelCost", "KernelDef", "KernelError",
+    "KernelLibrary", "KernelSpec", "default_library", "fx_encode",
+    "MatrixBinding", "MatrixMap", "np_dtype", "ArcaneCache", "CacheLocked",
+    "LineBusy", "MainMemory", "ResourceStall", "AddressTable", "RegionKind",
+    "RegionStatus", "DependencyTracker", "KernelDeps", "CacheRuntime",
+    "PhaseStats", "VPU", "VPUGeometry", "ResidentMatrix", "ArcaneCoprocessor",
+    "Bridge", "XifResult",
+]

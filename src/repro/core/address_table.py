@@ -1,0 +1,114 @@
+"""Address Table (AT) — kernel operand state tracking (paper §III-A3).
+
+Each entry holds the start/end byte addresses of a kernel operand, a validity
+flag and a status flag, plus whether the region is a kernel *source* or
+*destination*. The Kernel Decoder registers regions when an operation is
+queued; the cache controller consults the AT on critical accesses and stalls
+only the requests that would corrupt an in-flight kernel:
+
+- host STORE into a live *source* region  → WAR hazard → stall until the
+  operand has been allocated (copied) into VPU lines;
+- host LOAD  from a live *destination*    → RAW hazard → stall until kernel
+  write-back completes;
+- host STORE into a live *destination*    → WAW hazard → stall likewise.
+
+Entries are reference-counted per physical binding so that renamed matrices
+(same logical register, different physical tags) track independently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Optional
+
+
+class RegionKind(enum.Enum):
+    SRC = "src"
+    DST = "dst"
+
+
+class RegionStatus(enum.Enum):
+    BUSY = "busy"          # operand still needed by a pending/running kernel
+    ALLOCATED = "alloc"    # source copied into VPU lines → host stores OK again
+    FREE = "free"
+
+
+@dataclasses.dataclass
+class ATEntry:
+    start: int
+    end: int                      # one past last byte
+    kind: RegionKind
+    status: RegionStatus = RegionStatus.BUSY
+    valid: bool = True
+    phys_id: int = -1             # owning physical matrix binding
+    refcount: int = 1             # pending kernels still referencing the region
+
+    def overlaps(self, start: int, end: int) -> bool:
+        return self.valid and self.start < end and start < self.end
+
+
+class AddressTable:
+    """Statically sized AT (static allocation philosophy, §IV-B)."""
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self._entries: list[Optional[ATEntry]] = [None] * capacity
+
+    def __iter__(self) -> Iterator[ATEntry]:
+        return (e for e in self._entries if e is not None and e.valid)
+
+    def _free_slot(self) -> int:
+        for i, e in enumerate(self._entries):
+            if e is None or not e.valid:
+                return i
+        raise RuntimeError("Address Table full — raise capacity in config")
+
+    def register(self, start: int, end: int, kind: RegionKind, phys_id: int) -> ATEntry:
+        """Register (or up-ref) an operand region for a queued kernel."""
+        for e in self:
+            if e.phys_id == phys_id and e.kind == kind:
+                e.refcount += 1
+                e.status = RegionStatus.BUSY
+                return e
+        entry = ATEntry(start=start, end=end, kind=kind, phys_id=phys_id)
+        self._entries[self._free_slot()] = entry
+        return entry
+
+    def mark_allocated(self, phys_id: int) -> None:
+        """Source operand copied into VPU lines — WAR window closed."""
+        for e in self:
+            if e.phys_id == phys_id and e.kind == RegionKind.SRC:
+                e.status = RegionStatus.ALLOCATED
+
+    def release(self, phys_id: int, kind: RegionKind) -> None:
+        """Kernel finished with the region: down-ref; free at zero (permissions
+        restored for the host, §IV-B3)."""
+        for e in self:
+            if e.phys_id == phys_id and e.kind == kind:
+                e.refcount -= 1
+                if e.refcount <= 0:
+                    e.valid = False
+                    e.status = RegionStatus.FREE
+                return
+
+    # ---------------------------------------------------------------- checks
+    def blocks_store(self, start: int, end: int) -> Optional[ATEntry]:
+        """Would a host store into [start, end) corrupt an in-flight kernel?"""
+        for e in self:
+            if not e.overlaps(start, end):
+                continue
+            if e.kind == RegionKind.SRC and e.status == RegionStatus.BUSY:
+                return e  # WAR: operand not yet copied into the VPU
+            if e.kind == RegionKind.DST:
+                return e  # WAW: result would be overwritten by the kernel
+        return None
+
+    def blocks_load(self, start: int, end: int) -> Optional[ATEntry]:
+        """Would a host load from [start, end) observe a stale result?"""
+        for e in self:
+            if e.overlaps(start, end) and e.kind == RegionKind.DST:
+                return e  # RAW: kernel result not written back yet
+        return None
+
+    def live_count(self) -> int:
+        return sum(1 for _ in self)

@@ -1,0 +1,351 @@
+"""Functional model of the ARCANE LLC (paper §III-A).
+
+Fully-associative cache whose data array doubles as the VPUs' vector register
+files: ``n_lines = n_vpus * vregs_per_vpu`` and the line length equals the
+maximum vector length (1 KiB in the paper's synthesized configs). Hits resolve
+in one cycle; misses/write-backs go through a DMA to main memory; replacement is
+a counter-based approximate LRU; the write policy is write-back +
+fetch-on-write. A lock register arbitrates host-CPU vs eCPU access; lines
+claimed by an in-flight kernel are marked *busy-computing* and are neither
+evictable nor host-accessible.
+
+This is the paper-faithful simulator used by the CNN example, the Fig.3/Fig.4
+benchmarks and the property tests. The production LM path keeps the same
+discipline at the VMEM level through Pallas BlockSpecs (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class CacheLocked(Exception):
+    """Host access attempted while the eCPU holds the cache lock (stall)."""
+
+
+class LineBusy(Exception):
+    """Access or eviction attempted on a busy-computing line (stall)."""
+
+
+class ResourceStall(Exception):
+    """No allocatable line available (all candidates busy-computing)."""
+
+
+class MainMemory:
+    """Flat byte-addressable main (off-chip) memory."""
+
+    def __init__(self, size: int):
+        self.size = size
+        self.data = np.zeros(size, dtype=np.uint8)
+
+    def read(self, addr: int, n: int) -> np.ndarray:
+        if addr < 0 or addr + n > self.size:
+            raise IndexError(f"memory read [{addr}, {addr + n}) out of bounds")
+        return self.data[addr : addr + n].copy()
+
+    def write(self, addr: int, buf: np.ndarray) -> None:
+        buf = np.ascontiguousarray(buf, dtype=np.uint8).reshape(-1)
+        if addr < 0 or addr + buf.size > self.size:
+            raise IndexError(f"memory write [{addr}, {addr + buf.size}) out of bounds")
+        self.data[addr : addr + buf.size] = buf
+
+    # Typed convenience accessors used by examples/tests.
+    def write_array(self, addr: int, arr: np.ndarray) -> None:
+        self.write(addr, np.ascontiguousarray(arr).view(np.uint8))
+
+    def read_array(self, addr: int, shape: tuple[int, ...], dtype) -> np.ndarray:
+        n = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        return self.read(addr, n).view(dtype).reshape(shape).copy()
+
+
+@dataclasses.dataclass
+class CacheLineState:
+    valid: bool = False
+    dirty: bool = False
+    tag: int = -1              # line-aligned base address of the cached block
+    lru: int = 0               # counter-based approximate LRU timestamp
+    busy_computing: bool = False
+    is_src: bool = False       # CT fast-path flags (§III-A3): line holds a kernel
+    is_dst: bool = False       # source / destination operand
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    writebacks: int = 0
+    fills: int = 0
+    host_stalls: int = 0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.writebacks = self.fills = self.host_stalls = 0
+
+
+class ArcaneCache:
+    """The LLC: cache controller + data array shared with the VPUs."""
+
+    def __init__(
+        self,
+        memory: MainMemory,
+        n_vpus: int = 4,
+        vregs_per_vpu: int = 32,
+        vlen_bytes: int = 1024,
+    ):
+        self.memory = memory
+        self.n_vpus = n_vpus
+        self.vregs_per_vpu = vregs_per_vpu
+        self.vlen_bytes = vlen_bytes
+        self.n_lines = n_vpus * vregs_per_vpu
+        self.lines = [CacheLineState() for _ in range(self.n_lines)]
+        # The data array: one row per line; VPU v's vector register r is row
+        # v * vregs_per_vpu + r — the memory *is* the register file.
+        self.data = np.zeros((self.n_lines, vlen_bytes), dtype=np.uint8)
+        self._lru_counter = 0
+        self.locked_by_ecpu = False
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------------ util
+    def line_of_vreg(self, vpu: int, vreg: int) -> int:
+        if not (0 <= vpu < self.n_vpus and 0 <= vreg < self.vregs_per_vpu):
+            raise IndexError("vpu/vreg out of range")
+        return vpu * self.vregs_per_vpu + vreg
+
+    def vpu_lines(self, vpu: int) -> range:
+        return range(vpu * self.vregs_per_vpu, (vpu + 1) * self.vregs_per_vpu)
+
+    def _align(self, addr: int) -> int:
+        return addr - (addr % self.vlen_bytes)
+
+    def _touch(self, idx: int) -> None:
+        self._lru_counter += 1
+        self.lines[idx].lru = self._lru_counter
+
+    def lookup(self, addr: int) -> Optional[int]:
+        tag = self._align(addr)
+        for i, ln in enumerate(self.lines):
+            if ln.valid and ln.tag == tag:
+                return i
+        return None
+
+    def dirty_line_count(self, vpu: int) -> int:
+        """Scheduler policy input: prefer the VPU with fewest dirty lines."""
+        return sum(1 for i in self.vpu_lines(vpu) if self.lines[i].dirty)
+
+    # ------------------------------------------------------------------ lock
+    def acquire_lock(self) -> bool:
+        """eCPU lock request; not granted during ongoing host ops (modeled as
+        always-grantable here because host ops are atomic in the simulator)."""
+        if self.locked_by_ecpu:
+            return False
+        self.locked_by_ecpu = True
+        return True
+
+    def release_lock(self) -> None:
+        self.locked_by_ecpu = False
+
+    # ------------------------------------------------------------- fill/evict
+    def _writeback(self, idx: int) -> None:
+        ln = self.lines[idx]
+        if ln.valid and ln.dirty:
+            end = min(ln.tag + self.vlen_bytes, self.memory.size)
+            self.memory.write(ln.tag, self.data[idx, : end - ln.tag])
+            self.stats.writebacks += 1
+        ln.dirty = False
+
+    def _victim(self) -> int:
+        best, best_lru = -1, None
+        for i, ln in enumerate(self.lines):
+            if ln.busy_computing:
+                continue
+            if not ln.valid:
+                return i
+            if best_lru is None or ln.lru < best_lru:
+                best, best_lru = i, ln.lru
+        if best < 0:
+            raise ResourceStall("all cache lines are busy-computing")
+        return best
+
+    def _fill(self, addr: int) -> int:
+        """Miss path: pick a victim, write back if dirty, DMA the block in."""
+        tag = self._align(addr)
+        idx = self._victim()
+        self._writeback(idx)
+        ln = self.lines[idx]
+        end = min(tag + self.vlen_bytes, self.memory.size)
+        self.data[idx, : end - tag] = self.memory.read(tag, end - tag)
+        if end - tag < self.vlen_bytes:
+            self.data[idx, end - tag :] = 0
+        ln.valid, ln.dirty, ln.tag = True, False, tag
+        ln.is_src = ln.is_dst = ln.busy_computing = False
+        self.stats.fills += 1
+        self._touch(idx)
+        return idx
+
+    # ------------------------------------------------------------- host path
+    def _host_access_line(self, addr: int, *, for_write: bool) -> int:
+        if self.locked_by_ecpu:
+            self.stats.host_stalls += 1
+            raise CacheLocked("cache is locked by the eCPU")
+        idx = self.lookup(addr)
+        if idx is not None:
+            if self.lines[idx].busy_computing:
+                self.stats.host_stalls += 1
+                raise LineBusy(f"line for addr {addr:#x} is busy-computing")
+            self.stats.hits += 1
+            self._touch(idx)
+            return idx
+        self.stats.misses += 1
+        return self._fill(addr)  # fetch-on-write: misses fill even for stores
+
+    def host_read(self, addr: int, n: int) -> np.ndarray:
+        out = np.empty(n, dtype=np.uint8)
+        pos = 0
+        while pos < n:
+            a = addr + pos
+            idx = self._host_access_line(a, for_write=False)
+            off = a - self.lines[idx].tag
+            take = min(self.vlen_bytes - off, n - pos)
+            out[pos : pos + take] = self.data[idx, off : off + take]
+            pos += take
+        return out
+
+    def host_write(self, addr: int, buf: np.ndarray) -> None:
+        buf = np.ascontiguousarray(buf, dtype=np.uint8).reshape(-1)
+        pos = 0
+        while pos < buf.size:
+            a = addr + pos
+            idx = self._host_access_line(a, for_write=True)
+            off = a - self.lines[idx].tag
+            take = min(self.vlen_bytes - off, buf.size - pos)
+            self.data[idx, off : off + take] = buf[pos : pos + take]
+            self.lines[idx].dirty = True
+            pos += take
+
+    # ----------------------------------------------------------- kernel path
+    def claim_vregs(self, vpu: int, n: int) -> list[int]:
+        """Claim ``n`` vector registers (cache lines) of ``vpu`` for a kernel.
+
+        Lines are freed (written back if dirty) and marked busy-computing.
+        """
+        avail = [i for i in self.vpu_lines(vpu) if not self.lines[i].busy_computing]
+        if len(avail) < n:
+            raise ResourceStall(
+                f"VPU{vpu}: need {n} vregs, only {len(avail)} not busy"
+            )
+        # Prefer invalid lines, then LRU order — the fewest-writebacks choice.
+        avail.sort(key=lambda i: (self.lines[i].valid, self.lines[i].lru))
+        chosen = avail[:n]
+        for i in chosen:
+            self._writeback(i)
+            ln = self.lines[i]
+            ln.valid, ln.tag = False, -1
+            ln.busy_computing = True
+            ln.is_src = ln.is_dst = False
+            self._touch(i)
+        return chosen
+
+    def release_vregs(self, line_idxs: list[int]) -> None:
+        for i in line_idxs:
+            ln = self.lines[i]
+            ln.busy_computing = False
+            ln.is_src = ln.is_dst = False
+            ln.valid, ln.dirty, ln.tag = False, False, -1
+
+    # ------------------------------------------------------------- DMA (2D)
+    def dma_in_2d(
+        self, vpu: int, line_idxs: list[int], addr: int, rows: int,
+        row_bytes: int, stride_bytes: int,
+    ) -> int:
+        """2D DMA main-memory→VPU lines: pack ``rows`` of ``row_bytes`` (strided
+        by ``stride_bytes`` in memory) contiguously into the claimed lines.
+
+        Rows the host still holds dirty in *other* cache lines are snooped so
+        the DMA always observes the latest data (the controller routes DMA
+        requests and serves hits from the cache, §III-A4). Returns bytes moved.
+        """
+        total = rows * row_bytes
+        buf = np.empty(total, dtype=np.uint8)
+        for r in range(rows):
+            a = addr + r * stride_bytes
+            buf[r * row_bytes : (r + 1) * row_bytes] = self._snooped_read(a, row_bytes)
+        self._scatter_to_lines(line_idxs, buf)
+        return total
+
+    def dma_out_2d(
+        self, vpu: int, line_idxs: list[int], addr: int, rows: int,
+        row_bytes: int, stride_bytes: int,
+    ) -> int:
+        """2D DMA VPU lines→main memory (kernel write-back consolidation).
+
+        Follows fetch-on-write: if a destination row is resident in a normal
+        cache line, that line is updated and marked dirty instead of bypassing
+        to memory, so pending host reads see the newest data immediately.
+        """
+        total = rows * row_bytes
+        buf = self._gather_from_lines(line_idxs, total)
+        for r in range(rows):
+            a = addr + r * stride_bytes
+            self._snooped_write(a, buf[r * row_bytes : (r + 1) * row_bytes])
+        return total
+
+    def _snooped_read(self, addr: int, n: int) -> np.ndarray:
+        out = np.empty(n, dtype=np.uint8)
+        pos = 0
+        while pos < n:
+            a = addr + pos
+            idx = self.lookup(a)
+            off = a % self.vlen_bytes
+            take = min(self.vlen_bytes - off, n - pos)
+            if idx is not None and not self.lines[idx].busy_computing:
+                out[pos : pos + take] = self.data[idx, off : off + take]
+            else:
+                out[pos : pos + take] = self.memory.read(a, take)
+            pos += take
+        return out
+
+    def _snooped_write(self, addr: int, buf: np.ndarray) -> None:
+        pos = 0
+        n = buf.size
+        while pos < n:
+            a = addr + pos
+            idx = self.lookup(a)
+            off = a % self.vlen_bytes
+            take = min(self.vlen_bytes - off, n - pos)
+            if idx is not None and not self.lines[idx].busy_computing:
+                self.data[idx, off : off + take] = buf[pos : pos + take]
+                self.lines[idx].dirty = True
+            else:
+                self.memory.write(a, buf[pos : pos + take])
+            pos += take
+
+    def _scatter_to_lines(self, line_idxs: list[int], buf: np.ndarray) -> None:
+        if buf.size > len(line_idxs) * self.vlen_bytes:
+            raise ValueError("operand larger than claimed vector registers")
+        pos = 0
+        for i in line_idxs:
+            take = min(self.vlen_bytes, buf.size - pos)
+            if take <= 0:
+                break
+            self.data[i, :take] = buf[pos : pos + take]
+            pos += take
+
+    def _gather_from_lines(self, line_idxs: list[int], n: int) -> np.ndarray:
+        out = np.empty(n, dtype=np.uint8)
+        pos = 0
+        for i in line_idxs:
+            take = min(self.vlen_bytes, n - pos)
+            if take <= 0:
+                break
+            out[pos : pos + take] = self.data[i, :take]
+            pos += take
+        return out
+
+    # ---------------------------------------------------------------- debug
+    def flush_all(self) -> None:
+        for i, ln in enumerate(self.lines):
+            if ln.busy_computing:
+                raise LineBusy("cannot flush while kernels are in flight")
+            self._writeback(i)
+            ln.valid, ln.tag = False, -1

@@ -1,0 +1,121 @@
+"""Hazard checking and logical-matrix renaming (paper §IV-B1).
+
+The Kernel Decoder must cope with out-of-order communication with the host: an
+``xmr`` may rebind a logical matrix register while an older kernel that named
+the same register is still queued. Physically copying or stalling would erase
+the benefit of deferred allocation, so — exactly like an OoO core — the decoder
+*renames*: every ``xmr`` mints a fresh physical binding (see
+:class:`repro.core.matrix.MatrixMap`), and queued kernels capture the physical
+bindings (not the logical indices) at decode time. WAR/WAW on logical registers
+then vanish by construction; only true RAW dependencies between kernels remain,
+and those are expressed as edges in a dependency DAG used by both the simulator
+scheduler and the trace-time production engine (buffer-donation ordering).
+
+Host-side hazards against main memory regions are handled by the
+:class:`repro.core.address_table.AddressTable`; this module covers
+kernel↔kernel dependencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.matrix import MatrixBinding
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDeps:
+    """Dependency summary for one decoded kernel instance."""
+
+    kernel_id: int
+    sources: tuple[int, ...]       # physical ids read
+    destination: int               # physical id written
+    depends_on: tuple[int, ...]    # kernel_ids that must complete first
+
+
+class DependencyTracker:
+    """Builds the kernel-level dependency DAG under renaming.
+
+    After renaming, two queued kernels conflict iff:
+      * RAW — a later kernel reads the physical destination of an earlier one;
+      * output/anti conflicts on the *same physical* destination (possible when
+        a program reuses a destination register without re-reserving it —
+        renaming only happens at ``xmr``) — kept as WAW/WAR edges;
+      * memory aliasing — distinct physical bindings whose main-memory
+        footprints overlap (the AT-level view of the same hazard).
+    """
+
+    def __init__(self):
+        self._completed: set[int] = set()
+        self._pending: dict[int, KernelDeps] = {}
+        self._writer_of: dict[int, int] = {}   # phys_id -> kernel_id (last writer)
+        self._readers_of: dict[int, set[int]] = {}
+        self._bindings: dict[int, MatrixBinding] = {}
+        self._next_kernel_id = 0
+
+    # ------------------------------------------------------------------ api
+    def admit(
+        self,
+        sources: Sequence[MatrixBinding],
+        destination: MatrixBinding,
+    ) -> KernelDeps:
+        kid = self._next_kernel_id
+        self._next_kernel_id += 1
+
+        deps: set[int] = set()
+        for b in (*sources, destination):
+            self._bindings[b.phys_id] = b
+
+        # RAW: read a pending kernel's destination.
+        for src in sources:
+            w = self._writer_of.get(src.phys_id)
+            if w is not None and w not in self._completed:
+                deps.add(w)
+        # WAW: same physical destination written twice without renaming.
+        w = self._writer_of.get(destination.phys_id)
+        if w is not None and w not in self._completed:
+            deps.add(w)
+        # WAR: we overwrite something a pending kernel still reads.
+        for r in self._readers_of.get(destination.phys_id, ()):
+            if r not in self._completed:
+                deps.add(r)
+        # Memory aliasing between distinct physical bindings (footprint overlap).
+        for other_pid, writer in list(self._writer_of.items()):
+            if writer in self._completed or other_pid == destination.phys_id:
+                continue
+            other = self._bindings[other_pid]
+            if other.overlaps(destination) or any(s.overlaps(other) for s in sources):
+                deps.add(writer)
+
+        rec = KernelDeps(
+            kernel_id=kid,
+            sources=tuple(s.phys_id for s in sources),
+            destination=destination.phys_id,
+            depends_on=tuple(sorted(deps)),
+        )
+        self._pending[kid] = rec
+        self._writer_of[destination.phys_id] = kid
+        for s in sources:
+            self._readers_of.setdefault(s.phys_id, set()).add(kid)
+        return rec
+
+    def ready(self, kernel_id: int) -> bool:
+        rec = self._pending[kernel_id]
+        return all(d in self._completed for d in rec.depends_on)
+
+    def runnable(self) -> list[int]:
+        return [k for k in self._pending if self.ready(k)]
+
+    def complete(self, kernel_id: int) -> None:
+        self._pending.pop(kernel_id)
+        self._completed.add(kernel_id)
+
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    def has_cycle(self) -> bool:
+        """DAG invariant (property-tested): admission can never create a cycle
+        because edges always point from earlier to later kernel ids."""
+        return any(
+            d >= kid for kid, rec in self._pending.items() for d in rec.depends_on
+        )

@@ -1,0 +1,297 @@
+"""The software-defined `xmnmc` matrix ISA — kernel library (paper §IV).
+
+Only two instruction *types* exist: ``xmr`` (matrix reserve) and ``xmkN``
+(matrix kernel, N ∈ [0, 30], selected by ``func5``). What each ``xmkN`` *does*
+is software: the Kernel Decoder looks the func5 up in this registry (O(1)) and
+runs the registered micro-program. Users extend the ISA by registering new
+kernels before C-RT "compilation" — here, at import/config time — with
+:func:`register_kernel`; no hardware (or framework) change required.
+
+Each kernel definition carries:
+  * ``preamble``  — shape/param validation, destination shape inference
+                    (runs in the decoder's interrupt context);
+  * ``body``      — the vector micro-program (numpy for the simulator; the
+                    production engine swaps in the Pallas implementation from
+                    ``repro.kernels`` — same signature, same semantics);
+  * ``cost``      — op counts for the cycle/roofline models.
+
+Built-ins follow Table I:
+  xmk0 GeMM (α, β) · xmk1 LeakyReLU (α) · xmk2 MaxPool (stride, win)
+  xmk3 2D Conv · xmk4 3-channel 2D Conv Layer (conv+maxpool+ReLU, fused)
+
+Integer semantics: element arithmetic wraps at the operand width (hardware
+registers); α/β are signed Q8.8 fixed-point scalars for the scaling kernels
+(a common choice for integer NMC datapaths) — documented per kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.encoding import ElemWidth, NUM_XMK
+from repro.core.matrix import np_dtype
+
+
+class KernelError(ValueError):
+    """Preamble rejected the operation — bridge answers 'kill'."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """Op counts for the cycle model (simulator) and roofline (benchmarks)."""
+
+    macs: int = 0          # multiply-accumulate ops (2 OPs each, as in §V-C)
+    elementwise: int = 0   # compare/select/add/shift style ops
+    in_bytes: int = 0
+    out_bytes: int = 0
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs + self.elementwise
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Decoded, validated kernel instance ready for scheduling."""
+
+    func5: int
+    name: str
+    width: ElemWidth
+    src_shapes: tuple[tuple[int, int], ...]
+    dst_shape: tuple[int, int]
+    params: dict
+    cost: KernelCost
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDef:
+    func5: int
+    name: str
+    n_sources: int
+    # preamble(src_shapes, params, width) -> (dst_shape, cost); raises KernelError.
+    preamble: Callable[[Sequence[tuple[int, int]], dict, ElemWidth], tuple[tuple[int, int], KernelCost]]
+    # body(sources, params, width) -> destination ndarray.
+    body: Callable[[Sequence[np.ndarray], dict, ElemWidth], np.ndarray]
+    doc: str = ""
+
+
+class KernelLibrary:
+    """func5 → KernelDef registry. O(1) decode; user-extensible (§IV-A2)."""
+
+    def __init__(self):
+        self._defs: list[Optional[KernelDef]] = [None] * NUM_XMK
+
+    def register(self, kdef: KernelDef, *, allow_override: bool = False) -> None:
+        if not 0 <= kdef.func5 < NUM_XMK:
+            raise ValueError(f"func5 {kdef.func5} outside xmk space [0, {NUM_XMK})")
+        if self._defs[kdef.func5] is not None and not allow_override:
+            raise ValueError(f"xmk{kdef.func5} already bound to "
+                             f"{self._defs[kdef.func5].name}")
+        self._defs[kdef.func5] = kdef
+
+    def lookup(self, func5: int) -> KernelDef:
+        if not 0 <= func5 < NUM_XMK or self._defs[func5] is None:
+            raise KernelError(f"xmk{func5}: no kernel registered")
+        return self._defs[func5]
+
+    def names(self) -> dict[int, str]:
+        return {i: d.name for i, d in enumerate(self._defs) if d is not None}
+
+
+def register_kernel(
+    library: "KernelLibrary", func5: int, name: str, n_sources: int, doc: str = ""
+):
+    """Decorator pair: ``@register_kernel(lib, 5, "mykernel", 2)`` on the body,
+    with ``preamble=`` supplied via the returned registrar."""
+
+    def wrap(body, preamble):
+        library.register(KernelDef(func5=func5, name=name, n_sources=n_sources,
+                                   preamble=preamble, body=body, doc=doc))
+        return body
+
+    return wrap
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point helpers (α/β are signed Q8.8 in the integer datapath).
+Q = 8
+
+
+def _fx(v: int) -> float:
+    """Interpret a 16-bit operand half as signed Q8.8."""
+    v &= 0xFFFF
+    if v >= 0x8000:
+        v -= 0x10000
+    return v / (1 << Q)
+
+
+def fx_encode(x: float) -> int:
+    """Encode a float scalar into the 16-bit Q8.8 operand half."""
+    v = int(round(x * (1 << Q)))
+    if not -0x8000 <= v <= 0x7FFF:
+        raise KernelError(f"scalar {x} out of Q8.8 range")
+    return v & 0xFFFF
+
+
+def _wrap(x: np.ndarray, width: ElemWidth) -> np.ndarray:
+    """Wrap accumulator results back to the operand width (two's complement
+    truncation, i.e. what the hardware register write does)."""
+    dt = np_dtype(width)
+    return np.asarray(x).astype(np.int64).astype(dt, casting="unsafe")
+
+
+# ---------------------------------------------------------------------------
+# Built-in kernels (Table I).
+
+def _gemm_preamble(shapes, params, width):
+    (m, k), (k2, n) = shapes[0], shapes[1]
+    if k != k2:
+        raise KernelError(f"GeMM inner dims mismatch: {shapes[0]} x {shapes[1]}")
+    if len(shapes) > 2 and shapes[2] != (m, n):
+        raise KernelError(f"GeMM accumulator shape {shapes[2]} != {(m, n)}")
+    eb = width.nbytes
+    cost = KernelCost(
+        macs=m * k * n,
+        elementwise=2 * m * n,  # alpha scale + beta*C add
+        in_bytes=(m * k + k * n + (m * n if len(shapes) > 2 else 0)) * eb,
+        out_bytes=m * n * eb,
+    )
+    return (m, n), cost
+
+
+def _gemm_body(sources, params, width):
+    a, b = sources[0], sources[1]
+    acc = a.astype(np.int64) @ b.astype(np.int64)
+    alpha = _fx(params.get("alpha", fx_encode(1.0)))
+    beta = _fx(params.get("beta", fx_encode(0.0)))
+    out = alpha * acc
+    if len(sources) > 2 and beta != 0.0:
+        out = out + beta * sources[2].astype(np.int64)
+    return _wrap(np.round(out), width)
+
+
+def _leakyrelu_preamble(shapes, params, width):
+    (m, n) = shapes[0]
+    eb = width.nbytes
+    return (m, n), KernelCost(elementwise=2 * m * n, in_bytes=m * n * eb,
+                              out_bytes=m * n * eb)
+
+
+def _leakyrelu_body(sources, params, width):
+    x = sources[0].astype(np.int64)
+    alpha = _fx(params.get("alpha", fx_encode(0.0)))
+    return _wrap(np.where(x >= 0, x, np.round(alpha * x)), width)
+
+
+def _maxpool_preamble(shapes, params, width):
+    (m, n) = shapes[0]
+    win = params.get("win_size", 2)
+    stride = params.get("stride", win)
+    if win <= 0 or stride <= 0:
+        raise KernelError("maxpool window/stride must be positive")
+    if m < win or n < win:
+        raise KernelError(f"maxpool window {win} larger than input {shapes[0]}")
+    om = (m - win) // stride + 1
+    on = (n - win) // stride + 1
+    eb = width.nbytes
+    return (om, on), KernelCost(elementwise=om * on * win * win,
+                                in_bytes=m * n * eb, out_bytes=om * on * eb)
+
+
+def _maxpool_body(sources, params, width):
+    x = sources[0]
+    win = params.get("win_size", 2)
+    stride = params.get("stride", win)
+    m, n = x.shape
+    om = (m - win) // stride + 1
+    on = (n - win) // stride + 1
+    out = np.empty((om, on), dtype=x.dtype)
+    for i in range(om):
+        for j in range(on):
+            out[i, j] = x[i * stride : i * stride + win,
+                          j * stride : j * stride + win].max()
+    return out
+
+
+def _conv2d_valid(x: np.ndarray, f: np.ndarray) -> np.ndarray:
+    """Valid 2D cross-correlation in int64 (what CNN stacks call conv)."""
+    m, n = x.shape
+    km, kn = f.shape
+    om, on = m - km + 1, n - kn + 1
+    out = np.zeros((om, on), dtype=np.int64)
+    xl = x.astype(np.int64)
+    fl = f.astype(np.int64)
+    for di in range(km):
+        for dj in range(kn):
+            out += fl[di, dj] * xl[di : di + om, dj : dj + on]
+    return out
+
+
+def _conv2d_preamble(shapes, params, width):
+    (m, n), (km, kn) = shapes[0], shapes[1]
+    if km > m or kn > n:
+        raise KernelError(f"filter {shapes[1]} larger than input {shapes[0]}")
+    om, on = m - km + 1, n - kn + 1
+    eb = width.nbytes
+    return (om, on), KernelCost(macs=om * on * km * kn,
+                                in_bytes=(m * n + km * kn) * eb,
+                                out_bytes=om * on * eb)
+
+
+def _conv2d_body(sources, params, width):
+    return _wrap(_conv2d_valid(sources[0], sources[1]), width)
+
+
+def _convlayer_preamble(shapes, params, width):
+    """3-channel conv layer (xmk4): input (3·H, W) channel-stacked, filter
+    (3·k, k) channel-stacked; fused conv → 2×2 maxpool → ReLU (§IV-A)."""
+    (m3, n), (km3, kn) = shapes[0], shapes[1]
+    if m3 % 3 or km3 % 3:
+        raise KernelError("xmk4 expects 3 channel-stacked rows (rows % 3 == 0)")
+    m, km = m3 // 3, km3 // 3
+    if km > m or kn > n:
+        raise KernelError("filter larger than input")
+    cm, cn = m - km + 1, n - kn + 1
+    if cm < 2 or cn < 2:
+        raise KernelError("conv output smaller than 2x2 pool window")
+    om, on = cm // 2, cn // 2
+    eb = width.nbytes
+    cost = KernelCost(
+        macs=3 * cm * cn * km * kn,
+        elementwise=om * on * 4 + om * on,  # pool compares + relu
+        in_bytes=(m3 * n + km3 * kn) * eb,
+        out_bytes=om * on * eb,
+    )
+    return (om, on), cost
+
+
+def _convlayer_body(sources, params, width):
+    x3, f3 = sources[0], sources[1]
+    m = x3.shape[0] // 3
+    km = f3.shape[0] // 3
+    acc = None
+    for c in range(3):
+        part = _conv2d_valid(x3[c * m : (c + 1) * m], f3[c * km : (c + 1) * km])
+        acc = part if acc is None else acc + part
+    # maxpool 2x2 stride 2 on the accumulator, then ReLU, then width wrap.
+    cm, cn = acc.shape
+    om, on = cm // 2, cn // 2
+    pooled = acc[: om * 2, : on * 2].reshape(om, 2, on, 2).max(axis=(1, 3))
+    return _wrap(np.maximum(pooled, 0), width)
+
+
+def default_library() -> KernelLibrary:
+    lib = KernelLibrary()
+    lib.register(KernelDef(0, "gemm", 3, _gemm_preamble, _gemm_body,
+                           "D = alpha * ms1 @ ms2 + beta * ms3 (Q8.8 scalars)"))
+    lib.register(KernelDef(1, "leakyrelu", 1, _leakyrelu_preamble, _leakyrelu_body,
+                           "D = x >= 0 ? x : alpha * x (alpha Q8.8)"))
+    lib.register(KernelDef(2, "maxpool", 1, _maxpool_preamble, _maxpool_body,
+                           "D = maxpool(ms1, win_size, stride)"))
+    lib.register(KernelDef(3, "conv2d", 2, _conv2d_preamble, _conv2d_body,
+                           "D = conv2d_valid(ms1, ms2)"))
+    lib.register(KernelDef(4, "conv_layer", 2, _convlayer_preamble, _convlayer_body,
+                           "D = relu(maxpool2x2(conv3ch(ms1, ms2))) — fused"))
+    return lib

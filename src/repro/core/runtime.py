@@ -1,0 +1,338 @@
+"""C-RT — the Cache Runtime executed by the eCPU (paper §IV-B).
+
+Three cooperating modules around a statically-allocated kernel queue
+(producer–consumer, single-threaded preemptive in hardware; cooperative here):
+
+  * **Kernel Decoder** — runs in the "interrupt handler" when the bridge
+    latches an offload: O(1) kernel-library lookup by func5, preamble
+    (validation + destination shape inference), hazard check with
+    logical-matrix renaming, AT registration, queue push.
+  * **Kernel Scheduler** — pops ready kernels (dependency DAG), selects the
+    VPU with the fewest dirty cache lines, drives the Matrix Allocator, runs
+    the kernel, and decides whether to defer the destination write-back
+    (kept resident if a queued kernel will read it).
+  * **Matrix Allocator** — acquires the cache lock, claims vector registers,
+    programs 2D DMA transfers (memory→VPU with kernel-chosen layout;
+    VPU→memory consolidation on write-back), releases lock and AT regions.
+
+Phase cycle/time accounting (preamble / allocation / compute / writeback)
+feeds the Fig. 3 reproduction benchmark directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+from repro.core.address_table import AddressTable, RegionKind
+from repro.core.cache import ArcaneCache, MainMemory
+from repro.core.encoding import ElemWidth, Offload, NUM_MATRIX_REGS
+from repro.core.hazards import DependencyTracker, KernelDeps
+from repro.core.isa import KernelError, KernelLibrary, KernelSpec, default_library
+from repro.core.matrix import MatrixBinding, MatrixMap
+from repro.core.vpu import VPU, VPUGeometry, ResidentMatrix
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    """Modeled cycles and wall-clock per C-RT phase (Fig. 3 axes)."""
+
+    preamble_cycles: int = 0
+    allocation_cycles: int = 0
+    compute_cycles: int = 0
+    writeback_cycles: int = 0
+    preamble_s: float = 0.0
+    allocation_s: float = 0.0
+    compute_s: float = 0.0
+    writeback_s: float = 0.0
+    kernels_run: int = 0
+
+    @property
+    def total_cycles(self) -> int:
+        return (self.preamble_cycles + self.allocation_cycles
+                + self.compute_cycles + self.writeback_cycles)
+
+    def shares(self) -> dict[str, float]:
+        t = max(self.total_cycles, 1)
+        return {
+            "preamble": self.preamble_cycles / t,
+            "allocation": self.allocation_cycles / t,
+            "compute": self.compute_cycles / t,
+            "writeback": self.writeback_cycles / t,
+        }
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, type(getattr(self, f.name))())
+
+
+@dataclasses.dataclass
+class QueuedKernel:
+    deps: KernelDeps
+    spec: KernelSpec
+    src_bindings: tuple[MatrixBinding, ...]
+    dst_binding: MatrixBinding
+
+
+class CacheRuntime:
+    """The C-RT instance owning one ARCANE LLC."""
+
+    def __init__(
+        self,
+        memory: Optional[MainMemory] = None,
+        *,
+        n_vpus: int = 4,
+        vregs_per_vpu: int = 32,
+        vlen_bytes: int = 1024,
+        lanes: int = 4,
+        queue_capacity: int = 16,
+        library: Optional[KernelLibrary] = None,
+        num_matrix_regs: int = NUM_MATRIX_REGS,
+    ):
+        self.memory = memory or MainMemory(16 << 20)
+        self.cache = ArcaneCache(self.memory, n_vpus=n_vpus,
+                                 vregs_per_vpu=vregs_per_vpu,
+                                 vlen_bytes=vlen_bytes)
+        self.geometry = VPUGeometry(lanes=lanes)
+        self.library = library or default_library()
+        self.vpus = [VPU(i, self.cache, self.geometry, self.library)
+                     for i in range(n_vpus)]
+        self.matrix_map = MatrixMap(num_matrix_regs)
+        self.at = AddressTable(capacity=4 * queue_capacity)
+        self.tracker = DependencyTracker()
+        self.queue_capacity = queue_capacity
+        self.queue: deque[QueuedKernel] = deque()
+        self.resident: dict[int, ResidentMatrix] = {}   # phys_id -> residency
+        self.stats = PhaseStats()
+
+    # ================================================================ decoder
+    def decode(self, off: Offload) -> None:
+        """Kernel Decoder: software-decode one offloaded instruction."""
+        t0 = time.perf_counter()
+        instr = off.instr
+        ops = off.operands
+        if instr.is_xmr:
+            # xmr: pure metadata — bind (rename) the logical register.
+            self.matrix_map.reserve(
+                logical=ops.xmr_md,
+                addr=ops.xmr_addr,
+                rows=ops.xmr_rows,
+                cols=ops.xmr_cols,
+                stride=self._xmr_stride(ops),
+                width=instr.width,
+            )
+            self.stats.preamble_cycles += self.geometry.decode_cycles // 4
+            self.stats.preamble_s += time.perf_counter() - t0
+            return
+
+        if len(self.queue) >= self.queue_capacity:
+            # Static queue full: drain before accepting (backpressure).
+            self.run_pending()
+
+        kdef = self.library.lookup(instr.func5)
+        srcs = [self.matrix_map.lookup(m)
+                for m in (ops.ms1, ops.ms2, ops.ms3)[: kdef.n_sources]]
+        params = {"alpha": ops.alpha, "beta": ops.beta}
+        if instr.func5 == 2:  # maxpool packs stride/win in rs1 (Table I)
+            params = {"stride": ops.hi1, "win_size": ops.lo1}
+        dst_shape, cost = kdef.preamble([s.shape for s in srcs], params, instr.width)
+
+        dst_prev = self.matrix_map.lookup(ops.md)
+        # Destination keeps its reservation's memory footprint but gets shape
+        # from the preamble (effective dims allocation, §IV-B3).
+        if dst_shape[0] * dst_shape[1] * instr.width.nbytes > \
+           dst_prev.rows * dst_prev.cols * dst_prev.elem_bytes:
+            raise KernelError(
+                f"{kdef.name}: result {dst_shape} exceeds m{ops.md} reservation")
+        dst = self.matrix_map.reserve(
+            logical=ops.md, addr=dst_prev.addr, rows=dst_shape[0],
+            cols=dst_shape[1], stride=max(dst_prev.stride, dst_shape[1]),
+            width=instr.width,
+        )
+
+        spec = KernelSpec(func5=instr.func5, name=kdef.name, width=instr.width,
+                          src_shapes=tuple(s.shape for s in srcs),
+                          dst_shape=dst_shape, params=params, cost=cost)
+        deps = self.tracker.admit(srcs, dst)
+        for s in srcs:
+            self.at.register(s.start, s.end, RegionKind.SRC, s.phys_id)
+        self.at.register(dst.start, dst.end, RegionKind.DST, dst.phys_id)
+        self.queue.append(QueuedKernel(deps=deps, spec=spec,
+                                       src_bindings=tuple(srcs), dst_binding=dst))
+        self.stats.preamble_cycles += self.geometry.decode_cycles
+        self.stats.preamble_s += time.perf_counter() - t0
+
+    @staticmethod
+    def _xmr_stride(ops) -> int:
+        # Table I: A.stride is in elements; 0 means dense (stride = cols).
+        return ops.xmr_stride if ops.xmr_stride >= ops.xmr_cols else ops.xmr_cols
+
+    # ============================================================== scheduler
+    def _select_vpu(self, needed_lines: int) -> int:
+        """Fewest-dirty-lines policy (§IV-B2) among VPUs with capacity."""
+        best, best_key = -1, None
+        for v in range(self.cache.n_vpus):
+            free = sum(1 for i in self.cache.vpu_lines(v)
+                       if not self.cache.lines[i].busy_computing)
+            if free < needed_lines:
+                continue
+            key = (self.cache.dirty_line_count(v), -free)
+            if best_key is None or key < best_key:
+                best, best_key = v, key
+        if best < 0:
+            raise RuntimeError("no VPU has capacity for the kernel operands")
+        return best
+
+    def run_pending(self) -> None:
+        """Drain the kernel queue respecting the dependency DAG."""
+        progress = True
+        while self.queue and progress:
+            progress = False
+            for _ in range(len(self.queue)):
+                qk = self.queue.popleft()
+                if self.tracker.ready(qk.deps.kernel_id):
+                    self._run_one(qk)
+                    progress = True
+                else:
+                    self.queue.append(qk)
+
+    def _run_one(self, qk: QueuedKernel) -> None:
+        t0 = time.perf_counter()
+        spec, srcs, dst = qk.spec, qk.src_bindings, qk.dst_binding
+        total_lines = sum(
+            self.vpus[0].lines_needed(*s.shape, s.width) for s in srcs
+        ) + self.vpus[0].lines_needed(*dst.shape, dst.width)
+        # Prefer a VPU where an operand is already resident (avoids a spill).
+        vpu_idx = None
+        for s in srcs:
+            r = self.resident.get(s.phys_id)
+            if r is not None:
+                vpu_idx = r.vpu
+                break
+        if vpu_idx is None:
+            vpu_idx = self._select_vpu(total_lines)
+        vpu = self.vpus[vpu_idx]
+
+        # -------------------------------------------------- allocation phase
+        if not self.cache.acquire_lock():
+            raise RuntimeError("cache lock already held")
+        try:
+            src_res = []
+            for s in srcs:
+                src_res.append(self._allocate_source(vpu, s))
+                self.at.mark_allocated(s.phys_id)
+            dst_res = self._allocate_destination(vpu, dst)
+        finally:
+            self.cache.release_lock()
+        self.stats.allocation_cycles += self.geometry.schedule_cycles
+        self.stats.allocation_s += time.perf_counter() - t0
+
+        # ----------------------------------------------------- compute phase
+        t1 = time.perf_counter()
+        cycles = vpu.execute(spec, src_res, dst_res)
+        self.stats.compute_cycles += cycles
+        self.stats.compute_s += time.perf_counter() - t1
+
+        # --------------------------------------------------- writeback phase
+        t2 = time.perf_counter()
+        self.tracker.complete(qk.deps.kernel_id)
+        for s, r in zip(srcs, src_res):
+            self.at.release(s.phys_id, RegionKind.SRC)
+            if not r.dirty and not self._needed_later(s.phys_id):
+                self._evict_resident(s.phys_id)
+        if self._needed_later(dst.phys_id):
+            # Deferred write-back: destination stays resident for the consumer.
+            self.resident[dst.phys_id] = dst_res
+        else:
+            self._writeback_resident(dst, dst_res)
+            self.at.release(dst.phys_id, RegionKind.DST)
+        self.stats.writeback_s += time.perf_counter() - t2
+        self.stats.kernels_run += 1
+
+    def _needed_later(self, phys_id: int) -> bool:
+        return any(phys_id in qk.deps.sources for qk in self.queue)
+
+    # ============================================================== allocator
+    def _claim(self, vpu: VPU, b: MatrixBinding) -> ResidentMatrix:
+        n = vpu.lines_needed(b.rows, b.cols, b.width)
+        idxs = self.cache.claim_vregs(vpu.index, n)
+        res = ResidentMatrix(phys_id=b.phys_id, vpu=vpu.index, line_idxs=idxs,
+                             rows=b.rows, cols=b.cols, width=b.width)
+        self.resident[b.phys_id] = res
+        return res
+
+    def _allocate_source(self, vpu: VPU, b: MatrixBinding) -> ResidentMatrix:
+        res = self.resident.get(b.phys_id)
+        if res is not None:
+            if res.vpu != vpu.index:
+                # Deferred result lives on another VPU: consolidate through
+                # memory, then load here (cross-VPU move).
+                self._writeback_resident(b, res)
+                res = None
+            else:
+                return res
+        res = self._claim(vpu, b)
+        nbytes = self.cache.dma_in_2d(
+            vpu.index, res.line_idxs, b.addr, b.rows, b.row_bytes, b.stride_bytes)
+        self.stats.allocation_cycles += self.geometry.dma_cycles(nbytes, b.rows)
+        return res
+
+    def _allocate_destination(self, vpu: VPU, b: MatrixBinding) -> ResidentMatrix:
+        res = self.resident.get(b.phys_id)
+        if res is not None and res.vpu == vpu.index and \
+           (res.rows, res.cols) == (b.rows, b.cols):
+            return res
+        if res is not None:
+            self._evict_resident(b.phys_id)
+        # Destinations are allocated with effective dims; no memory fetch is
+        # needed (the kernel overwrites every element — fetch-on-write applies
+        # only to the write-back path’s partial lines, handled by dma_out_2d).
+        return self._claim(vpu, b)
+
+    def _writeback_resident(self, b: MatrixBinding, res: ResidentMatrix) -> None:
+        if res.dirty:
+            nbytes = self.cache.dma_out_2d(
+                res.vpu, res.line_idxs, b.addr, b.rows, b.row_bytes,
+                b.stride_bytes)
+            self.stats.writeback_cycles += self.geometry.dma_cycles(nbytes, b.rows)
+        self._evict_resident(b.phys_id)
+
+    def _evict_resident(self, phys_id: int) -> None:
+        res = self.resident.pop(phys_id, None)
+        if res is not None:
+            self.cache.release_vregs(res.line_idxs)
+
+    # ================================================================= barrier
+    def barrier(self) -> None:
+        """Drain all queued kernels and write back all deferred results."""
+        self.run_pending()
+        if self.queue:
+            raise RuntimeError("kernel queue not drained — dependency deadlock?")
+        for phys_id in list(self.resident):
+            res = self.resident[phys_id]
+            if res.dirty:
+                b = self._binding_of(phys_id)
+                self._writeback_resident(b, res)
+                self.at.release(phys_id, RegionKind.DST)
+            else:
+                self._evict_resident(phys_id)
+
+    def _binding_of(self, phys_id: int) -> MatrixBinding:
+        for b in self.matrix_map.live_bindings():
+            if b.phys_id == phys_id:
+                return b
+        raise KeyError(f"physical binding {phys_id} not live")
+
+    # ============================================================== host path
+    def host_load(self, addr: int, n: int):
+        """Host CPU load with AT hazard check (RAW on kernel destinations)."""
+        if self.at.blocks_load(addr, addr + n):
+            self.barrier()          # stall-until-writeback, then serve
+        return self.cache.host_read(addr, n)
+
+    def host_store(self, addr: int, buf) -> None:
+        """Host CPU store with AT hazard check (WAR on sources, WAW on dsts)."""
+        if self.at.blocks_store(addr, addr + len(buf)):
+            self.barrier()
+        self.cache.host_write(addr, buf)

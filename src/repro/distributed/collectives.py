@@ -1,0 +1,68 @@
+"""shard_map data-parallel driver with compressed gradient all-reduce.
+
+The pjit path reduces gradients implicitly (XLA inserts the all-reduce /
+reduce-scatter). This explicit driver exists for the paper-style
+distributed-optimisation tricks that need *manual* collectives:
+
+  * int8 gradient all-reduce with error feedback (4× wire bytes reduction,
+    `optim/compression.py`),
+  * per-shard optimizer update on replicated params (each replica applies
+    the identical update — ZeRO-0 with compressed comms).
+
+Used by tests (8 host devices) and available to the train launcher via
+``--dp-driver shardmap``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.compression import tree_compressed_psum
+
+PyTree = Any
+
+
+def make_compressed_dp_step(model, opt_cfg: AdamWConfig, mesh: Mesh,
+                            *, compress: bool = True, axis: str = "data"):
+    """Returns jitted (params, opt_state, err, batch) -> (params, opt, err, m).
+
+    params/opt replicated; batch sharded on ``axis``; gradients all-reduced
+    in int8 with error feedback when ``compress``.
+    """
+
+    def step(params, opt_state, err, batch):
+        def inner(params, opt_state, err, batch):
+            (loss, _), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            if compress:
+                grads, err = tree_compressed_psum(grads, axis, err)
+            else:
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, axis), grads)
+            new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state,
+                                                   params)
+            loss = jax.lax.pmean(loss, axis)
+            return new_params, new_opt, err, {"loss": loss, **om}
+
+        batch_spec = jax.tree.map(lambda _: P(axis), batch)
+        rep = jax.tree.map(lambda _: P(), params)
+        rep_opt = jax.tree.map(lambda _: P(), opt_state)
+        rep_err = jax.tree.map(lambda _: P(), err)
+        fn = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(rep, rep_opt, rep_err, batch_spec),
+            out_specs=(rep, rep_opt, rep_err, P()),
+            check_vma=False,
+        )
+        return fn(params, opt_state, err, batch)
+
+    return jax.jit(step)
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,85 @@
+"""Pipeline parallelism: GPipe-style microbatch pipeline over a mesh axis.
+
+Implemented with ``shard_map`` + ``lax.ppermute`` (the jax-native equivalent
+of the paper's dispatcher forwarding work between VPUs): each device on the
+``stage`` axis owns one stage's parameters; activations flow stage→stage+1
+each tick; with M microbatches and S stages the schedule runs M+S-1 ticks at
+bubble fraction (S-1)/(M+S-1).
+
+This module provides the forward pipeline used by depth-dominant serving and
+a loss-pipeline wrapper for training experiments; the main train path uses
+DP×TP×EP sharding (see distributed/sharding.py) — PP composes on the "pod"
+axis for cross-pod depth partitioning where interconnect is thinnest.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def pipeline_forward(
+    stage_fn: Callable[[PyTree, jax.Array], jax.Array],
+    stage_params: PyTree,
+    x: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "stage",
+    n_micro: int,
+) -> jax.Array:
+    """Run ``y = stage_{S-1}(... stage_0(x))`` as a microbatch pipeline.
+
+    stage_params: leaves with leading dim S (one slice per stage).
+    x: (batch, ...) with batch % n_micro == 0.
+    """
+    n_stages = mesh.shape[axis]
+
+    def body(params_local, xs_local):
+        # params_local: this stage's params (leading dim consumed by shard_map)
+        params_local = jax.tree.map(lambda p: p[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        micro = xs_local.reshape(n_micro, xs_local.shape[0] // n_micro,
+                                 *xs_local.shape[1:])
+        ticks = n_micro + n_stages - 1
+        buf = jnp.zeros_like(micro[0])
+        out = jnp.zeros_like(micro)
+
+        def tick(t, carry):
+            buf, out = carry
+            # stage 0 injects microbatch t (if in range); others use received
+            inject = jax.lax.dynamic_index_in_dim(
+                micro, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            x_in = jnp.where(stage == 0, inject, buf)
+            y = stage_fn(params_local, x_in)
+            # pass activations down the pipe
+            buf_next = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+            # last stage collects microbatch t-(S-1)
+            slot = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            collect = jnp.logical_and(stage == n_stages - 1,
+                                      t >= n_stages - 1)
+            out = jnp.where(
+                collect,
+                jax.lax.dynamic_update_index_in_dim(
+                    out, y, slot, 0),
+                out)
+            return buf_next, out
+
+        buf, out = jax.lax.fori_loop(0, ticks, tick, (buf, out))
+        # broadcast result from the last stage to all (psum of one-hot)
+        mine = jnp.where(stage == n_stages - 1, 1.0, 0.0)
+        out = jax.lax.psum(out * mine.astype(out.dtype), axis)
+        return out.reshape(xs_local.shape)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,   # carry becomes stage-varying after ppermute
+    )
+    return fn(stage_params, x)

@@ -1,0 +1,54 @@
+"""Shared helpers for the Pallas kernel suite.
+
+All kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and
+are validated on CPU in interpret mode. ``interpret_default()`` picks the mode
+from the runtime backend so the same code path runs in both worlds; the
+``REPRO_PALLAS_INTERPRET`` env var forces it either way.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e hardware geometry the BlockSpecs are designed against.
+MXU_DIM = 128          # systolic array is 128x128
+VPU_LANES = 128        # vector unit lane count (8 sublanes x 128 lanes)
+VMEM_BYTES = 128 * 2**20   # ~128 MiB of VMEM per core
+HBM_BW = 819e9         # bytes/s
+PEAK_BF16 = 197e12     # FLOP/s
+ICI_BW = 50e9          # bytes/s/link
+
+
+@functools.cache
+def interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pad_to(x: jax.Array, shape: tuple[int, ...], value=0) -> jax.Array:
+    """Zero-pad trailing edges of ``x`` up to ``shape``."""
+    pads = [(0, t - s) for s, t in zip(x.shape, shape)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def acc_dtype(dtype) -> jnp.dtype:
+    """Accumulator type: int32 for integer datapaths, f32 otherwise (MXU)."""
+    return jnp.int32 if jnp.issubdtype(jnp.dtype(dtype), jnp.integer) else jnp.float32
+
+
+NEG_INF = float(-1e30)   # mask value that survives bf16 rounding

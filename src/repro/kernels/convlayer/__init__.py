@@ -1,0 +1,1 @@
+from repro.kernels.convlayer.ops import *  # noqa: F401,F403

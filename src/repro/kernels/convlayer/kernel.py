@@ -1,0 +1,121 @@
+"""xmk4 — fused 3-channel Conv-Layer Pallas kernel (conv → maxpool2×2 → ReLU).
+
+The paper's showcase complex instruction: an entire CNN layer executed as ONE
+offloaded instruction on cache-resident data. TPU adaptation (DESIGN.md §2):
+the whole fusion runs inside a single ``pallas_call`` so the convolution
+accumulator and the pooling intermediate never leave VMEM — the exact analogue
+of never leaving the ARCANE LLC.
+
+Layout: input (C, H, W), filters (F, C, KH, KW), output (F, H', W') with
+H' = (H-KH+1)//2 (valid conv, 2×2/2 maxpool). The convolution is computed as
+KH·KW shifted element-wise multiply-accumulates — a direct transcription of
+the NM-Carus vector micro-program (per-row vector MACs), which on TPU maps to
+full-width VPU lanes rather than an im2col GEMM; for the small filters the
+instruction targets (3–7), shifted MACs beat im2col because no operand
+duplication is materialised.
+
+Grid: one program per output row-band per filter. The input band slice is
+re-fetched per filter (cheap: it stays HBM→VMEM streamed), the accumulator is
+a VMEM scratch of one band.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import acc_dtype, interpret_default
+
+
+def _convlayer_kernel(x_ref, f_ref, o_ref, acc_ref, *, kh: int, kw: int,
+                      negative_slope: float, out_h: int, out_w: int):
+    """One (filter, row-band) program: conv rows [2*r0, 2*r0+2*bh+kh-1)."""
+    conv_h = 2 * o_ref.shape[1]           # conv rows pooled into this band
+    conv_w = 2 * out_w
+    x = x_ref[...]                        # (C, band_in_h, W)
+    f = f_ref[...]                        # (1, C, kh, kw) — this filter
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for di in range(kh):
+        for dj in range(kw):
+            # (C, conv_h, conv_w) shifted window, MAC over channels.
+            window = jax.lax.dynamic_slice(
+                x, (0, di, dj), (x.shape[0], conv_h, conv_w))
+            coef = f[0, :, di, dj][:, None, None].astype(acc_ref.dtype)
+            acc_ref[...] += jnp.sum(window.astype(acc_ref.dtype) * coef, axis=0)
+    acc = acc_ref[...]
+    pooled = acc.reshape(o_ref.shape[1], 2, out_w, 2).max(axis=(1, 3))
+    zero = jnp.zeros((), pooled.dtype)
+    slope = jnp.asarray(negative_slope, jnp.float32)
+    act = jnp.where(pooled >= zero, pooled,
+                    (slope * pooled.astype(jnp.float32)).astype(pooled.dtype)
+                    if not jnp.issubdtype(pooled.dtype, jnp.integer)
+                    else jnp.round(slope * pooled.astype(jnp.float32)).astype(pooled.dtype))
+    o_ref[0, ...] = act.astype(o_ref.dtype)
+
+
+def conv_layer_pallas(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    negative_slope: float = 0.0,
+    block_rows: int = 32,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused conv(valid) + maxpool(2×2/2) + LeakyReLU.
+
+    x: (C, H, W); f: (F, C, KH, KW) → (F, (H-KH+1)//2, (W-KW+1)//2).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    cch, h, w = x.shape
+    nf, cf, kh, kw = f.shape
+    assert cch == cf, (x.shape, f.shape)
+    conv_h, conv_w = h - kh + 1, w - kw + 1
+    out_h, out_w = conv_h // 2, conv_w // 2
+    assert out_h > 0 and out_w > 0, "input smaller than pool window"
+    acc = acc_dtype(x.dtype)
+    if out_dtype is None:
+        out_dtype = x.dtype
+
+    bh = min(block_rows, out_h)
+    # pad out_h to band multiple; input rows needed per band: 2*bh + kh - 1
+    n_bands = -(-out_h // bh)
+    padded_out_h = n_bands * bh
+    in_band = 2 * bh + kh - 1
+    # pad x rows so the last band's slice stays in range
+    needed_h = 2 * padded_out_h + kh - 1
+    if needed_h > h:
+        x = jnp.pad(x, ((0, 0), (0, needed_h - h), (0, 0)))
+
+    kernel = functools.partial(
+        _convlayer_kernel, kh=kh, kw=kw, negative_slope=negative_slope,
+        out_h=out_h, out_w=out_w)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(nf, n_bands),
+        in_specs=[
+            # Overlapping input band (element indexing): all channels, rows
+            # [2*r*bh, 2*r*bh + in_band), all cols. pl.Element lets the band
+            # stride (2*bh) differ from the band height (2*bh + kh - 1).
+            pl.BlockSpec(
+                (pl.Element(cch), pl.Element(in_band), pl.Element(w)),
+                lambda fi, r: (0, r * 2 * bh, 0),
+            ),
+            # one filter
+            pl.BlockSpec((1, cch, kh, kw), lambda fi, r: (fi, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, out_w), lambda fi, r: (fi, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((nf, padded_out_h, out_w), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bh * 2, out_w * 2), acc)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, f)
+    return out[:, :out_h, :]

@@ -1,0 +1,37 @@
+"""Jitted wrapper for the xmk4 fused conv layer."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.convlayer.kernel import conv_layer_pallas
+from repro.kernels.convlayer.ref import conv_layer_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("negative_slope", "block_rows", "out_dtype", "backend",
+                     "interpret"),
+)
+def conv_layer(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    negative_slope: float = 0.0,
+    block_rows: int = 32,
+    out_dtype=None,
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused conv(valid)+maxpool(2×2/2)+LeakyReLU — the xmk4 instruction.
+
+    x: (C, H, W); f: (F, C, KH, KW) → (F, (H-KH+1)//2, (W-KW+1)//2).
+    """
+    if backend == "ref":
+        return conv_layer_ref(x, f, negative_slope=negative_slope,
+                              out_dtype=out_dtype)
+    return conv_layer_pallas(x, f, negative_slope=negative_slope,
+                             block_rows=block_rows, out_dtype=out_dtype,
+                             interpret=interpret)

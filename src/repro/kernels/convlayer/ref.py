@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the xmk4 fused conv layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import acc_dtype
+
+
+def conv_layer_ref(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    negative_slope: float = 0.0,
+    out_dtype=None,
+) -> jax.Array:
+    """conv(valid) → maxpool 2×2/2 → LeakyReLU; x (C,H,W), f (F,C,KH,KW)."""
+    cch, h, w = x.shape
+    nf, cf, kh, kw = f.shape
+    assert cch == cf
+    acc = acc_dtype(x.dtype)
+    if out_dtype is None:
+        out_dtype = x.dtype
+    conv_h, conv_w = h - kh + 1, w - kw + 1
+    out = jnp.zeros((nf, conv_h, conv_w), acc)
+    xl = x.astype(acc)
+    fl = f.astype(acc)
+    for di in range(kh):
+        for dj in range(kw):
+            window = xl[:, di : di + conv_h, dj : dj + conv_w]
+            # (F, C, 1, 1) * (1, C, H', W') summed over C
+            out = out + jnp.einsum("chw,fc->fhw", window, fl[:, :, di, dj])
+    ph, pw = conv_h // 2, conv_w // 2
+    pooled = out[:, : ph * 2, : pw * 2].reshape(nf, ph, 2, pw, 2).max(axis=(2, 4))
+    neg = negative_slope * pooled.astype(jnp.float32)
+    if jnp.issubdtype(jnp.dtype(out_dtype), jnp.integer):
+        # Two's-complement truncation on register write-back (wrap, not
+        # saturate) — go through int32 so the narrowing cast wraps like the
+        # kernel's integer accumulator path does.
+        neg = jnp.round(neg)
+        act = jnp.where(pooled >= 0, pooled, neg.astype(acc))
+        return act.astype(jnp.int32).astype(out_dtype)
+    act = jnp.where(pooled >= 0, pooled.astype(jnp.float32), neg)
+    return act.astype(out_dtype)

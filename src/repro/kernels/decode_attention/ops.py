@@ -1,0 +1,46 @@
+"""Jitted wrapper for decode attention: head grouping + backend selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softcap", "scale", "window", "block_k", "backend", "interpret"),
+)
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    block_k: int = 512,
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One-token GQA decode over a KV cache.
+
+    q: (B, Hq, D); k, v: (B, Hkv, S, D); lengths: (B,) → (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    if backend == "ref":
+        out = decode_attention_ref(qg, k, v, lengths, softcap=softcap,
+                                   scale=scale, window=window)
+    else:
+        out = decode_attention_pallas(qg, k, v, lengths, softcap=softcap,
+                                      scale=scale, window=window,
+                                      block_k=block_k, interpret=interpret)
+    return out.reshape(b, hq, d)

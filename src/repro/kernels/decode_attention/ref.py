@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """q: (B, Hkv, G, D); k, v: (B, Hkv, S, D); lengths: (B,) → (B, Hkv, G, D)."""
+    b, hkv, g, d = q.shape
+    s_len = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    cols = jnp.arange(s_len)[None, None, None, :]
+    ln = lengths.astype(jnp.int32)[:, None, None, None]
+    mask = cols < ln
+    if window is not None:
+        mask = jnp.logical_and(mask, cols >= jnp.maximum(ln - window, 0))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,153 @@
+"""Flash attention Pallas kernel (prefill/training path).
+
+The ARCANE principle applied to attention: score tiles, the online-softmax
+state (m, l) and the output accumulator live in VMEM scratch for the entire
+KV sweep — the S×S score matrix is never materialised in HBM. Supports:
+
+  * causal masking (decoder self-attention),
+  * sliding-window ("local") attention — gemma2's alternating local layers,
+  * logit soft-capping — gemma2,
+  * GQA: fewer KV heads than Q heads (the KV block index maps h → h // group),
+  * KV-length masking for padded caches / cross-attention.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks), kv innermost so the scratch
+carries across the sweep. Blocks that cannot contribute under the causal /
+window structure are skipped with ``pl.when`` (no MACs, the dominant saving
+for long sequences and small windows).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, interpret_default, round_up
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  nkv: int, bq: int, bk: int, scale: float,
+                  causal: bool, window: Optional[int],
+                  softcap: Optional[float], kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # --- structural block skip ------------------------------------------
+    needed = k_start < kv_len                       # not entirely padding
+    if causal:
+        needed = jnp.logical_and(needed, k_start <= q_start + bq - 1)
+    if window is not None:
+        # col must be > row - window for some (row, col) in the tile
+        needed = jnp.logical_and(needed, k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)             # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window is not None:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)               # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    kv_len: Optional[int] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) → (B, Hq, Sq, D)."""
+    if interpret is None:
+        interpret = interpret_default()
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if kv_len is None:
+        kv_len = skv
+
+    bq = min(block_q, round_up(sq, 8))
+    bk = min(block_k, round_up(skv, 8))
+    sq_p, skv_p = round_up(sq, bq), round_up(skv, bk)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    nq, nkv = sq_p // bq, skv_p // bk
+
+    kernel = functools.partial(
+        _flash_kernel, nkv=nkv, bq=bq, bk=bk, scale=scale, causal=causal,
+        window=window, softcap=softcap, kv_len=kv_len)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ik: (bb, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, iq, ik, g=group: (bb, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, iq, ik, g=group: (bb, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ik: (bb, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

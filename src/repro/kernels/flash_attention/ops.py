@@ -1,0 +1,44 @@
+"""Jitted wrapper for flash attention with backend selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import (attention_chunked_ref,
+                                               attention_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "kv_len",
+                     "block_q", "block_k", "backend", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    kv_len: Optional[int] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) → (B, Hq, Sq, D)."""
+    if backend == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale, kv_len=kv_len)
+    if backend == "chunked":
+        return attention_chunked_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_len=kv_len, chunk=block_k)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        kv_len=kv_len, block_q=block_q, block_k=block_k, interpret=interpret)

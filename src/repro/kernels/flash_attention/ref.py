@@ -1,0 +1,120 @@
+"""Oracles for flash attention.
+
+``attention_ref`` — naive O(S²)-memory reference (small-shape tests only).
+``attention_chunked_ref`` — blocked online-softmax in pure jnp (lax.scan over
+KV chunks). Numerically the flash algorithm itself; serves as (a) a second
+oracle and (b) the production fallback on backends without Pallas (the CPU
+dry-run lowers this one, keeping HLO buffers chunk-sized instead of S²).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def _mask(scores, q_offset, k_offset, kv_len, causal, window):
+    sq, sk = scores.shape[-2], scores.shape[-1]
+    rows = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+    cols = k_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    m = cols < kv_len
+    if causal:
+        m = jnp.logical_and(m, cols <= rows)
+    if window is not None:
+        m = jnp.logical_and(m, cols > rows - window)
+    return jnp.where(m, scores, NEG_INF)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    softcap: Optional[float] = None, scale: Optional[float] = None,
+    kv_len: Optional[int] = None,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if kv_len is None:
+        kv_len = skv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = _mask(s, 0, 0, kv_len, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    softcap: Optional[float] = None, scale: Optional[float] = None,
+    kv_len: Optional[int] = None, chunk: int = 1024,
+) -> jax.Array:
+    """Blocked online-softmax attention in pure jnp; memory O(Sq · chunk)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if kv_len is None:
+        kv_len = skv
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nkv = k.shape[2] // chunk
+    kc = k.reshape(b, hkv, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    # GQA without materialising the head repeat (a repeat across a
+    # model-sharded head dim all-gathers the whole K/V — §Perf iteration 4):
+    # q is viewed as (B, Hkv, group, Sq, D) and contracted against the
+    # un-broadcast (B, Hkv, chunk, D).
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, sq, d)
+
+    def body(carry, xs):
+        acc, m_prev, l_prev = carry
+        idx, kb, vb = xs
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_off = idx * chunk
+        rows = jax.lax.broadcasted_iota(jnp.int32, (sq, chunk), 0)
+        cols = k_off + jax.lax.broadcasted_iota(jnp.int32, (sq, chunk), 1)
+        msk = cols < kv_len
+        if causal:
+            msk = jnp.logical_and(msk, cols <= rows)
+        if window is not None:
+            msk = jnp.logical_and(msk, cols > rows - window)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+        return (acc_new, m_new, l_new), None
+
+    init = (
+        jnp.zeros((b, hkv, group, sq, d), jnp.float32),
+        jnp.full((b, hkv, group, sq, 1), NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, group, sq, 1), jnp.float32),
+    )
+    (acc, _, l), _ = jax.lax.scan(
+        body, init, (jnp.arange(nkv), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

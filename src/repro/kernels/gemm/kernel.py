@@ -1,0 +1,108 @@
+"""xmk0 — GeMM Pallas kernel: D = alpha * (A @ B) + beta * C.
+
+TPU mapping of ARCANE's flagship complex instruction. The VMEM residency
+discipline the paper implements with cache-line vector registers appears here
+as the accumulator scratch: each (bm, bn) output tile lives in VMEM across the
+whole K-reduction (grid's innermost axis), so partial products never round-trip
+to HBM, and the optional beta*C epilogue is fused into the final flush — one
+instruction, one residency, exactly the xmk0 contract.
+
+Block shapes default to MXU-aligned (128, 128, 128); int8 inputs accumulate in
+int32 (the MXU's native int path), floats in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import acc_dtype, interpret_default
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, alpha, beta,
+                 has_c: bool, c_ref=None):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out = acc_ref[...]
+        if alpha != 1.0:
+            out = (alpha * out.astype(jnp.float32))
+        if has_c:
+            out = out.astype(jnp.float32) + beta * c_ref[...].astype(jnp.float32)
+        if jnp.issubdtype(o_ref.dtype, jnp.integer):
+            out = jnp.round(out.astype(jnp.float32)) if (alpha != 1.0 or has_c) else out
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def gemm_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Raw tiled kernel; dims must already be multiples of the block shape."""
+    if interpret is None:
+        interpret = interpret_default()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"gemm_pallas requires padded dims, got {(m, k, n)} with blocks "
+        f"{(block_m, block_k, block_n)}")
+    acc = acc_dtype(jnp.result_type(a.dtype, b.dtype))
+    if out_dtype is None:
+        out_dtype = acc if acc == jnp.int32 else a.dtype
+    nk = k // block_k
+    has_c = c is not None
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [a, b]
+    if has_c:
+        in_specs.append(pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)))
+        operands.append(c)
+
+    def kernel(*refs):
+        if has_c:
+            a_ref, b_ref, c_ref, o_ref, acc_ref = refs
+        else:
+            a_ref, b_ref, o_ref, acc_ref = refs
+            c_ref = None
+        _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, nk=nk, alpha=alpha,
+                     beta=beta, has_c=has_c, c_ref=c_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), acc)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,49 @@
+"""Jitted public wrapper for xmk0 GeMM: padding, backend selection, batching."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, round_up
+from repro.kernels.gemm.kernel import gemm_pallas
+from repro.kernels.gemm.ref import gemm_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "beta", "block_m", "block_n", "block_k",
+                     "out_dtype", "backend", "interpret"),
+)
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """D = alpha * (A @ B) + beta * C, shapes (m, k) x (k, n) [+ (m, n)]."""
+    if backend == "ref":
+        return gemm_ref(a, b, c, alpha=alpha, beta=beta, out_dtype=out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(block_m, round_up(m, 8))
+    bn = min(block_n, round_up(n, 128))
+    bk = min(block_k, round_up(k, 128))
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    ap = pad_to(a, (mp, kp))
+    bp = pad_to(b, (kp, np_))
+    cp = pad_to(c, (mp, np_)) if c is not None else None
+    out = gemm_pallas(ap, bp, cp, alpha=alpha, beta=beta, block_m=bm,
+                      block_n=bn, block_k=bk, out_dtype=out_dtype,
+                      interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the xmk0 GeMM kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import acc_dtype
+
+
+def gemm_ref(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    out_dtype=None,
+) -> jax.Array:
+    acc = acc_dtype(jnp.result_type(a.dtype, b.dtype))
+    if out_dtype is None:
+        out_dtype = acc if acc == jnp.int32 else a.dtype
+    out = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=acc
+    )
+    scaled = alpha != 1.0 or c is not None
+    if alpha != 1.0:
+        out = alpha * out.astype(jnp.float32)
+    if c is not None:
+        out = out.astype(jnp.float32) + beta * c.astype(jnp.float32)
+    if jnp.issubdtype(jnp.dtype(out_dtype), jnp.integer) and scaled:
+        out = jnp.round(out)
+    return out.astype(out_dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.leakyrelu.ops import *  # noqa: F401,F403

@@ -1,0 +1,47 @@
+"""xmk1 — LeakyReLU Pallas kernel (element-wise VPU micro-program)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default, pad_to, round_up
+
+
+def _leakyrelu_kernel(x_ref, o_ref, *, negative_slope: float):
+    x = x_ref[...]
+    neg = negative_slope * x.astype(jnp.float32)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        neg = jnp.round(neg)
+    o_ref[...] = jnp.where(x >= 0, x, neg.astype(x.dtype))
+
+
+def leakyrelu_pallas(
+    x: jax.Array,
+    *,
+    negative_slope: float = 0.01,
+    block: tuple[int, int] = (256, 256),
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    m, n = x.shape
+    bm = min(block[0], round_up(m, 8))
+    bn = min(block[1], round_up(n, 128))
+    mp, np_ = round_up(m, bm), round_up(n, bn)
+    xp = pad_to(x, (mp, np_))
+    out = pl.pallas_call(
+        functools.partial(_leakyrelu_kernel, negative_slope=negative_slope),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xp)
+    return out[:m, :n]

@@ -1,0 +1,26 @@
+"""Jitted wrapper for xmk1 LeakyReLU."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.leakyrelu.kernel import leakyrelu_pallas
+from repro.kernels.leakyrelu.ref import leakyrelu_ref
+
+
+@functools.partial(jax.jit, static_argnames=("negative_slope", "block",
+                                             "backend", "interpret"))
+def leakyrelu(
+    x: jax.Array,
+    *,
+    negative_slope: float = 0.01,
+    block: tuple[int, int] = (256, 256),
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if backend == "ref":
+        return leakyrelu_ref(x, negative_slope=negative_slope)
+    return leakyrelu_pallas(x, negative_slope=negative_slope, block=block,
+                            interpret=interpret)

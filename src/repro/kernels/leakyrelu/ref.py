@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for xmk1 LeakyReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def leakyrelu_ref(x: jax.Array, *, negative_slope: float = 0.01) -> jax.Array:
+    neg = negative_slope * x.astype(jnp.float32)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        neg = jnp.round(neg)
+    return jnp.where(x >= 0, x, neg.astype(x.dtype))

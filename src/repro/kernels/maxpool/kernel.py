@@ -1,0 +1,65 @@
+"""xmk2 — MaxPool Pallas kernel (window, stride configurable)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+
+def _maxpool_kernel(x_ref, o_ref, *, win: int, stride: int, out_w: int):
+    x = x_ref[...]
+    bh = o_ref.shape[0]
+    acc = None
+    for di in range(win):
+        for dj in range(win):
+            sl = jax.lax.slice(
+                x, (di, dj),
+                (di + (bh - 1) * stride + 1, dj + (out_w - 1) * stride + 1),
+                (stride, stride))
+            acc = sl if acc is None else jnp.maximum(acc, sl)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def maxpool_pallas(
+    x: jax.Array,
+    *,
+    win: int = 2,
+    stride: Optional[int] = None,
+    block_rows: int = 64,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Max pooling over (H, W) with square window; x: (H, W)."""
+    if interpret is None:
+        interpret = interpret_default()
+    stride = stride or win
+    h, w = x.shape
+    out_h = (h - win) // stride + 1
+    out_w = (w - win) // stride + 1
+    bh = min(block_rows, out_h)
+    n_bands = -(-out_h // bh)
+    in_band = (bh - 1) * stride + win
+    needed_h = ((n_bands - 1) * bh + bh - 1) * stride + win
+    if needed_h > h:
+        pad = jnp.full((needed_h - h, w), jnp.iinfo(x.dtype).min
+                       if jnp.issubdtype(x.dtype, jnp.integer)
+                       else -jnp.inf, x.dtype)
+        x = jnp.concatenate([x, pad], axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_maxpool_kernel, win=win, stride=stride, out_w=out_w),
+        grid=(n_bands,),
+        in_specs=[pl.BlockSpec((pl.Element(in_band), pl.Element(w)),
+                               lambda r: (r * bh * stride, 0))],
+        out_specs=pl.BlockSpec((bh, out_w), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_bands * bh, out_w), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+    return out[:out_h]

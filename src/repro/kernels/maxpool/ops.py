@@ -1,0 +1,27 @@
+"""Jitted wrapper for xmk2 MaxPool."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.maxpool.kernel import maxpool_pallas
+from repro.kernels.maxpool.ref import maxpool_ref
+
+
+@functools.partial(jax.jit, static_argnames=("win", "stride", "block_rows",
+                                             "backend", "interpret"))
+def maxpool(
+    x: jax.Array,
+    *,
+    win: int = 2,
+    stride: Optional[int] = None,
+    block_rows: int = 64,
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if backend == "ref":
+        return maxpool_ref(x, win=win, stride=stride)
+    return maxpool_pallas(x, win=win, stride=stride, block_rows=block_rows,
+                          interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for xmk2 MaxPool."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def maxpool_ref(x: jax.Array, *, win: int = 2, stride: Optional[int] = None) -> jax.Array:
+    stride = stride or win
+    h, w = x.shape
+    out_h = (h - win) // stride + 1
+    out_w = (w - win) // stride + 1
+    acc = None
+    for di in range(win):
+        for dj in range(win):
+            sl = jax.lax.slice(
+                x, (di, dj),
+                (di + (out_h - 1) * stride + 1, dj + (out_w - 1) * stride + 1),
+                (stride, stride))
+            acc = sl if acc is None else jnp.maximum(acc, sl)
+    return acc

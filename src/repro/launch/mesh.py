@@ -1,0 +1,26 @@
+"""Production mesh factory (TPU v5e pods; host-device placeholders on CPU).
+
+``make_production_mesh`` is a function — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS for 512 host devices *before*
+importing anything (see dryrun.py); everything else sees the real topology.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

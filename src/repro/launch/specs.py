@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs`` returns the exact argument pytrees the lowered step function
+takes — weak-type-correct, shardable, zero allocation. Modality frontends are
+stubs per the assignment: whisper gets precomputed frame embeddings, internvl
+gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get_config
+from repro.configs.base import ModelConfig
+from repro.models.transformer import LM
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+PyTree = Any
+
+# Archs whose size requires ZeRO-3/FSDP param sharding on the 256-chip pod.
+FSDP_ARCHS = {"llama4-scout-17b-a16e", "gemma2-9b", "qwen2.5-32b",
+              "jamba-1.5-large-398b"}
+# Archs where optimizer moments drop to bf16 to fit HBM (noted in EXPERIMENTS).
+BF16_MOMENT_ARCHS = {"jamba-1.5-large-398b", "llama4-scout-17b-a16e"}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def opt_config_for(arch: str) -> AdamWConfig:
+    if arch in BF16_MOMENT_ARCHS:
+        return AdamWConfig(moment_dtype="bfloat16", master_dtype="float32")
+    return AdamWConfig()
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        # the vision prefix counts toward the context length: text tokens
+        # fill the remainder so prefill exactly fits the seq_len cache
+        s_tok = s - cfg.vision_prefix
+        batch = {"tokens": sds((b, s_tok), jnp.int32)}
+        if cfg.vision_prefix:
+            batch["vision_embeds"] = sds((b, cfg.vision_prefix, cfg.d_model),
+                                         cfg.cdtype)
+        if cfg.enc_dec:
+            batch["audio_embeds"] = sds((b, s, cfg.d_model), cfg.cdtype)
+        return batch
+    # decode shapes: one new token against a seq_len cache
+    return {"tokens": sds((b,), jnp.int32),
+            "position": sds((b,), jnp.int32)}
+
+
+def state_specs(model: LM, arch: str) -> tuple[PyTree, PyTree]:
+    """(params, opt_state) as ShapeDtypeStructs via eval_shape."""
+    params = model.param_shapes()
+    opt_cfg = opt_config_for(arch)
+    opt = jax.eval_shape(lambda p: adamw_init(opt_cfg, p), params)
+    return params, opt
+
+
+def cache_specs(model: LM, cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    enc_len = shape.seq_len if cfg.enc_dec else 0
+    return model.cache_shapes(shape.global_batch, shape.seq_len,
+                              dtype=cfg.cdtype, enc_len=enc_len)
+
+
+def input_specs(arch: str, shape: ShapeConfig, model: LM) -> dict:
+    """Everything the step function consumes, as ShapeDtypeStructs."""
+    cfg = model.cfg
+    params, opt = state_specs(model, arch)
+    out = {"params": params}
+    if shape.kind == "train":
+        out["opt_state"] = opt
+        out["batch"] = batch_specs(cfg, shape)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs(cfg, shape)
+        out["cache"] = cache_specs(model, cfg, shape)
+    else:  # decode / long_decode
+        out["batch"] = batch_specs(cfg, shape)
+        out["cache"] = cache_specs(model, cfg, shape)
+    return out

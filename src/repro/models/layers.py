@@ -1,0 +1,139 @@
+"""Foundational layers: norms, embeddings, rotary embeddings, dense dispatch.
+
+All matrix multiplies flow through the ArcaneEngine (xmk0 dispatch) so the
+paper's execution discipline is uniform across every architecture.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ArcaneEngine
+
+
+def truncated_normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterisation: zeros-init == identity
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- dense
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: Optional[float] = None) -> dict:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    p = {"w": truncated_normal_init(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(engine: ArcaneEngine, params: dict, x: jax.Array) -> jax.Array:
+    """xmk0 dispatch: out = x @ W (+ b, fused as the beta*C epilogue)."""
+    b = params.get("b")
+    if b is None:
+        return engine.gemm(x, params["w"])
+    c = jnp.broadcast_to(b, (*x.shape[:-1], b.shape[-1]))
+    return engine.gemm(x, params["w"], c, alpha=1.0, beta=1.0)
+
+
+# ------------------------------------------------------------- embeddings
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": truncated_normal_init(key, (vocab, d), dtype, 0.02)}
+
+
+def embed(params: dict, tokens: jax.Array, *, scale: bool = False) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        out = out * math.sqrt(out.shape[-1])
+    return out
+
+
+def unembed(engine: ArcaneEngine, params: dict, x: jax.Array,
+            *, softcap: Optional[float] = None) -> jax.Array:
+    logits = engine.gemm(x, params["table"].T, out_dtype=jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0,
+                     fraction: float = 1.0) -> jax.Array:
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                            / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta=theta, fraction=fraction)
+    rot = 2 * freqs.shape[0]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # B,1,S,rot/2
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass.astype(out.dtype)], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embeddings: (max_len, d)."""
+    return sinusoidal_at(jnp.arange(max_len), d)
+
+
+def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding rows for arbitrary positions: (*pos.shape, d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    args = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]

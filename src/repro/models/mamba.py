@@ -1,0 +1,149 @@
+"""Mamba (S6 selective-state-space) block — Jamba's sequence mixer.
+
+The SSM recurrence is the purest instance of the paper's principle in the LM
+stack: the state (d_inner × d_state per channel) is a *resident* operand that
+every token updates in place — compute lives where the state lives, nothing
+is re-fetched. Training uses a chunked scan: `lax.scan` over chunks (state
+materialised only at chunk boundaries, chunk body rematerialised in the
+backward pass) with an associative scan inside the chunk.
+
+Decode carries (conv_state, ssm_state) per layer — O(1) per token, which is
+why Jamba is a `long_500k` architecture.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import ArcaneEngine
+from repro.models.layers import dense, dense_init, truncated_normal_init
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    mb = cfg.mamba
+    d = cfg.d_model
+    di = mb.expand * d
+    dtr = _dt_rank(cfg)
+    dt = cfg.pdtype
+    keys = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias init for softplus ∈ [1e-3, 0.1]
+    a = jnp.broadcast_to(jnp.arange(1, mb.d_state + 1, dtype=jnp.float32),
+                         (di, mb.d_state))
+    dt_init = jnp.exp(jax.random.uniform(keys[4], (di,), jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * di, dt),
+        "conv_w": truncated_normal_init(keys[1], (mb.d_conv, di), dt, 0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(keys[2], di, dtr + 2 * mb.d_state, dt),
+        "dt_proj": dense_init(keys[3], dtr, di, dt,
+                              scale=dtr ** -0.5, bias=False),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[5], di, d, dt),
+    }
+
+
+def _ssm_inputs(engine, params, cfg, xz):
+    """Common path: split, conv, and the selective (dt, B, C) projections."""
+    mb = cfg.mamba
+    di = mb.expand * cfg.d_model
+    dtr = _dt_rank(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z, dtr, di
+
+
+def _selective_terms(engine, params, cfg, x_conv):
+    """x_conv: (B, L, di) → decay a, input contribution b, readout C, skip."""
+    mb = cfg.mamba
+    dtr = _dt_rank(cfg)
+    proj = dense(engine, params["x_proj"], x_conv)
+    dt_lat, bmat, cmat = jnp.split(
+        proj, [dtr, dtr + mb.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dense(engine, params["dt_proj"], dt_lat).astype(jnp.float32)
+        + params["dt_bias"])                                   # (B,L,di)
+    a_cont = -jnp.exp(params["A_log"])                          # (di, ds)
+    decay = jnp.exp(dt[..., None] * a_cont)                     # (B,L,di,ds)
+    contrib = (dt * x_conv.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]                # (B,L,di,ds)
+    return decay, contrib, cmat.astype(jnp.float32)
+
+
+def _causal_conv(params, x, conv_state=None):
+    """Depthwise causal conv along L. x: (B, L, di)."""
+    w = params["conv_w"].astype(jnp.float32)                    # (K, di)
+    kk = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if conv_state is not None:
+        xf = jnp.concatenate([conv_state, xf], axis=1)
+    else:
+        xf = jnp.pad(xf, ((0, 0), (kk - 1, 0), (0, 0)))
+    out = sum(w[i] * xf[:, i : i + x.shape[1]] for i in range(kk))
+    return (out + params["conv_b"].astype(jnp.float32)), xf[:, -(kk - 1):]
+
+
+def mamba_forward(engine: ArcaneEngine, params: dict, cfg: ModelConfig,
+                  x: jax.Array, h0=None) -> jax.Array:
+    """Training/prefill forward; x: (B, S, d)."""
+    mb = cfg.mamba
+    b, s, _ = x.shape
+    xz = dense(engine, params["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    x_conv, _ = _causal_conv(params, xi)
+    x_conv = jax.nn.silu(x_conv).astype(x.dtype)
+    decay, contrib, cmat = _selective_terms(engine, params, cfg, x_conv)
+
+    chunk = min(mb.chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nchunks = s // chunk
+
+    def chunk_body(h, xs):
+        dec_c, con_c, cm_c = xs                                # (B,L,di,ds)...
+        # associative scan within the chunk: (a, b) ∘ (a', b') = (aa', a'b+b')
+        def combine(l, r):
+            return l[0] * r[0], l[1] * r[0] + r[1]
+        a_acc, b_acc = jax.lax.associative_scan(
+            combine, (dec_c, con_c), axis=1)
+        hs = a_acc * h[:, None] + b_acc                        # (B,L,di,ds)
+        y = jnp.einsum("blds,bls->bld", hs, cm_c)
+        return hs[:, -1], y
+
+    decay = decay.reshape(b, nchunks, chunk, *decay.shape[2:]).swapaxes(0, 1)
+    contrib = contrib.reshape(b, nchunks, chunk, *contrib.shape[2:]).swapaxes(0, 1)
+    cmr = cmat.reshape(b, nchunks, chunk, -1).swapaxes(0, 1)
+    init = h0 if h0 is not None else jnp.zeros(
+        (b, decay.shape[3], mb.d_state), jnp.float32)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_body), init,
+                              (decay, contrib, cmr))
+    y = ys.swapaxes(0, 1).reshape(b, s, -1)
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return dense(engine, params["out_proj"], y), h_last
+
+
+def mamba_decode(engine: ArcaneEngine, params: dict, cfg: ModelConfig,
+                 x: jax.Array, conv_state: jax.Array, ssm_state: jax.Array):
+    """One-token step. x: (B, d); conv_state: (B, K-1, di);
+    ssm_state: (B, di, ds)."""
+    mb = cfg.mamba
+    b, _ = x.shape
+    xz = dense(engine, params["in_proj"], x[:, None, :])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(params, xi, conv_state)
+    x_conv = jax.nn.silu(x_conv).astype(x.dtype)                # (B,1,di)
+    decay, contrib, cmat = _selective_terms(engine, params, cfg, x_conv)
+    h = decay[:, 0] * ssm_state + contrib[:, 0]                 # (B,di,ds)
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])
+    y = y + params["D"] * x_conv[:, 0].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z[:, 0])
+    return dense(engine, params["out_proj"], y), conv_state, h

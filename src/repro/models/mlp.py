@@ -1,0 +1,37 @@
+"""Gated (SwiGLU) and classic 2-layer MLPs — all GeMMs via xmk0 dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import ArcaneEngine
+from repro.distributed.sharding import constrain
+from repro.models.layers import activation, dense, dense_init
+
+
+def mlp_init(key, cfg: ModelConfig, *, d_ff: int = 0) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = cfg.pdtype
+    if cfg.act == "gelu" and cfg.enc_dec:
+        # whisper-style classic 2-layer MLP
+        k1, k2 = jax.random.split(key)
+        return {"up": dense_init(k1, d, ff, dt, bias=True),
+                "down": dense_init(k2, ff, d, dt, bias=True)}
+    kg, ku, kd = jax.random.split(key, 3)
+    return {"gate": dense_init(kg, d, ff, dt),
+            "up": dense_init(ku, d, ff, dt),
+            "down": dense_init(kd, ff, d, dt)}
+
+
+def mlp(engine: ArcaneEngine, params: dict, cfg: ModelConfig,
+        x: jax.Array) -> jax.Array:
+    act = activation(cfg.act)
+    if "gate" not in params:
+        h = act(dense(engine, params["up"], x))
+        h = constrain(h, "batch", None, "model")
+        return dense(engine, params["down"], h)
+    g = act(dense(engine, params["gate"], x))
+    u = dense(engine, params["up"], x)
+    h = constrain(g * u, "batch", None, "model")
+    return dense(engine, params["down"], h)

@@ -1,0 +1,162 @@
+"""RWKV-6 ("Finch") block — attention-free time mixing with data-dependent decay.
+
+Per head (size N): state S ∈ R^{N×N} evolves as
+
+    S_t[j, :] = w_t[j] · S_{t-1}[j, :] + k_t[j] · v_t[:]
+    y_t[:]    = Σ_j r_t[j] · (S_{t-1}[j, :] + u[j] · k_t[j] · v_t[:])
+
+with the v6 signature feature: the decay w_t is *data-dependent* through a
+low-rank MLP (w0 + tanh(x_w A) B). Token-shift mixing uses static lerp
+coefficients (the full ddlerp of the reference implementation is a second
+low-rank mix; simplification noted in DESIGN.md — the state-space semantics
+and decay data-dependence are preserved).
+
+Like Mamba, the resident-state update is the near-memory pattern: O(1) state
+per token, no KV cache — the reason rwkv6 runs the 500k-decode shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import ArcaneEngine
+from repro.models.layers import dense, dense_init, truncated_normal_init
+
+
+def rwkv_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    n_heads = d // r.head_size
+    dt = cfg.pdtype
+    keys = jax.random.split(key, 10)
+    return {
+        # time-mix lerp coefficients for r, k, v, g, w
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "r": dense_init(keys[0], d, d, dt),
+        "k": dense_init(keys[1], d, d, dt),
+        "v": dense_init(keys[2], d, d, dt),
+        "g": dense_init(keys[3], d, d, dt),
+        "o": dense_init(keys[4], d, d, dt),
+        # data-dependent decay lora: w = w0 + tanh(x_w @ A) @ B
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),
+        "wA": truncated_normal_init(keys[5], (d, r.decay_lora), dt, 0.02),
+        "wB": truncated_normal_init(keys[6], (r.decay_lora, d), dt, 0.02),
+        "u": truncated_normal_init(keys[7], (d,), jnp.float32, 0.5),
+        "ln_scale": jnp.ones((n_heads, r.head_size), jnp.float32),
+        # channel mixing
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "cm_k": dense_init(keys[8], d, cfg.d_ff, dt),
+        "cm_v": dense_init(keys[9], cfg.d_ff, d, dt),
+        "cm_r": dense_init(jax.random.fold_in(key, 11), d, d, dt),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / carried `last` for t = 0)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _wkv_terms(engine, params, cfg, x, prev):
+    """Projections for the wkv scan. x, prev: (B, L, d)."""
+    r = cfg.rwkv
+    n = r.head_size
+    b, s, d = x.shape
+    h = d // n
+    mu = params["mu"]
+    xr = _mix(x, prev, mu[0]); xk = _mix(x, prev, mu[1])
+    xv = _mix(x, prev, mu[2]); xg = _mix(x, prev, mu[3])
+    xw = _mix(x, prev, mu[4])
+    rr = dense(engine, params["r"], xr).reshape(b, s, h, n)
+    kk = dense(engine, params["k"], xk).reshape(b, s, h, n)
+    vv = dense(engine, params["v"], xv).reshape(b, s, h, n)
+    gg = jax.nn.silu(dense(engine, params["g"], xg))
+    w_lat = jnp.tanh(engine.gemm(xw, params["wA"]))
+    w = params["w0"] + engine.gemm(w_lat, params["wB"]).astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(w)).reshape(b, s, h, n)            # (0,1)
+    return rr.astype(jnp.float32), kk.astype(jnp.float32), \
+        vv.astype(jnp.float32), gg, decay
+
+
+def _groupnorm(params, y):
+    """Per-head layer norm of the wkv output. y: (B, L, H, N)."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + 64e-5) * params["ln_scale"]
+
+
+def rwkv_time_mix(engine: ArcaneEngine, params: dict, cfg: ModelConfig,
+                  x: jax.Array, state=None, last_x=None):
+    """x: (B, S, d) → (out, final_state, final_x). Chunked scan over time."""
+    r = cfg.rwkv
+    n = r.head_size
+    b, s, d = x.shape
+    h = d // n
+    prev = _shift(x, last_x)
+    rr, kk, vv, gg, decay = _wkv_terms(engine, params, cfg, x, prev)
+    u = params["u"].reshape(h, n)
+
+    chunk = min(r.chunk, s)
+    assert s % chunk == 0
+    nchunks = s // chunk
+
+    def chunk_body(S, xs):
+        rc, kc, vc, wc = xs                                     # (B,L,H,N)
+
+        def step(Sh, ts):
+            rt, kt, vt, wt = ts                                  # (B,H,N)
+            kv = kt[..., :, None] * vt[..., None, :]             # (B,H,N,N)
+            yt = jnp.einsum("bhj,bhjn->bhn", rt, Sh + u[..., None] * kv)
+            Sh = wt[..., None] * Sh + kv
+            return Sh, yt
+
+        S, ys = jax.lax.scan(step, S,
+                             (rc.swapaxes(0, 1), kc.swapaxes(0, 1),
+                              vc.swapaxes(0, 1), wc.swapaxes(0, 1)))
+        return S, ys.swapaxes(0, 1)                              # (B,L,H,N)
+
+    def to_chunks(t):
+        return t.reshape(b, nchunks, chunk, h, n).swapaxes(0, 1)
+
+    init = state if state is not None else jnp.zeros((b, h, n, n), jnp.float32)
+    S_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_body), init,
+        (to_chunks(rr), to_chunks(kk), to_chunks(vv), to_chunks(decay)))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, n)
+    y = _groupnorm(params, y).reshape(b, s, d).astype(x.dtype) * gg
+    return dense(engine, params["o"], y), S_last, x[:, -1]
+
+
+def rwkv_channel_mix(engine: ArcaneEngine, params: dict, cfg: ModelConfig,
+                     x: jax.Array, last_x=None):
+    prev = _shift(x, last_x)
+    mu = params["cm_mu"]
+    xk = _mix(x, prev, mu[0])
+    xr = _mix(x, prev, mu[1])
+    k = jnp.square(jax.nn.relu(dense(engine, params["cm_k"], xk)))
+    kv = dense(engine, params["cm_v"], k)
+    return jax.nn.sigmoid(dense(engine, params["cm_r"], xr)) * kv, x[:, -1]
+
+
+def rwkv_time_mix_decode(engine: ArcaneEngine, params: dict, cfg: ModelConfig,
+                         x: jax.Array, state: jax.Array, last_x: jax.Array):
+    """One-token time mix. x: (B, d); state: (B, H, N, N); last_x: (B, d)."""
+    r = cfg.rwkv
+    n = r.head_size
+    b, d = x.shape
+    h = d // n
+    rr, kk, vv, gg, decay = _wkv_terms(engine, params, cfg, x[:, None, :],
+                                       last_x[:, None, :])
+    u = params["u"].reshape(h, n)
+    rt, kt, vt, wt = rr[:, 0], kk[:, 0], vv[:, 0], decay[:, 0]
+    kv = kt[..., :, None] * vt[..., None, :]
+    yt = jnp.einsum("bhj,bhjn->bhn", rt, state + u[..., None] * kv)
+    state = wt[..., None] * state + kv
+    y = _groupnorm(params, yt[:, None]).reshape(b, 1, d).astype(x.dtype) * gg
+    return dense(engine, params["o"], y)[:, 0], state, x

@@ -1,0 +1,97 @@
+"""AdamW with f32 master weights, global-norm clipping and LR schedules.
+
+Hand-rolled (no optax dependency): state = {master, m, v, step}. The master
+copy lives in f32 even when live params are bf16 (mixed-precision training);
+set ``moment_dtype``/``master_dtype`` to bf16 to halve optimizer memory for
+HBM-limited configs (jamba-398B on a single pod — see EXPERIMENTS §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"
+    master_dtype: str = "float32"
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(cfg: AdamWConfig, params: PyTree) -> PyTree:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    sdt = jnp.dtype(cfg.master_dtype)
+    return {
+        # copy=True: a same-dtype astype would alias the param buffer and
+        # break donation (same buffer donated twice in the train step).
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, dtype=sdt, copy=True), params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: PyTree,
+                 params: PyTree) -> tuple[PyTree, PyTree, dict]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * g * g
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        mf = master.astype(jnp.float32)
+        mf = mf - lr * (update + cfg.weight_decay * mf)
+        return (m_new.astype(m.dtype), v_new.astype(v.dtype),
+                mf.astype(master.dtype))
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, ma)
+           for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), new_master, params)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

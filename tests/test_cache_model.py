@@ -1,0 +1,129 @@
+"""LLC functional model: coherence property tests against a flat-memory oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (ArcaneCache, CacheLocked, LineBusy, MainMemory,
+                              ResourceStall)
+
+MEM = 1 << 14
+VLEN = 256
+
+
+def make_cache(n_vpus=2, vregs=4, vlen=VLEN):
+    mem = MainMemory(MEM)
+    return ArcaneCache(mem, n_vpus=n_vpus, vregs_per_vpu=vregs,
+                       vlen_bytes=vlen), mem
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["read", "write", "flush"]),
+        st.integers(0, MEM - 64),
+        st.integers(1, 64),
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@given(ops=ops_strategy, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_cache_coherence_vs_flat_memory(ops, data):
+    """Any sequence of host reads/writes/flushes observes flat-memory
+    semantics — the fundamental cache invariant."""
+    cache, mem = make_cache()
+    oracle = np.zeros(MEM, dtype=np.uint8)
+    counter = 0
+    for kind, addr, n in ops:
+        if kind == "write":
+            counter += 1
+            buf = np.full(n, counter % 251, np.uint8)
+            cache.host_write(addr, buf)
+            oracle[addr : addr + n] = buf
+        elif kind == "read":
+            got = cache.host_read(addr, n)
+            np.testing.assert_array_equal(got, oracle[addr : addr + n])
+        else:
+            cache.flush_all()
+            np.testing.assert_array_equal(mem.data, oracle)
+    cache.flush_all()
+    np.testing.assert_array_equal(mem.data, oracle)
+
+
+def test_writeback_on_eviction():
+    cache, mem = make_cache(n_vpus=1, vregs=2)   # only 2 lines
+    cache.host_write(0, np.full(8, 7, np.uint8))
+    cache.host_write(VLEN, np.full(8, 8, np.uint8))
+    assert mem.data[0] == 0                      # still dirty in cache
+    cache.host_read(2 * VLEN, 8)                 # forces eviction
+    cache.host_read(3 * VLEN, 8)
+    assert mem.data[0] == 7 or mem.data[VLEN] == 8   # one was written back
+    cache.flush_all()
+    assert mem.data[0] == 7 and mem.data[VLEN] == 8
+
+
+def test_lru_victim_order():
+    cache, _ = make_cache(n_vpus=1, vregs=2)
+    cache.host_read(0, 4)          # line A
+    cache.host_read(VLEN, 4)       # line B
+    cache.host_read(0, 4)          # touch A → B is LRU
+    cache.host_read(2 * VLEN, 4)   # evicts B
+    assert cache.lookup(0) is not None
+    assert cache.lookup(VLEN) is None
+
+
+def test_lock_blocks_host():
+    cache, _ = make_cache()
+    assert cache.acquire_lock()
+    with pytest.raises(CacheLocked):
+        cache.host_read(0, 4)
+    assert not cache.acquire_lock()   # not granted twice
+    cache.release_lock()
+    cache.host_read(0, 4)
+
+
+def test_busy_computing_lines_stall_host_and_survive_eviction():
+    cache, _ = make_cache(n_vpus=1, vregs=2)
+    cache.host_read(0, 4)
+    idxs = cache.claim_vregs(0, 1)
+    with pytest.raises(ResourceStall):
+        cache.claim_vregs(0, 2)      # only 1 line left not busy
+    # a non-busy line can still be evicted; a miss with ALL lines busy stalls
+    idxs2 = cache.claim_vregs(0, 1)  # now both lines busy-computing
+    with pytest.raises(ResourceStall):
+        cache.host_read(5 * VLEN, 4)
+    cache.release_vregs(idxs + idxs2)
+    cache.host_read(5 * VLEN, 4)     # now fine
+
+
+def test_dma_2d_roundtrip():
+    cache, mem = make_cache()
+    rows, row_b, stride = 6, 24, 40
+    base = 512
+    src = np.arange(rows * stride, dtype=np.uint8)
+    cache.host_write(base, src)
+    idxs = cache.claim_vregs(0, 1)
+    moved = cache.dma_in_2d(0, idxs, base, rows, row_b, stride)
+    assert moved == rows * row_b
+    packed = cache._gather_from_lines(idxs, rows * row_b)
+    for r in range(rows):
+        np.testing.assert_array_equal(
+            packed[r * row_b : (r + 1) * row_b],
+            src[r * stride : r * stride + row_b])
+    # write back to a different region
+    out_base = 4096
+    cache.dma_out_2d(0, idxs, out_base, rows, row_b, stride)
+    cache.release_vregs(idxs)
+    got = cache.host_read(out_base, rows * stride)
+    for r in range(rows):
+        np.testing.assert_array_equal(
+            got[r * stride : r * stride + row_b],
+            src[r * stride : r * stride + row_b])
+
+
+def test_stats_hits_misses():
+    cache, _ = make_cache()
+    cache.host_read(0, 4)
+    assert cache.stats.misses == 1
+    cache.host_read(1, 4)
+    assert cache.stats.hits == 1

@@ -1,0 +1,111 @@
+"""Checkpoint manager + data pipeline: fault-tolerance invariants."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+
+
+def tree_eq(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32))
+
+
+def sample_tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.float32)},
+            "opt": {"m": jnp.zeros((3, 4), jnp.float32),
+                    "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = sample_tree()
+    mgr.save(5, tree, extra={"loss": 1.5})
+    assert mgr.latest_step() == 5
+    restored, extra = mgr.restore(5, jax.eval_shape(lambda: tree))
+    tree_eq(tree, restored)
+    assert extra["loss"] == 1.5
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = sample_tree()
+    mgr.save(1, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(1, jax.eval_shape(lambda: tree))
+    tree_eq(tree, restored)
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = sample_tree()
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    dirs = [d for d in os.listdir(tmp_path) if d.startswith("tmp_")]
+    assert dirs == []
+    assert mgr.latest_step() == 3
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = sample_tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_000000003", "step_000000004"]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore(1, jax.eval_shape(lambda: {"w": jnp.zeros((3, 3))}))
+
+
+# ------------------------------------------------------------------- data
+def test_data_determinism_and_resume():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=4)
+    a = SyntheticLM(cfg)
+    b = SyntheticLM(cfg)
+    np.testing.assert_array_equal(a.batch_at(17)["tokens"],
+                                  b.batch_at(17)["tokens"])
+    it = a.iterate(start_step=17)
+    np.testing.assert_array_equal(next(it)["tokens"],
+                                  b.batch_at(17)["tokens"])
+
+
+def test_data_process_sharding_disjoint():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8)
+    p0 = SyntheticLM(cfg, process_index=0, process_count=2)
+    p1 = SyntheticLM(cfg, process_index=1, process_count=2)
+    b0, b1 = p0.batch_at(3)["tokens"], p1.batch_at(3)["tokens"]
+    assert b0.shape == (4, 16) and b1.shape == (4, 16)
+    assert not np.array_equal(b0, b1)
+
+
+def test_data_has_learnable_structure():
+    """Repetition structure → unigram entropy < log(vocab)."""
+    cfg = DataConfig(vocab=50, seq_len=256, global_batch=8)
+    toks = SyntheticLM(cfg).batch_at(0)["tokens"]
+    counts = np.bincount(toks.reshape(-1), minlength=50) + 1e-9
+    p = counts / counts.sum()
+    ent = -(p * np.log(p)).sum()
+    assert ent < np.log(50) * 0.9
+
+
+def test_prefetcher_yields_and_stops():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+    pf = Prefetcher(SyntheticLM(cfg), start_step=0)
+    b0 = next(pf)
+    b1 = next(pf)
+    assert b0["tokens"].shape == (2, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    pf.close()

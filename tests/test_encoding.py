@@ -1,0 +1,68 @@
+"""xmnmc instruction encoding: bit-exact round-trips + properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (ElemWidth, IllegalInstruction, InstrWord,
+                                 Offload, Operands, OPCODE_CUSTOM2,
+                                 XMR_FUNC5, encode_xmk, encode_xmr)
+
+
+def test_opcode_is_custom2():
+    w = InstrWord(func5=0, width=ElemWidth.W).encode()
+    assert w & 0x7F == 0x5B
+
+
+def test_mnemonics():
+    assert encode_xmr(ElemWidth.W, 0, 0, 0, 4, 4).instr.mnemonic == "xmr.w"
+    assert encode_xmk(0, ElemWidth.B, md=1).instr.mnemonic == "xmk0.b"
+    assert encode_xmk(4, ElemWidth.H, md=1).instr.mnemonic == "xmk4.h"
+
+
+@given(func5=st.integers(0, 31),
+       width=st.sampled_from(list(ElemWidth)),
+       rs1=st.integers(0, 31), rs2=st.integers(0, 31), rd=st.integers(0, 31))
+def test_word_roundtrip(func5, width, rs1, rs2, rd):
+    w = InstrWord(func5=func5, width=width, rs1=rs1, rs2=rs2, rd=rd)
+    assert InstrWord.decode(w.encode()) == w
+
+
+@given(addr=st.integers(0, 0xFFFFFFFF), stride=st.integers(0, 0xFFFF),
+       md=st.integers(0, 31), cols=st.integers(1, 0xFFFF),
+       rows=st.integers(1, 0xFFFF))
+def test_xmr_operand_roundtrip(addr, stride, md, cols, rows):
+    off = encode_xmr(ElemWidth.W, addr, stride, md, cols, rows)
+    ops = off.operands
+    assert ops.xmr_addr == addr
+    assert ops.xmr_stride == stride
+    assert ops.xmr_md == md
+    assert ops.xmr_cols == cols
+    assert ops.xmr_rows == rows
+    assert off.instr.is_xmr
+
+
+@given(md=st.integers(0, 31), ms1=st.integers(0, 31), ms2=st.integers(0, 31),
+       ms3=st.integers(0, 31), alpha=st.integers(0, 0xFFFF),
+       beta=st.integers(0, 0xFFFF))
+def test_xmk_operand_roundtrip(md, ms1, ms2, ms3, alpha, beta):
+    off = encode_xmk(0, ElemWidth.H, md, ms1, ms2, ms3, alpha, beta)
+    ops = off.operands
+    assert (ops.md, ops.ms1, ops.ms2, ops.ms3) == (md, ms1, ms2, ms3)
+    assert (ops.alpha, ops.beta) == (alpha, beta)
+
+
+def test_illegal_instructions():
+    with pytest.raises(IllegalInstruction):
+        InstrWord.decode(0x33)            # wrong major opcode
+    with pytest.raises(IllegalInstruction):
+        # wrong fmt sub-space
+        InstrWord.decode((0 << 27) | (0b01 << 25) | OPCODE_CUSTOM2)
+    with pytest.raises(IllegalInstruction):
+        # invalid width suffix (funct3 = 5)
+        InstrWord.decode((0b10 << 25) | (5 << 12) | OPCODE_CUSTOM2)
+
+
+def test_xmk_index_bounds():
+    with pytest.raises(ValueError):
+        encode_xmk(31, ElemWidth.W, md=0)   # 31 is reserved for xmr
+    with pytest.raises(ValueError):
+        encode_xmr(ElemWidth.W, 0, 0, 32, 1, 1)  # md out of range

@@ -1,0 +1,147 @@
+"""Per-arch smoke tests (deliverable f) + the golden incremental-decode test."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.core.engine import ArcaneEngine
+from repro.models.transformer import LM
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+ENGINE = ArcaneEngine(backend="ref")
+
+
+def make_batch(cfg, rng, b=2, s=32, dtype=None):
+    batch = {"tokens": jnp.array(rng.integers(0, cfg.vocab, (b, s)))}
+    dt = dtype or cfg.cdtype
+    if cfg.vision_prefix:
+        batch["vision_embeds"] = jnp.array(
+            rng.standard_normal((b, cfg.vision_prefix, cfg.d_model)), dt)
+    if cfg.enc_dec:
+        batch["audio_embeds"] = jnp.array(
+            rng.standard_normal((b, s, cfg.d_model)), dt)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch, rng):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    model = LM(cfg, ENGINE)
+    params = model.init_params(jax.random.key(0))
+    batch = make_batch(cfg, rng)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    opt_cfg = AdamWConfig(total_steps=10, warmup_steps=2)
+    opt = adamw_init(opt_cfg, params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_golden_incremental_decode(arch, rng):
+    """Prefill + token-by-token decode must match the parallel forward."""
+    cfg = get_smoke_config(arch)
+    repl = dict(param_dtype="float32", compute_dtype="float32")
+    if cfg.moe is not None:   # avoid capacity-drop divergence between paths
+        repl["moe"] = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    cfg = dataclasses.replace(cfg, **repl)
+    model = LM(cfg, ENGINE)
+    params = model.init_params(jax.random.key(1))
+    B, S = 2, 16
+    toks = jnp.array(rng.integers(0, cfg.vocab, (B, S)))
+    batch = make_batch(cfg, rng, B, S, dtype=jnp.float32)
+    batch["tokens"] = toks
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+    P = S - 4
+    off = cfg.vision_prefix
+    pb = dict(batch)
+    pb["tokens"] = toks[:, :P]
+    enc = S if cfg.enc_dec else 0
+    cache = model.init_cache(B, 64, dtype=jnp.float32, enc_len=enc)
+    lg, cache = jax.jit(model.prefill)(params, pb, cache)
+    errs = [float(jnp.max(jnp.abs(lg - logits_full[:, P - 1])))]
+    step = jax.jit(lambda p, t, po, c: model.decode_step(p, t, po, c,
+                                                         enc_len=enc))
+    for i in range(P, S):
+        pos = jnp.full((B,), off + i, jnp.int32)
+        lg, cache = step(params, toks[:, i], pos, cache)
+        if i < S - 1:
+            errs.append(float(jnp.max(jnp.abs(lg - logits_full[:, i]))))
+    assert max(errs) < 2e-3, f"{arch}: {errs}"
+
+
+def test_full_configs_param_counts():
+    """Full (non-smoke) configs expose sane analytic parameter counts."""
+    expect = {
+        "granite-moe-1b-a400m": (1.0e9, 1.7e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "stablelm-3b": (2.5e9, 3.8e9),
+        "gemma2-9b": (8.0e9, 11e9),
+        "minicpm3-4b": (3.4e9, 5.0e9),
+        "qwen2.5-32b": (30e9, 36e9),
+        "internvl2-1b": (0.4e9, 1.2e9),
+        "jamba-1.5-large-398b": (330e9, 440e9),
+        "rwkv6-1.6b": (1.3e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_moe_active_lt_total():
+    for arch in ("granite-moe-1b-a400m", "llama4-scout-17b-a16e",
+                 "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_engine_trace_records_xmnmc_words(rng):
+    eng = ArcaneEngine(backend="ref", record=True)
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = LM(cfg, eng)
+    params = model.init_params(jax.random.key(0))
+    batch = {"tokens": jnp.array(rng.integers(0, cfg.vocab, (1, 8)))}
+    model.forward(params, batch)   # trace eagerly
+    assert len(eng.trace) > 0
+    mnems = {t.mnemonic for t in eng.trace}
+    assert any(m.startswith("xmk0") for m in mnems)   # GeMM dispatches
+    for t in eng.trace:
+        assert t.word & 0x7F == 0x5B                  # all Custom-2
+
+
+def test_ring_decode_matches_forward(rng):
+    """Ring-buffer local KV cache (§Perf iteration 5) must be decode-exact."""
+    cfg = get_smoke_config("gemma2-9b")
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32",
+                              ring_local_cache=True, local_window=8)
+    model = LM(cfg, ENGINE)
+    params = model.init_params(jax.random.key(1))
+    B, S = 2, 24
+    toks = jnp.array(rng.integers(0, cfg.vocab, (B, S)))
+    logits_full, _ = jax.jit(model.forward)(params, {"tokens": toks})
+    P = S - 8
+    cache = model.init_cache(B, 64, dtype=jnp.float32)
+    assert cache[0]["k"].shape[3] == 8      # local layer ring is window-sized
+    lg, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :P]}, cache)
+    errs = [float(jnp.max(jnp.abs(lg - logits_full[:, P - 1])))]
+    step = jax.jit(model.decode_step)
+    for i in range(P, S):
+        pos = jnp.full((B,), i, jnp.int32)
+        lg, cache = step(params, toks[:, i], pos, cache)
+        if i < S - 1:
+            errs.append(float(jnp.max(jnp.abs(lg - logits_full[:, i]))))
+    assert max(errs) < 2e-3, errs

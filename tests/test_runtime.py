@@ -1,0 +1,159 @@
+"""C-RT end-to-end: offload → decode → schedule → allocate → execute → WB."""
+import numpy as np
+import pytest
+
+from repro.core import (ArcaneCoprocessor, ElemWidth, KernelDef, KernelError,
+                        fx_encode)
+from repro.core.address_table import RegionKind
+
+
+def conv2_ref(x, f):
+    m, n = x.shape
+    km, kn = f.shape
+    out = np.zeros((m - km + 1, n - kn + 1), np.int64)
+    for i in range(km):
+        for j in range(kn):
+            out += f[i, j].astype(np.int64) * x[i:i + m - km + 1,
+                                                j:j + n - kn + 1]
+    return out
+
+
+@pytest.fixture
+def cop():
+    return ArcaneCoprocessor(n_vpus=4, vregs_per_vpu=16, vlen_bytes=512)
+
+
+def test_gemm_int32(cop, rng):
+    A = rng.integers(-9, 9, (12, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 10), dtype=np.int32)
+    C = rng.integers(-9, 9, (12, 10), dtype=np.int32)
+    aA, aB, aC = (cop.place(x, ElemWidth.W) for x in (A, B, C))
+    aD = cop.malloc(12 * 10 * 4)
+    cop._xmr_w(0, aA, 0, 12, 8)
+    cop._xmr_w(1, aB, 0, 8, 10)
+    cop._xmr_w(2, aC, 0, 12, 10)
+    cop._xmr_w(3, aD, 0, 12, 10)
+    cop._gemm_w(3, 0, 1, 2, alpha=1.0, beta=1.0)
+    cop.barrier()
+    D = cop.gather(aD, 12, 10, ElemWidth.W)
+    ref = (A.astype(np.int64) @ B.astype(np.int64) + C).astype(np.int32)
+    np.testing.assert_array_equal(D, ref)
+
+
+@pytest.mark.parametrize("width,np_dt", [(ElemWidth.B, np.int8),
+                                         (ElemWidth.H, np.int16),
+                                         (ElemWidth.W, np.int32)])
+def test_conv_layer_all_widths(cop, rng, width, np_dt):
+    H, W, K = 16, 16, 3
+    X = rng.integers(-5, 5, (3 * H, W)).astype(np_dt)
+    F = rng.integers(-3, 3, (3 * K, K)).astype(np_dt)
+    aX, aF = cop.place(X, width), cop.place(F, width)
+    om, on = (H - K + 1) // 2, (W - K + 1) // 2
+    aR = cop.malloc(om * on * width.nbytes)
+    cop._xmr(width, 4, aX, 0, 3 * H, W)
+    cop._xmr(width, 5, aF, 0, 3 * K, K)
+    cop._xmr(width, 6, aR, 0, om, on)
+    cop._conv_layer(width, 6, 4, 5)
+    cop.barrier()
+    R = cop.gather(aR, om, on, width)
+    acc = sum(conv2_ref(X[c * H:(c + 1) * H].astype(np.int64),
+                        F[c * K:(c + 1) * K].astype(np.int64))
+              for c in range(3))
+    pooled = acc[:om * 2, :on * 2].reshape(om, 2, on, 2).max(axis=(1, 3))
+    ref = np.maximum(pooled, 0).astype(np_dt)
+    np.testing.assert_array_equal(R, ref)
+
+
+def test_chained_kernels_deferred_writeback(cop, rng):
+    """gemm → leakyrelu chain: intermediate stays VPU-resident."""
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aT = cop.malloc(8 * 8 * 4)
+    aO = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aT, 0, 8, 8)
+    cop._xmr_w(2, aO, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0, alpha=1.0, beta=0.0)
+    cop._leakyrelu(ElemWidth.W, 2, 1, alpha=0.25)
+    cop.barrier()
+    O = cop.gather(aO, 8, 8, ElemWidth.W)
+    t = (A.astype(np.int64) @ A.astype(np.int64))
+    ref = np.where(t >= 0, t, np.round(0.25 * t)).astype(np.int32)
+    np.testing.assert_array_equal(O, ref)
+    assert cop.rt.stats.kernels_run == 2
+
+
+def test_raw_hazard_host_load_forces_completion(cop, rng):
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aD, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0, alpha=1.0, beta=0.0)
+    # no explicit barrier — the host load hits the AT and must stall+drain
+    D = cop.gather(aD, 8, 8, ElemWidth.W)
+    ref = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(D, ref)
+    assert cop.rt.at.blocks_load(aD, aD + 1) is None   # region released
+
+
+def test_war_hazard_host_store(cop, rng):
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aD, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)
+    # store to the source region: must not corrupt the queued kernel
+    cop.store(aA, np.zeros((8, 8), np.int32), ElemWidth.W)
+    cop.barrier()
+    D = cop.gather(aD, 8, 8, ElemWidth.W)
+    ref = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(D, ref)
+
+
+def test_preamble_rejects_bad_shapes(cop):
+    aA = cop.malloc(64)
+    cop._xmr_w(0, aA, 0, 4, 4)
+    cop._xmr_w(1, aA + 64, 0, 3, 4)
+    cop._xmr_w(2, aA + 128, 0, 4, 4)
+    with pytest.raises(KernelError):
+        cop._gemm_w(2, 0, 1, 0)     # inner dims 4 vs 3
+
+
+def test_software_isa_extension(cop, rng):
+    """Register a new xmk at runtime — the software-defined ISA property."""
+    def pre(shapes, params, width):
+        from repro.core.isa import KernelCost
+        (m, n) = shapes[0]
+        return (m, n), KernelCost(elementwise=m * n)
+
+    def body(sources, params, width):
+        return (sources[0].astype(np.int64) * 2).astype(sources[0].dtype)
+
+    cop.rt.library.register(KernelDef(7, "double", 1, pre, body))
+    A = rng.integers(-9, 9, (6, 6), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(6 * 6 * 4)
+    cop._xmr_w(0, aA, 0, 6, 6)
+    cop._xmr_w(1, aD, 0, 6, 6)
+    cop.xmk(7, ElemWidth.W, md=1, ms1=0)
+    cop.barrier()
+    np.testing.assert_array_equal(cop.gather(aD, 6, 6, ElemWidth.W), A * 2)
+
+
+def test_phase_stats_accumulate(cop, rng):
+    A = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aA, 0, 16, 16)
+    cop._xmr_w(1, aD, 0, 16, 16)
+    cop._gemm_w(1, 0, 0, 0)
+    cop.barrier()
+    s = cop.rt.stats
+    assert s.preamble_cycles > 0
+    assert s.allocation_cycles > 0
+    assert s.compute_cycles > 0
+    assert s.writeback_cycles > 0
+    shares = s.shares()
+    assert abs(sum(shares.values()) - 1.0) < 1e-9

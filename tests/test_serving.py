@@ -1,0 +1,73 @@
+"""Serving engine: greedy parity with manual decode + continuous batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.engine import ArcaneEngine
+from repro.models.transformer import LM
+from repro.serving.engine import ServeSession
+
+ENGINE = ArcaneEngine(backend="ref")
+
+
+def manual_greedy(model, params, prompt, n_new, max_len=128):
+    cache = model.init_cache(1, max_len)
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache)
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    step = jax.jit(model.decode_step)
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        lg, cache = step(params, jnp.asarray([toks[-1]], jnp.int32),
+                         jnp.asarray([pos], jnp.int32), cache)
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+        pos += 1
+    return toks
+
+
+def test_session_matches_manual_greedy(rng):
+    cfg = get_smoke_config("stablelm-3b")
+    model = LM(cfg, ENGINE)
+    params = model.init_params(jax.random.key(0))
+    prompts = [np.asarray(rng.integers(0, cfg.vocab, int(n)), np.int32)
+               for n in (5, 9, 13)]
+    expected = [manual_greedy(model, params, p, 6) for p in prompts]
+
+    sess = ServeSession(model, params, max_slots=2, max_len=128)
+    reqs = [sess.submit(p, max_new_tokens=6) for p in prompts]
+    sess.run_to_completion()
+    for req, exp in zip(reqs, expected):
+        assert req.out_tokens == exp, (req.out_tokens, exp)
+
+
+def test_continuous_batching_admits_when_slot_frees(rng):
+    cfg = get_smoke_config("stablelm-3b")
+    model = LM(cfg, ENGINE)
+    params = model.init_params(jax.random.key(0))
+    sess = ServeSession(model, params, max_slots=2, max_len=64)
+    for i in range(5):
+        sess.submit(rng.integers(0, cfg.vocab, 4), max_new_tokens=3)
+    done = sess.run_to_completion()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 3 for r in done)
+
+
+def test_ragged_lengths_isolated(rng):
+    """Slot contents must not leak across sequences: same prompt in slot 0
+    decodes identically regardless of the neighbour in slot 1."""
+    cfg = get_smoke_config("gemma2-9b")
+    model = LM(cfg, ENGINE)
+    params = model.init_params(jax.random.key(0))
+    p = np.asarray(rng.integers(0, cfg.vocab, 7), np.int32)
+    other1 = np.asarray(rng.integers(0, cfg.vocab, 3), np.int32)
+    other2 = np.asarray(rng.integers(0, cfg.vocab, 15), np.int32)
+
+    def run_with(other):
+        sess = ServeSession(model, params, max_slots=2, max_len=64)
+        r = sess.submit(p, max_new_tokens=5)
+        sess.submit(other, max_new_tokens=5)
+        sess.run_to_completion()
+        return r.out_tokens
+
+    assert run_with(other1) == run_with(other2)

@@ -1,0 +1,140 @@
+"""SSM scan correctness (chunk invariance, naive-ref parity) + MoE invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig, MoEConfig
+from repro.core.engine import ArcaneEngine
+from repro.models.mamba import mamba_forward, mamba_init
+from repro.models.moe import moe, moe_init
+from repro.models.rwkv6 import rwkv_init, rwkv_time_mix
+
+ENGINE = ArcaneEngine(backend="ref")
+
+
+def _mamba_cfg(chunk):
+    return ModelConfig(
+        name="m", family="ssm", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=64,
+        pattern=(LayerSpec(kind="mamba"),),
+        mamba=MambaConfig(d_state=4, d_conv=4, expand=2, chunk=chunk),
+        param_dtype="float32", compute_dtype="float32")
+
+
+def test_mamba_chunk_invariance(rng):
+    """The chunked scan must be invariant to chunk size (math identity)."""
+    x = jnp.asarray(rng.standard_normal((2, 32, 32)), jnp.float32)
+    p = mamba_init(jax.random.key(0), _mamba_cfg(32))
+    outs = []
+    for chunk in (4, 8, 16, 32):
+        cfg = _mamba_cfg(chunk)
+        y, h = mamba_forward(ENGINE, p, cfg, x)
+        outs.append((np.asarray(y), np.asarray(h)))
+    for y, h in outs[1:]:
+        np.testing.assert_allclose(y, outs[0][0], atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(h, outs[0][1], atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_matches_naive_recurrence(rng):
+    """Associative-scan implementation vs a step-by-step reference."""
+    cfg = _mamba_cfg(8)
+    p = mamba_init(jax.random.key(1), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 16, 32)), jnp.float32)
+    y, h_last = mamba_forward(ENGINE, p, cfg, x)
+
+    # naive: replicate the terms then a python recurrence
+    from repro.models.mamba import _causal_conv, _selective_terms
+    from repro.models.layers import dense
+    xz = dense(ENGINE, p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(p, xi)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+    decay, contrib, cmat = _selective_terms(ENGINE, p, cfg, xc)
+    h = np.zeros(decay.shape[2:], np.float32)          # (di, ds)
+    ys = []
+    for t in range(16):
+        h = np.asarray(decay[0, t]) * h + np.asarray(contrib[0, t])
+        ys.append(h @ np.asarray(cmat[0, t]))
+    ys = np.stack(ys)                                   # (S, di)
+    ys = ys + np.asarray(p["D"]) * np.asarray(xc[0])
+    ref = ys * np.asarray(jax.nn.silu(z[0]))
+    got_pre = dense(ENGINE, p["out_proj"],
+                    jnp.asarray(ref[None], jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(got_pre),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_last[0]), h, atol=1e-4)
+
+
+def test_rwkv_chunk_invariance(rng):
+    cfg = get_smoke_config("rwkv6-1.6b")
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    p = rwkv_init(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+    outs = []
+    for chunk in (4, 16, 32):
+        cfg2 = dataclasses.replace(
+            cfg, rwkv=dataclasses.replace(cfg.rwkv, chunk=chunk))
+        y, S, _ = rwkv_time_mix(ENGINE, p, cfg2, x)
+        outs.append((np.asarray(y), np.asarray(S)))
+    for y, S in outs[1:]:
+        np.testing.assert_allclose(y, outs[0][0], atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(S, outs[0][1], atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------- MoE
+def _moe_cfg(cap=8.0, e=4, k=2):
+    return ModelConfig(
+        name="moe", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=48, vocab=64,
+        pattern=(LayerSpec(kind="attn", moe=True),),
+        moe=MoEConfig(n_experts=e, top_k=k, capacity_factor=cap),
+        param_dtype="float32", compute_dtype="float32")
+
+
+def test_moe_matches_dense_reference_at_high_capacity(rng):
+    """With no drops, capacity dispatch must equal the dense top-k formula."""
+    cfg = _moe_cfg(cap=16.0)
+    p = moe_init(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 8, 32)), jnp.float32)
+    out, aux = moe(ENGINE, p, cfg, x)
+    # dense reference: every expert computes everything, weighted combine
+    t = x.reshape(-1, 32)
+    logits = t @ np.asarray(p["router"]["w"])
+    probs = jax.nn.softmax(jnp.asarray(logits), -1)
+    w, ids = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    ref = np.zeros_like(t)
+    for e in range(4):
+        g = np.tanh(0)  # placeholder
+        ge = jax.nn.silu(t @ p["gate"][e]) * (t @ p["up"][e])
+        ye = np.asarray(ge @ p["down"][e])
+        for slot in range(2):
+            mask = (np.asarray(ids[:, slot]) == e)
+            ref[mask] += np.asarray(w[:, slot])[mask, None] * ye[mask]
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 32), ref,
+                               atol=2e-4, rtol=2e-3)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """Tiny capacity must drop contributions (outputs differ from cap=16)."""
+    p = moe_init(jax.random.key(0), _moe_cfg())
+    x = jnp.asarray(rng.standard_normal((4, 16, 32)), jnp.float32)
+    hi, _ = moe(ENGINE, p, _moe_cfg(cap=16.0), x)
+    lo, _ = moe(ENGINE, p, _moe_cfg(cap=0.25), x)
+    assert not np.allclose(np.asarray(hi), np.asarray(lo))
+
+
+def test_moe_aux_loss_uniform_router_near_one(rng):
+    """Balanced routing → aux ≈ coef (E · Σ 1/E · k/E · ... normalised)."""
+    cfg = _moe_cfg()
+    p = moe_init(jax.random.key(2), cfg)
+    x = jnp.asarray(rng.standard_normal((8, 32, 32)), jnp.float32)
+    _, aux = moe(ENGINE, p, cfg, x)
+    # with near-uniform routing aux ≈ coef * E * (1/E) * k = coef * k
+    assert 0.0 < float(aux) < 4 * cfg.moe.router_aux_coef * cfg.moe.top_k
