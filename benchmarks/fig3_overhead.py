@@ -14,11 +14,12 @@ from repro.core.encoding import ElemWidth
 from benchmarks.fig4_speedup import arcane_cycles
 
 
-def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False):
+def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
+        scheduler="serial"):
     rows = []
     for ln in lanes:
         for n in sizes:
-            total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln)
+            total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln, scheduler)
             rows.append({"size": n, "lanes": ln, "cycles": total, **shares})
             if not quiet:
                 print(f"fig3,int32 3x3 {n}x{n} {ln}lane,{total},"
@@ -48,11 +49,27 @@ def validate(rows) -> dict:
     return res
 
 
-def main():
-    rows = run(quiet=True)
+def main(argv=None):
+    import argparse
+    p = argparse.ArgumentParser(description="Fig. 3 reproduction benchmark")
+    p.add_argument("--scheduler", choices=("serial", "pipelined"),
+                   default="serial",
+                   help="C-RT scheduler; with 'pipelined' the cycles column "
+                        "is the overlapped-schedule makespan (phase shares "
+                        "stay on the sum-of-cycles basis)")
+    p.add_argument("--verbose", action="store_true",
+                   help="print per-point rows in addition to the summary")
+    args = p.parse_args(argv)
+    rows = run(quiet=not args.verbose, scheduler=args.scheduler)
     for k, v in validate(rows).items():
         val = f"{v:.3f}" if isinstance(v, float) else v
         print(f"fig3_validate,{k},{val}")
+    if args.scheduler == "pipelined":
+        serial_rows = run(quiet=True, scheduler="serial")
+        for r, sr in zip(rows, serial_rows):
+            assert (r["size"], r["lanes"]) == (sr["size"], sr["lanes"])
+            print(f"fig3_pipelined,{r['size']}x{r['size']} {r['lanes']}lane,"
+                  f"concurrency={sr['cycles'] / r['cycles']:.2f}x")
     return rows
 
 

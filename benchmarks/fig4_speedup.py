@@ -81,10 +81,15 @@ def tiled_conv_layer(cop, width, aX, h, w, aF, k, aR):
     cop.barrier()
 
 
-def arcane_cycles(h: int, w: int, k: int, width: ElemWidth,
-                  lanes: int) -> tuple[int, dict]:
+def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
+                  scheduler: str = "serial") -> tuple[int, dict]:
     """Run the (strip-mined) xmk4 conv layer through the C-RT simulator;
     return total modeled cycles + phase split.
+
+    ``scheduler`` selects the C-RT variant: ``"serial"`` (the original
+    one-kernel-at-a-time loop; total = sum of phase cycles) or
+    ``"pipelined"`` (repro.sim event-driven scheduler; total = makespan of
+    the overlapped schedule — DMA/compute overlap across VPUs).
 
     Config: 4 VPUs × 64 KiB (64 vregs × 1 KiB) — a 256 KiB LLC, 2× the
     paper's 128 KiB (the paper's NM-Carus micro-programs additionally reuse
@@ -92,8 +97,14 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth,
     conservatively replaces with more strips; the larger register file
     compensates — deviation noted in EXPERIMENTS §Paper-validation)."""
     rng = np.random.default_rng(0)
-    cop = ArcaneCoprocessor(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024,
-                            lanes=lanes, memory=None)
+    rt_kwargs = dict(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024, lanes=lanes)
+    if scheduler == "pipelined":
+        from repro.sim import PipelinedRuntime
+        cop = ArcaneCoprocessor(runtime=PipelinedRuntime(**rt_kwargs))
+    elif scheduler == "serial":
+        cop = ArcaneCoprocessor(memory=None, **rt_kwargs)
+    else:
+        raise ValueError(f"unknown scheduler {scheduler!r}")
     dt = {ElemWidth.B: np.int8, ElemWidth.H: np.int16,
           ElemWidth.W: np.int32}[width]
     X = rng.integers(-5, 5, (3 * h, w)).astype(dt)
@@ -104,7 +115,8 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth,
     cop.rt.stats.reset()          # measure the offload path only
     tiled_conv_layer(cop, width, aX, h, w, aF, k, aR)
     s = cop.rt.stats
-    return s.total_cycles, s.shares()
+    total = cop.rt.sim_time if scheduler == "pipelined" else s.total_cycles
+    return total, s.shares()
 
 
 def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
@@ -114,7 +126,8 @@ def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
 
 
 def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
-        widths=(ElemWidth.B, ElemWidth.H, ElemWidth.W), quiet=False):
+        widths=(ElemWidth.B, ElemWidth.H, ElemWidth.W), quiet=False,
+        scheduler="serial"):
     rows = []
     for width in widths:
         for k in filters:
@@ -125,18 +138,27 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                 scalar = scalar_cpu_cycles(cost, width)
                 simd = packed_simd_cycles(cost, width)
                 for ln in lanes:
-                    arc, shares = arcane_cycles(n, n, k, width, ln)
-                    rows.append({
+                    arc, shares = arcane_cycles(n, n, k, width, ln, scheduler)
+                    row = {
                         "width": width.suffix, "filter": k, "size": n,
-                        "lanes": ln,
+                        "lanes": ln, "cycles": arc,
                         "speedup_vs_scalar": scalar / arc,
                         "speedup_vs_simd": simd / arc,
                         "simd_vs_scalar": scalar / simd,
-                    })
+                    }
+                    if scheduler == "pipelined":
+                        serial_arc, _ = arcane_cycles(n, n, k, width, ln,
+                                                      "serial")
+                        row["serial_cycles"] = serial_arc
+                        row["concurrency_speedup"] = serial_arc / arc
+                    rows.append(row)
                     if not quiet:
+                        extra = (f" concurrency={row['concurrency_speedup']:.2f}x"
+                                 if scheduler == "pipelined" else "")
                         print(f"fig4,int{8*width.nbytes} {k}x{k} {n}x{n} "
                               f"{ln}lane,{arc},speedup_scalar="
-                              f"{scalar/arc:.1f}x simd={scalar/simd:.1f}x")
+                              f"{scalar/arc:.1f}x simd={scalar/simd:.1f}x"
+                              + extra)
     return rows
 
 
@@ -172,8 +194,28 @@ def validate(rows) -> dict:
     return res
 
 
-def main():
-    rows = run(quiet=True)
+def main(argv=None):
+    import argparse
+    p = argparse.ArgumentParser(description="Fig. 4 reproduction benchmark")
+    p.add_argument("--scheduler", choices=("serial", "pipelined"),
+                   default="serial",
+                   help="C-RT scheduler: the original serial loop or the "
+                        "repro.sim event-driven pipelined one (also reports "
+                        "the modeled concurrency speedup vs serial)")
+    p.add_argument("--verbose", action="store_true",
+                   help="print per-point rows in addition to the summary")
+    args = p.parse_args(argv)
+
+    rows = run(quiet=not args.verbose, scheduler=args.scheduler)
+    if args.scheduler == "pipelined":
+        speedups = [r["concurrency_speedup"] for r in rows]
+        print(f"fig4_pipelined,points,{len(rows)}")
+        print(f"fig4_pipelined,concurrency_speedup_max,{max(speedups):.2f}")
+        print(f"fig4_pipelined,concurrency_speedup_mean,"
+              f"{sum(speedups) / len(speedups):.2f}")
+        assert all(r["cycles"] <= r["serial_cycles"] for r in rows), \
+            "pipelined makespan exceeded the serial schedule"
+        return rows, None
     res = validate(rows)
     for k, v in res.items():
         val = f"{v:.1f}" if isinstance(v, float) else v

@@ -20,13 +20,13 @@ def main() -> None:
                             sota_throughput, table2_area)
 
     print("# === Fig.4: conv-layer speedups (modeled cycles @250MHz) ===")
-    rows, res = fig4_speedup.main()
+    rows, res = fig4_speedup.main([])   # explicit argv: don't eat run.py's
     for r in rows:
         if r["size"] in (64, 256) and r["width"] == "b" and r["lanes"] == 8:
             pass  # headline rows already validated above
 
     print("# === Fig.3: phase overheads ===")
-    fig3_overhead.main()
+    fig3_overhead.main([])
 
     print("# === Table II: lanes / resource trade-off ===")
     table2_area.main()

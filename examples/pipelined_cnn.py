@@ -1,0 +1,101 @@
+"""Pipelined C-RT demo: a batched CNN front-end scheduled two ways.
+
+Runs the same xmnmc program — a batch of four 3-channel conv layers followed
+by a GEMM classifier head over the pooled features — through
+
+  1. the serial C-RT (``CacheRuntime``): decode → allocate → compute →
+     write-back, one kernel at a time, and
+  2. the event-driven pipelined C-RT (``repro.sim.PipelinedRuntime``): DMA-in
+     of the next image overlaps compute of the previous one on another VPU,
+     deferred write-backs drain on idle DMA ports.
+
+The kernel outputs are bit-identical (the two schedulers share the same
+phase steps); only the modeled cycles differ. The pipelined run also exports
+a Chrome ``trace_event`` JSON — load it at https://ui.perfetto.dev (or
+``chrome://tracing``) and look at one row per modeled resource: the eCPU,
+the cache lock, and each VPU's datapath and DMA port.
+
+Usage::
+
+    PYTHONPATH=src python examples/pipelined_cnn.py [--trace out.json]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.sim import load_config
+
+
+def build_and_run(cop, *, batch=4, h=32, w=32, k=3, classes=10):
+    """Issue the batched conv + classifier program; returns host-visible results."""
+    rng = np.random.default_rng(0)
+    width = ElemWidth.W
+    om, on = (h - k + 1) // 2, (w - k + 1) // 2
+
+    images = [rng.integers(-8, 8, (3 * h, w), dtype=np.int32)
+              for _ in range(batch)]
+    filt = rng.integers(-4, 4, (3 * k, k), dtype=np.int32)
+    head = rng.integers(-3, 3, (on, classes), dtype=np.int32)
+
+    a_imgs = [cop.place(x, width) for x in images]
+    a_filt = cop.place(filt, width)
+    a_head = cop.place(head, width)
+    a_feat = [cop.malloc(om * on * 4) for _ in range(batch)]
+    a_out = [cop.malloc(om * classes * 4) for _ in range(batch)]
+
+    # One conv layer per image — independent kernels, free to spread across
+    # VPUs — then a dependent GEMM head consuming each deferred feature map.
+    for i in range(batch):
+        cop._xmr_w(0, a_imgs[i], 0, 3 * h, w)
+        cop._xmr_w(1, a_filt, 0, 3 * k, k)
+        cop._xmr_w(2, a_feat[i], 0, om, on)
+        cop._conv_layer_w(2, 0, 1)               # feat_i = convlayer(img_i)
+        cop._xmr_w(3, a_head, 0, on, classes)
+        cop._xmr_w(4, a_out[i], 0, om, classes)
+        cop._gemm_w(4, 2, 3, 4, alpha=1.0, beta=0.0)   # out_i = feat_i @ head
+    cop.barrier()
+    return [cop.gather(a, om, classes, width) for a in a_out]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--config", default="arcane-default",
+                   help="builtin config name or YAML path (default: "
+                        "arcane-default; try arcane-8vpu)")
+    p.add_argument("--trace", default="pipelined_cnn_trace.json",
+                   help="Chrome trace_event JSON output path")
+    p.add_argument("--batch", type=int, default=4)
+    args = p.parse_args(argv)
+
+    cfg = load_config(args.config)
+    print(f"config: {cfg.description or args.config} "
+          f"({cfg.n_vpus} VPUs x {cfg.lanes} lanes, "
+          f"{cfg.llc_bytes // 1024} KiB LLC)")
+
+    cop_s = ArcaneCoprocessor(runtime=cfg.make_runtime("serial"))
+    out_s = build_and_run(cop_s, batch=args.batch)
+    serial_cycles = cop_s.rt.stats.total_cycles
+
+    cop_p = ArcaneCoprocessor(runtime=cfg.make_runtime("pipelined"))
+    out_p = build_and_run(cop_p, batch=args.batch)
+    rep = cop_p.rt.report()
+
+    identical = all(np.array_equal(a, b) for a, b in zip(out_s, out_p))
+    assert identical, "schedulers disagree — bit-identical contract broken"
+
+    print(f"kernels run: {rep.kernels_run}  (batch of {args.batch}: "
+          f"conv layer + GEMM head each)")
+    print(f"serial C-RT total:      {serial_cycles:>9} cycles")
+    print(f"pipelined makespan:     {rep.makespan:>9} cycles")
+    print(f"concurrency speedup:    {rep.concurrency_speedup:>9.2f}x")
+    busiest = sorted(((v, k) for k, v in rep.utilization.items()),
+                     reverse=True)[:4]
+    print("busiest resources: " + "  ".join(
+        f"{name}={util:.0%}" for util, name in busiest))
+    path = cop_p.rt.tracer.dump(args.trace)
+    print(f"serial == pipelined results ✓   chrome trace -> {path}")
+
+
+if __name__ == "__main__":
+    main()

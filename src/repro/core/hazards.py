@@ -18,7 +18,7 @@ kernel↔kernel dependencies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core.matrix import MatrixBinding
 
@@ -98,6 +98,15 @@ class DependencyTracker:
         for s in sources:
             self._readers_of.setdefault(s.phys_id, set()).add(kid)
         return rec
+
+    def binding(self, phys_id: int) -> Optional[MatrixBinding]:
+        """Binding captured at admission (outlives matrix-map renaming)."""
+        return self._bindings.get(phys_id)
+
+    def writer_of(self, phys_id: int) -> Optional[int]:
+        """Kernel id of the (last) writer of ``phys_id``; admission order of
+        writers is the memory write-back order the runtime must preserve."""
+        return self._writer_of.get(phys_id)
 
     def ready(self, kernel_id: int) -> bool:
         rec = self._pending[kernel_id]

@@ -82,7 +82,25 @@ class MatrixBinding:
         return (self.rows, self.cols)
 
     def overlaps(self, other: "MatrixBinding") -> bool:
-        return self.start < other.end and other.start < self.end
+        """True if the two strided 2D footprints can share a byte.
+
+        Interval intersection is necessary but not sufficient: two column
+        strips of the same row-major array (equal strides, disjoint column
+        byte-bands within the stride period) interleave in the flat address
+        space without aliasing — the case the strip-mined conv tiling emits.
+        Treating those as overlapping would serialize every strip through
+        false WAW edges, so the period test below refines the check exactly
+        when it is provably safe (neither band wraps the period).
+        """
+        if self.start >= other.end or other.start >= self.end:
+            return False
+        s = self.stride_bytes
+        if s == other.stride_bytes and s > 0:
+            a0, b0 = self.start % s, other.start % s
+            a1, b1 = a0 + self.row_bytes, b0 + other.row_bytes
+            if a1 <= s and b1 <= s and (a1 <= b0 or b1 <= a0):
+                return False
+        return True
 
     def overlaps_range(self, start: int, end: int) -> bool:
         return self.start < end and start < self.end

@@ -89,12 +89,13 @@ class CacheRuntime:
         queue_capacity: int = 16,
         library: Optional[KernelLibrary] = None,
         num_matrix_regs: int = NUM_MATRIX_REGS,
+        geometry: Optional[VPUGeometry] = None,
     ):
         self.memory = memory or MainMemory(16 << 20)
         self.cache = ArcaneCache(self.memory, n_vpus=n_vpus,
                                  vregs_per_vpu=vregs_per_vpu,
                                  vlen_bytes=vlen_bytes)
-        self.geometry = VPUGeometry(lanes=lanes)
+        self.geometry = geometry or VPUGeometry(lanes=lanes)
         self.library = library or default_library()
         self.vpus = [VPU(i, self.cache, self.geometry, self.library)
                      for i in range(n_vpus)]
@@ -199,56 +200,91 @@ class CacheRuntime:
 
     def _run_one(self, qk: QueuedKernel) -> None:
         t0 = time.perf_counter()
-        spec, srcs, dst = qk.spec, qk.src_bindings, qk.dst_binding
-        total_lines = sum(
-            self.vpus[0].lines_needed(*s.shape, s.width) for s in srcs
-        ) + self.vpus[0].lines_needed(*dst.shape, dst.width)
-        # Prefer a VPU where an operand is already resident (avoids a spill).
-        vpu_idx = None
-        for s in srcs:
-            r = self.resident.get(s.phys_id)
-            if r is not None:
-                vpu_idx = r.vpu
-                break
-        if vpu_idx is None:
-            vpu_idx = self._select_vpu(total_lines)
-        vpu = self.vpus[vpu_idx]
+        vpu = self.vpus[self._choose_vpu(qk)]
 
         # -------------------------------------------------- allocation phase
-        if not self.cache.acquire_lock():
-            raise RuntimeError("cache lock already held")
-        try:
-            src_res = []
-            for s in srcs:
-                src_res.append(self._allocate_source(vpu, s))
-                self.at.mark_allocated(s.phys_id)
-            dst_res = self._allocate_destination(vpu, dst)
-        finally:
-            self.cache.release_lock()
-        self.stats.allocation_cycles += self.geometry.schedule_cycles
+        src_res, dst_res, dma_cycles, wb_cycles = self._allocation_step(qk, vpu)
+        self.stats.allocation_cycles += self.geometry.schedule_cycles + dma_cycles
+        self.stats.writeback_cycles += wb_cycles
         self.stats.allocation_s += time.perf_counter() - t0
 
         # ----------------------------------------------------- compute phase
         t1 = time.perf_counter()
-        cycles = vpu.execute(spec, src_res, dst_res)
+        cycles = self._compute_step(qk, vpu, src_res, dst_res)
         self.stats.compute_cycles += cycles
         self.stats.compute_s += time.perf_counter() - t1
 
         # --------------------------------------------------- writeback phase
         t2 = time.perf_counter()
+        self.stats.writeback_cycles += self._retire_step(qk, src_res, dst_res)
+        self.stats.writeback_s += time.perf_counter() - t2
+        self.stats.kernels_run += 1
+
+    # ------------------------------------------------- shared scheduler steps
+    # The serial scheduler above and repro.sim.pipeline.PipelinedRuntime both
+    # drive exactly these four steps; only *when* each step runs differs, so
+    # the numerical results are identical by construction.
+    def _choose_vpu(self, qk: QueuedKernel) -> int:
+        """VPU selection: resident-operand affinity, else fewest-dirty-lines."""
+        for s in qk.src_bindings:
+            r = self.resident.get(s.phys_id)
+            if r is not None:
+                return r.vpu
+        return self._select_vpu(self._lines_for(qk))
+
+    def _lines_for(self, qk: QueuedKernel) -> int:
+        return sum(
+            self.vpus[0].lines_needed(*s.shape, s.width) for s in qk.src_bindings
+        ) + self.vpus[0].lines_needed(*qk.dst_binding.shape, qk.dst_binding.width)
+
+    def _allocation_step(
+        self, qk: QueuedKernel, vpu: VPU
+    ) -> tuple[list[ResidentMatrix], ResidentMatrix, int, int]:
+        """Matrix Allocator: lock, claim vregs, 2D-DMA the operands in.
+
+        Returns ``(src_res, dst_res, dma_cycles, consolidation_wb_cycles)``;
+        the caller attributes the cycles (allocation vs writeback phase).
+        """
+        if not self.cache.acquire_lock():
+            raise RuntimeError("cache lock already held")
+        dma_cycles = wb_cycles = 0
+        try:
+            src_res = []
+            for s in qk.src_bindings:
+                res, dma_c, wb_c = self._allocate_source(vpu, s)
+                src_res.append(res)
+                dma_cycles += dma_c
+                wb_cycles += wb_c
+                self.at.mark_allocated(s.phys_id)
+            dst_res = self._allocate_destination(vpu, qk.dst_binding)
+        finally:
+            self.cache.release_lock()
+        return src_res, dst_res, dma_cycles, wb_cycles
+
+    def _compute_step(self, qk: QueuedKernel, vpu: VPU,
+                      src_res: list[ResidentMatrix],
+                      dst_res: ResidentMatrix) -> int:
+        return vpu.execute(qk.spec, src_res, dst_res)
+
+    def _retire_step(self, qk: QueuedKernel, src_res: list[ResidentMatrix],
+                     dst_res: ResidentMatrix) -> int:
+        """Complete the kernel: release sources, defer or write back the
+        destination. Returns destination write-back DMA cycles (0 if deferred).
+        """
+        dst = qk.dst_binding
         self.tracker.complete(qk.deps.kernel_id)
-        for s, r in zip(srcs, src_res):
+        for s, r in zip(qk.src_bindings, src_res):
             self.at.release(s.phys_id, RegionKind.SRC)
             if not r.dirty and not self._needed_later(s.phys_id):
                 self._evict_resident(s.phys_id)
         if self._needed_later(dst.phys_id):
             # Deferred write-back: destination stays resident for the consumer.
             self.resident[dst.phys_id] = dst_res
-        else:
-            self._writeback_resident(dst, dst_res)
-            self.at.release(dst.phys_id, RegionKind.DST)
-        self.stats.writeback_s += time.perf_counter() - t2
-        self.stats.kernels_run += 1
+            return 0
+        wb_cycles = (self._flush_older_aliases(dst)
+                     + self._writeback_resident(dst, dst_res))
+        self.at.release(dst.phys_id, RegionKind.DST)
+        return wb_cycles
 
     def _needed_later(self, phys_id: int) -> bool:
         return any(phys_id in qk.deps.sources for qk in self.queue)
@@ -262,21 +298,30 @@ class CacheRuntime:
         self.resident[b.phys_id] = res
         return res
 
-    def _allocate_source(self, vpu: VPU, b: MatrixBinding) -> ResidentMatrix:
+    def _allocate_source(
+        self, vpu: VPU, b: MatrixBinding
+    ) -> tuple[ResidentMatrix, int, int]:
+        """Materialise a source on ``vpu``; returns (res, dma_cycles, wb_cycles)."""
+        wb_cycles = 0
         res = self.resident.get(b.phys_id)
         if res is not None:
             if res.vpu != vpu.index:
                 # Deferred result lives on another VPU: consolidate through
-                # memory, then load here (cross-VPU move).
-                self._writeback_resident(b, res)
+                # memory, then load here (cross-VPU move). The consolidation
+                # is the deferred write-back landing, so the DST region it
+                # guarded is released here (host RAW window closes).
+                was_dirty = res.dirty
+                wb_cycles = (self._flush_older_aliases(b)
+                             + self._writeback_resident(b, res))
+                if was_dirty:
+                    self.at.release(b.phys_id, RegionKind.DST)
                 res = None
             else:
-                return res
+                return res, 0, wb_cycles
         res = self._claim(vpu, b)
         nbytes = self.cache.dma_in_2d(
             vpu.index, res.line_idxs, b.addr, b.rows, b.row_bytes, b.stride_bytes)
-        self.stats.allocation_cycles += self.geometry.dma_cycles(nbytes, b.rows)
-        return res
+        return res, self.geometry.dma_cycles(nbytes, b.rows), wb_cycles
 
     def _allocate_destination(self, vpu: VPU, b: MatrixBinding) -> ResidentMatrix:
         res = self.resident.get(b.phys_id)
@@ -290,13 +335,49 @@ class CacheRuntime:
         # only to the write-back path’s partial lines, handled by dma_out_2d).
         return self._claim(vpu, b)
 
-    def _writeback_resident(self, b: MatrixBinding, res: ResidentMatrix) -> None:
-        if res.dirty:
-            nbytes = self.cache.dma_out_2d(
-                res.vpu, res.line_idxs, b.addr, b.rows, b.row_bytes,
-                b.stride_bytes)
-            self.stats.writeback_cycles += self.geometry.dma_cycles(nbytes, b.rows)
+    def _consolidate_resident(self, b: MatrixBinding,
+                              res: ResidentMatrix) -> int:
+        """Write a dirty resident's data to memory *without* evicting it
+        (the residency stays for future readers); returns DMA cycles."""
+        if not res.dirty:
+            return 0
+        nbytes = self.cache.dma_out_2d(
+            res.vpu, res.line_idxs, b.addr, b.rows, b.row_bytes, b.stride_bytes)
+        res.dirty = False
+        return self.geometry.dma_cycles(nbytes, b.rows)
+
+    def _writeback_resident(self, b: MatrixBinding, res: ResidentMatrix) -> int:
+        """Consolidate a resident matrix back to memory; returns DMA cycles."""
+        cycles = self._consolidate_resident(b, res)
         self._evict_resident(b.phys_id)
+        return cycles
+
+    def _flush_older_aliases(self, b: MatrixBinding) -> int:
+        """Enforce admission-order memory write-backs: before ``b``'s data
+        lands in memory, consolidate every dirty resident written by an
+        *earlier-admitted* kernel whose footprint overlaps ``b`` — a deferred
+        older result flushed later would clobber the newer bytes (and with a
+        partial overlap, discarding it would lose the non-overlapped bytes).
+        The flushed resident stays in place, clean, for its pending readers;
+        its DST region is released (host RAW window closes with the data in
+        memory). Returns DMA cycles."""
+        my_writer = self.tracker.writer_of(b.phys_id)
+        if my_writer is None:
+            return 0
+        cycles = 0
+        for phys_id in list(self.resident):
+            res = self.resident[phys_id]
+            if phys_id == b.phys_id or not res.dirty:
+                continue
+            w = self.tracker.writer_of(phys_id)
+            if w is None or w >= my_writer:
+                continue
+            other = self._binding_of(phys_id)
+            if not other.overlaps(b):
+                continue
+            cycles += self._consolidate_resident(other, res)
+            self.at.release(phys_id, RegionKind.DST)
+        return cycles
 
     def _evict_resident(self, phys_id: int) -> None:
         res = self.resident.pop(phys_id, None)
@@ -313,15 +394,27 @@ class CacheRuntime:
             res = self.resident[phys_id]
             if res.dirty:
                 b = self._binding_of(phys_id)
-                self._writeback_resident(b, res)
+                self.stats.writeback_cycles += (
+                    self._flush_older_aliases(b)
+                    + self._writeback_resident(b, res))
                 self.at.release(phys_id, RegionKind.DST)
             else:
+                # Clean residents (including ones consolidated early by
+                # _flush_older_aliases) just drop; release the DST region so
+                # host loads don't stall on a stale registration.
                 self._evict_resident(phys_id)
+                self.at.release(phys_id, RegionKind.DST)
 
     def _binding_of(self, phys_id: int) -> MatrixBinding:
         for b in self.matrix_map.live_bindings():
             if b.phys_id == phys_id:
                 return b
+        # Renamed away by a later xmr: the tracker retains the binding the
+        # kernel was admitted with, so a deferred result whose logical
+        # register was rebound can still be written back to its own region.
+        b = self.tracker.binding(phys_id)
+        if b is not None:
+            return b
         raise KeyError(f"physical binding {phys_id} not live")
 
     # ============================================================== host path

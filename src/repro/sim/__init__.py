@@ -1,0 +1,23 @@
+"""repro.sim — event-driven pipelined C-RT scheduler + trace subsystem.
+
+Layout:
+  * :mod:`repro.sim.events`   — deterministic event queue + resource timelines
+  * :mod:`repro.sim.pipeline` — :class:`PipelinedRuntime` (overlapped phases)
+  * :mod:`repro.sim.config`   — YAML configs with ``extends`` composition
+  * :mod:`repro.sim.trace`    — Chrome ``trace_event`` export
+
+The serial :class:`repro.core.runtime.CacheRuntime` and the pipelined
+scheduler share the same decode/allocate/compute/retire steps, so their
+kernel outputs are bit-identical; only the modeled timing differs.
+"""
+from repro.sim.config import (ConfigError, SimConfig, builtin_config_path,
+                              deep_merge, load_config, load_raw)
+from repro.sim.events import Event, EventQueue, Interval, Resource
+from repro.sim.pipeline import PipelinedRuntime, PipelineReport
+from repro.sim.trace import PHASES, TraceRecord, Tracer
+
+__all__ = [
+    "ConfigError", "SimConfig", "builtin_config_path", "deep_merge",
+    "load_config", "load_raw", "Event", "EventQueue", "Interval", "Resource",
+    "PipelinedRuntime", "PipelineReport", "PHASES", "TraceRecord", "Tracer",
+]

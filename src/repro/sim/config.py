@@ -1,0 +1,198 @@
+"""YAML-driven simulator configuration (trace-based-model style).
+
+A config file describes one ARCANE instance — VPU count and geometry, lane
+counts, DMA widths, eCPU costs — in nested sections. Files compose through an
+``extends`` key: a child names a base config (path relative to the child
+file, or a builtin name like ``arcane-default``) and overrides only the
+properties it changes; overrides deep-merge into the base. A mapping that
+carries ``replace: true`` replaces the base mapping wholesale instead of
+merging (same override mechanism the TBM ``--extend`` files use).
+
+Example::
+
+    # my-8vpu.yaml
+    extends: arcane-default
+    description: 8 wide VPUs
+    cache: {n_vpus: 8}
+    vpu: {lanes: 8, dma_bytes_per_cycle: 8}
+
+``pyyaml`` is a dev-extra dependency; importing this module without it only
+fails when a YAML file is actually loaded (dict-based configs always work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+from repro.core.cache import MainMemory
+from repro.core.vpu import VPUGeometry
+
+#: Directory holding the builtin configs shipped with the package.
+BUILTIN_DIR = os.path.join(os.path.dirname(__file__), "configs")
+
+_SECTIONS = {
+    "cache": ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity"),
+    "vpu": ("lanes", "dma_bytes_per_cycle"),
+    "ecpu": ("decode_cycles", "schedule_cycles", "issue_cycles_per_vins"),
+    "memory": ("bytes",),
+}
+
+
+class ConfigError(ValueError):
+    """Malformed, unknown-key, or cyclic simulator configuration."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Validated simulator configuration; see the builtin YAMLs for docs."""
+
+    n_vpus: int = 4
+    vregs_per_vpu: int = 32
+    vlen_bytes: int = 1024
+    queue_capacity: int = 16
+    lanes: int = 4
+    dma_bytes_per_cycle: int = 4
+    decode_cycles: int = 350
+    schedule_cycles: int = 120
+    issue_cycles_per_vins: int = 4
+    memory_bytes: int = 16 << 20
+    description: str = ""
+
+    def __post_init__(self):
+        for f in ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity",
+                  "lanes", "dma_bytes_per_cycle", "memory_bytes"):
+            if getattr(self, f) <= 0:
+                raise ConfigError(f"{f} must be positive, got {getattr(self, f)}")
+
+    @property
+    def llc_bytes(self) -> int:
+        return self.n_vpus * self.vregs_per_vpu * self.vlen_bytes
+
+    def geometry(self) -> VPUGeometry:
+        return VPUGeometry(
+            lanes=self.lanes,
+            dma_bytes_per_cycle=self.dma_bytes_per_cycle,
+            decode_cycles=self.decode_cycles,
+            schedule_cycles=self.schedule_cycles,
+            issue_cycles_per_vins=self.issue_cycles_per_vins,
+        )
+
+    def make_runtime(self, scheduler: str = "serial", *, memory=None,
+                     tracer=None):
+        """Instantiate a runtime for this config.
+
+        ``scheduler``: ``"serial"`` → :class:`repro.core.runtime.CacheRuntime`,
+        ``"pipelined"`` → :class:`repro.sim.pipeline.PipelinedRuntime`.
+        """
+        from repro.core.runtime import CacheRuntime
+        kwargs = dict(
+            memory=memory or MainMemory(self.memory_bytes),
+            n_vpus=self.n_vpus,
+            vregs_per_vpu=self.vregs_per_vpu,
+            vlen_bytes=self.vlen_bytes,
+            queue_capacity=self.queue_capacity,
+            geometry=self.geometry(),
+        )
+        if scheduler == "serial":
+            return CacheRuntime(**kwargs)
+        if scheduler == "pipelined":
+            from repro.sim.pipeline import PipelinedRuntime
+            return PipelinedRuntime(tracer=tracer, **kwargs)
+        raise ConfigError(
+            f"unknown scheduler {scheduler!r} (expected 'serial'|'pipelined')")
+
+    # ------------------------------------------------------------ from dicts
+    @classmethod
+    def from_dict(cls, raw: dict) -> "SimConfig":
+        raw = dict(raw)
+        raw.pop("extends", None)
+        kwargs: dict[str, Any] = {"description": raw.pop("description", "")}
+        for section, keys in _SECTIONS.items():
+            sub = raw.pop(section, {}) or {}
+            if not isinstance(sub, dict):
+                raise ConfigError(f"section {section!r} must be a mapping")
+            sub = dict(sub)
+            sub.pop("replace", None)
+            for k in list(sub):
+                if k not in keys:
+                    raise ConfigError(
+                        f"unknown key {section}.{k} (expected one of {keys})")
+            for k, v in sub.items():
+                kwargs["memory_bytes" if (section, k) == ("memory", "bytes")
+                       else k] = v
+        if raw:
+            raise ConfigError(f"unknown top-level keys: {sorted(raw)}")
+        return cls(**kwargs)
+
+
+# ------------------------------------------------------------------ merging
+def deep_merge(base: dict, override: dict) -> dict:
+    """Merge ``override`` into ``base`` (override wins), recursively for
+    mappings. An override mapping with ``replace: true`` replaces the base
+    mapping wholesale (the marker itself is dropped)."""
+    out = dict(base)
+    for k, v in override.items():
+        if isinstance(v, dict):
+            if v.get("replace"):
+                v = {kk: vv for kk, vv in v.items() if kk != "replace"}
+                out[k] = v
+            elif isinstance(out.get(k), dict):
+                out[k] = deep_merge(out[k], v)
+            else:
+                out[k] = dict(v)
+        else:
+            out[k] = v
+    return out
+
+
+# ------------------------------------------------------------------ loading
+def builtin_config_path(name: str) -> str:
+    path = os.path.join(BUILTIN_DIR, name + ".yaml")
+    if not os.path.exists(path):
+        avail = sorted(f[:-5] for f in os.listdir(BUILTIN_DIR)
+                       if f.endswith(".yaml"))
+        raise ConfigError(f"no builtin config {name!r}; available: {avail}")
+    return path
+
+
+def _resolve(ref: str, relative_to: Optional[str]) -> str:
+    """Resolve an ``extends`` reference: a path (relative to the referring
+    file) or a builtin name."""
+    if ref.endswith((".yaml", ".yml")):
+        base_dir = os.path.dirname(relative_to) if relative_to else "."
+        cand = ref if os.path.isabs(ref) else os.path.join(base_dir, ref)
+        if os.path.exists(cand):
+            return cand
+        raise ConfigError(f"extends target not found: {cand}")
+    return builtin_config_path(ref)
+
+
+def load_raw(path: str, _chain: tuple = ()) -> dict:
+    """Load one YAML file, following its ``extends`` chain (base first)."""
+    try:
+        import yaml
+    except ImportError as e:     # pragma: no cover - dev extra present in CI
+        raise ConfigError(
+            "loading YAML configs requires pyyaml (pip install repro[dev])"
+        ) from e
+    path = os.path.abspath(path)
+    if path in _chain:
+        raise ConfigError(
+            f"cyclic extends chain: {' -> '.join((*_chain, path))}")
+    with open(path) as f:
+        raw = yaml.safe_load(f) or {}
+    if not isinstance(raw, dict):
+        raise ConfigError(f"{path}: top level must be a mapping")
+    parent = raw.pop("extends", None)
+    if parent is None:
+        return raw
+    base = load_raw(_resolve(str(parent), path), (*_chain, path))
+    return deep_merge(base, raw)
+
+
+def load_config(path_or_name: str) -> SimConfig:
+    """Load a :class:`SimConfig` from a YAML path or a builtin name."""
+    path = (path_or_name if path_or_name.endswith((".yaml", ".yml"))
+            else builtin_config_path(path_or_name))
+    return SimConfig.from_dict(load_raw(path))

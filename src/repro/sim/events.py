@@ -1,0 +1,126 @@
+"""Event-driven timing engine primitives for the pipelined C-RT model.
+
+Two ingredients, both deliberately tiny and deterministic:
+
+  * :class:`EventQueue` — a binary-heap priority queue of timestamped events.
+    Ties on ``time`` break by monotonically-increasing insertion sequence, so
+    replaying the same program yields the same event order, bit for bit.
+  * :class:`Resource` — a single-server FIFO resource (the eCPU, one VPU
+    datapath, one VPU DMA port, the cache lock). ``acquire`` books an activity
+    on the resource's timeline: the activity starts when both the requester is
+    ready *and* the resource is free, and the busy interval is recorded for
+    trace export and utilisation reporting.
+
+Times are modeled **cycles** (integers). There is no wall-clock anywhere in
+this module — determinism is a hard requirement (the pipelined scheduler must
+produce bit-identical numerics and reproducible traces run-to-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Iterator, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence. Ordered by (time, seq) — never by payload."""
+
+    time: int
+    seq: int
+    kind: str
+    payload: Any = None
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class EventQueue:
+    """Deterministic min-heap of :class:`Event`.
+
+    ``push`` stamps each event with an insertion sequence number; ``pop``
+    returns the earliest event, breaking time ties in insertion order. This
+    makes the simulation a pure function of the submitted program.
+    """
+
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+
+    def push(self, time: int, kind: str, payload: Any = None) -> Event:
+        if time < 0:
+            raise ValueError(f"event time must be non-negative, got {time}")
+        ev = Event(time=int(time), seq=next(self._seq), kind=kind,
+                   payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        if not self._heap:
+            raise IndexError("pop from empty EventQueue")
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def drain(self) -> Iterator[Event]:
+        while self._heap:
+            yield self.pop()
+
+
+@dataclasses.dataclass
+class Interval:
+    start: int
+    end: int
+    label: str = ""
+
+    @property
+    def duration(self) -> int:
+        return self.end - self.start
+
+
+class Resource:
+    """Single-server FIFO resource with an occupancy timeline.
+
+    ``free_at`` is the earliest cycle the next activity could start. Booking
+    never reorders: activities occupy the resource in acquire order, which is
+    exactly the in-order hardware queue each modeled unit has.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.free_at = 0
+        self.busy_cycles = 0
+        self.intervals: list[Interval] = []
+
+    def acquire(self, at: int, duration: int, label: str = "") -> Interval:
+        """Book ``duration`` cycles starting no earlier than ``at``.
+
+        Returns the booked interval (start may be later than ``at`` if the
+        resource is still busy). Zero-duration bookings are recorded too —
+        they matter for trace completeness (e.g. a deferred write-back).
+        """
+        if duration < 0:
+            raise ValueError(f"{self.name}: negative duration {duration}")
+        start = max(int(at), self.free_at)
+        iv = Interval(start=start, end=start + int(duration), label=label)
+        self.free_at = iv.end
+        self.busy_cycles += iv.duration
+        self.intervals.append(iv)
+        return iv
+
+    def idle_at(self, t: int) -> bool:
+        return self.free_at <= t
+
+    def utilization(self, horizon: int) -> float:
+        return self.busy_cycles / horizon if horizon > 0 else 0.0
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Resource({self.name!r}, free_at={self.free_at})"

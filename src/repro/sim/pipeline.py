@@ -1,0 +1,303 @@
+"""Event-driven pipelined C-RT scheduler (paper §IV-B, multi-VPU overlap).
+
+:class:`PipelinedRuntime` schedules the *same* ``QueuedKernel`` DAG as the
+serial :class:`~repro.core.runtime.CacheRuntime` it subclasses, but overlaps
+the C-RT phases across resources the way the hardware does:
+
+  * the eCPU decodes kernel *k+1* while kernel *k* is in flight;
+  * DMA-in for the next ready kernel runs on one VPU's DMA port while another
+    VPU's datapath computes;
+  * deferred write-backs drain opportunistically on idle DMA ports.
+
+**Bit-identical numerics by construction.** All functional state mutation
+(operand DMA-in, kernel execution, write-back) is performed *inline* at
+event-handling time, in dependency order — the event queue only decides
+*when* each already-correct step is modeled to happen. A kernel is dispatched
+only after every DAG predecessor has retired (``DependencyTracker.ready``)
+and no earlier-queued pending kernel still reads a memory region it writes
+(the in-order WAR-aliasing guarantee the serial loop provides implicitly), so
+the data each kernel observes is exactly what the serial schedule produces.
+
+Modeled resources (see :mod:`repro.sim.events`): ``ecpu``, ``cache.lock``,
+and per VPU ``vpu{i}.datapath`` + ``vpu{i}.dma``. Every booked activity is
+mirrored into a :class:`~repro.sim.trace.Tracer` for Chrome trace export.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.address_table import RegionKind
+from repro.core.runtime import CacheRuntime, QueuedKernel
+from repro.sim.events import EventQueue, Resource
+from repro.sim.trace import Tracer
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    """Summary of one pipelined run: makespan vs the serial sum-of-phases."""
+
+    makespan: int                   # modeled end-to-end cycles (overlapped)
+    serial_cycles: int              # sum of per-phase cycles (no overlap)
+    kernels_run: int
+    resource_busy: dict[str, int]   # resource name -> busy cycles
+    utilization: dict[str, float]   # resource name -> busy / makespan
+
+    @property
+    def concurrency_speedup(self) -> float:
+        return self.serial_cycles / self.makespan if self.makespan else 1.0
+
+
+class PipelinedRuntime(CacheRuntime):
+    """C-RT with an event-driven, resource-accurate pipelined scheduler."""
+
+    def __init__(self, *args, tracer: Optional[Tracer] = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.tracer = tracer or Tracer()
+        self.sim_time = 0
+        self.res_ecpu = Resource("ecpu")
+        self.res_lock = Resource("cache.lock")
+        self.res_dp = [Resource(f"vpu{v}.datapath")
+                       for v in range(self.cache.n_vpus)]
+        self.res_dma = [Resource(f"vpu{v}.dma")
+                        for v in range(self.cache.n_vpus)]
+        self._ready_at: dict[int, int] = {}     # kernel_id -> decode done time
+        self._pending_pipe: list[QueuedKernel] = []
+
+    # ----------------------------------------------------------- public api
+    def _all_resources(self) -> list[Resource]:
+        return [self.res_ecpu, self.res_lock, *self.res_dp, *self.res_dma]
+
+    def report(self) -> PipelineReport:
+        busy = {r.name: r.busy_cycles for r in self._all_resources()}
+        return PipelineReport(
+            makespan=self.sim_time,
+            serial_cycles=self.stats.total_cycles,
+            kernels_run=self.stats.kernels_run,
+            resource_busy=busy,
+            utilization={n: (b / self.sim_time if self.sim_time else 0.0)
+                         for n, b in busy.items()},
+        )
+
+    # ------------------------------------------------------------ scheduler
+    def run_pending(self) -> None:
+        """Drain the kernel queue with the event-driven pipelined schedule."""
+        if not self.queue:
+            return
+        pending = list(self.queue)
+        self.queue.clear()
+        self._pending_pipe = pending
+        eq = EventQueue()
+        t = self.sim_time
+
+        # Decode timeline: the eCPU ISR serialises preambles, but kernel k may
+        # dispatch right after its own decode — later decodes overlap with
+        # earlier kernels' allocation/compute.
+        for qk in pending:
+            kid = qk.deps.kernel_id
+            iv = self.res_ecpu.acquire(t, self.geometry.decode_cycles,
+                                       label=f"decode k{kid}")
+            self._ready_at[kid] = iv.end
+            self.tracer.emit(f"{qk.spec.name} k{kid} decode", "preamble",
+                             "ecpu", iv.start, iv.duration, kernel=kid)
+            eq.push(iv.end, "dispatch")
+
+        inflight: dict[int, tuple] = {}
+        while True:
+            self._dispatch_ready(t, pending, inflight, eq)
+            if not eq:
+                break
+            ev = eq.pop()
+            t = ev.time
+            if ev.kind == "compute_done":
+                self._handle_compute_done(ev.payload, t, inflight, eq)
+            # "dispatch" / "wb_done" events only advance time; the dispatch
+            # sweep at the top of the loop does the work.
+
+        end = max([t, self.sim_time]
+                  + [r.free_at for r in self._all_resources()])
+        # Capacity-starved leftovers: fall back to the serial step so the
+        # failure mode (ResourceStall) is identical to CacheRuntime's. Their
+        # phase cycles (everything but the already-timelined decode) append
+        # serially to the makespan — nothing overlaps a starved schedule.
+        still = []
+        fallback_before = self.stats.total_cycles
+        for qk in pending:
+            if self.tracker.ready(qk.deps.kernel_id):
+                self._run_one(qk)
+            else:
+                still.append(qk)
+        end += self.stats.total_cycles - fallback_before
+        self.sim_time = end
+        self._pending_pipe = []
+        self.queue.extend(still)
+
+    def _dispatch_ready(self, t: int, pending: list[QueuedKernel],
+                        inflight: dict, eq: EventQueue) -> None:
+        progress = True
+        while progress:
+            progress = False
+            i = 0
+            while i < len(pending):
+                qk = pending[i]
+                kid = qk.deps.kernel_id
+                if (self._ready_at[kid] <= t and self.tracker.ready(kid)
+                        and not self._war_blocked(qk, pending[:i])):
+                    v = self._choose_vpu_pipelined(qk, t)
+                    if v is not None:
+                        pending.pop(i)
+                        self._dispatch(qk, v, t, inflight, eq)
+                        progress = True
+                        continue
+                i += 1
+
+    @staticmethod
+    def _war_blocked(qk: QueuedKernel, earlier: list[QueuedKernel]) -> bool:
+        """In-order WAR-aliasing guard: ``qk`` must not overwrite a memory
+        region an earlier-queued, still-pending kernel reads (that kernel
+        copies its sources in at dispatch; program order then guarantees it
+        observes the pre-``qk`` data, exactly like the serial loop)."""
+        d = qk.dst_binding
+        return any(s.overlaps(d) for e in earlier for s in e.src_bindings)
+
+    # -------------------------------------------------------- VPU selection
+    def _free_lines(self, v: int) -> int:
+        return sum(1 for i in self.cache.vpu_lines(v)
+                   if not self.cache.lines[i].busy_computing)
+
+    def _capacity_ok(self, qk: QueuedKernel, v: int) -> bool:
+        need = 0
+        seen: set[int] = set()
+        for s in qk.src_bindings:
+            if s.phys_id in seen:       # repeated operand (e.g. gemm(A, A))
+                continue                # is claimed once by _allocation_step
+            seen.add(s.phys_id)
+            r = self.resident.get(s.phys_id)
+            if r is not None and r.vpu == v:
+                continue
+            need += self.vpus[v].lines_needed(*s.shape, s.width)
+        d = qk.dst_binding
+        r = self.resident.get(d.phys_id)
+        if not (r is not None and r.vpu == v
+                and (r.rows, r.cols) == (d.rows, d.cols)):
+            need += self.vpus[v].lines_needed(*d.shape, d.width)
+        return self._free_lines(v) >= need
+
+    def _choose_vpu_pipelined(self, qk: QueuedKernel, t: int) -> Optional[int]:
+        """Same policy family as the serial scheduler — resident-operand
+        affinity first — extended with earliest-free-datapath preference so
+        independent kernels spread across VPUs. Returns None to wait."""
+        for s in qk.src_bindings:
+            r = self.resident.get(s.phys_id)
+            if r is not None:
+                return r.vpu if self._capacity_ok(qk, r.vpu) else None
+        cands = [v for v in range(self.cache.n_vpus)
+                 if self._capacity_ok(qk, v)]
+        if not cands:
+            return None
+        return min(cands, key=lambda v: (max(self.res_dp[v].free_at, t),
+                                         self.cache.dirty_line_count(v),
+                                         -self._free_lines(v), v))
+
+    # ------------------------------------------------------------ activities
+    def _dispatch(self, qk: QueuedKernel, v: int, t: int, inflight: dict,
+                  eq: EventQueue) -> None:
+        kid = qk.deps.kernel_id
+        vpu = self.vpus[v]
+        # Functional allocation happens NOW, in dependency order; the events
+        # below only model when the hardware would finish each piece.
+        src_res, dst_res, dma_c, wb_c = self._allocation_step(qk, vpu)
+        lock_iv = self.res_lock.acquire(t, self.geometry.schedule_cycles,
+                                        label=f"k{kid} claim")
+        dma_iv = self.res_dma[v].acquire(lock_iv.end, dma_c + wb_c,
+                                         label=f"k{kid} dma-in")
+        self.stats.allocation_cycles += self.geometry.schedule_cycles + dma_c
+        self.stats.writeback_cycles += wb_c
+        self.tracer.emit(f"{qk.spec.name} k{kid} claim", "allocation",
+                         "cache.lock", lock_iv.start, lock_iv.duration,
+                         kernel=kid, vpu=v)
+        self.tracer.emit(f"{qk.spec.name} k{kid} dma-in", "allocation",
+                         f"vpu{v}.dma", dma_iv.start, dma_iv.duration,
+                         kernel=kid, vpu=v)
+
+        compute_cycles = self._compute_step(qk, vpu, src_res, dst_res)
+        dp_iv = self.res_dp[v].acquire(dma_iv.end, compute_cycles,
+                                       label=f"k{kid} {qk.spec.name}")
+        self.stats.compute_cycles += compute_cycles
+        self.tracer.emit(f"{qk.spec.name} k{kid}", "compute",
+                         f"vpu{v}.datapath", dp_iv.start, dp_iv.duration,
+                         kernel=kid, vpu=v)
+
+        inflight[kid] = (qk, v, src_res, dst_res)
+        eq.push(dp_iv.end, "compute_done", kid)
+
+    def _handle_compute_done(self, kid: int, t: int, inflight: dict,
+                             eq: EventQueue) -> None:
+        qk, v, src_res, dst_res = inflight.pop(kid)
+        wb = self._retire_step(qk, src_res, dst_res)
+        self.stats.writeback_cycles += wb
+        self.stats.kernels_run += 1
+        if wb:
+            iv = self.res_dma[v].acquire(t, wb, label=f"k{kid} writeback")
+            self.tracer.emit(f"{qk.spec.name} k{kid} writeback", "writeback",
+                             f"vpu{v}.dma", iv.start, iv.duration,
+                             kernel=kid, vpu=v)
+            eq.push(iv.end, "wb_done")
+        self._drain_idle_dma(t, inflight, eq)
+
+    def _drain_idle_dma(self, t: int, inflight: dict, eq: EventQueue) -> None:
+        """Opportunistically write back deferred results whose consumers are
+        all done, using DMA ports that would otherwise sit idle."""
+        busy_phys: set[int] = set()
+        for qk, _, _, _ in inflight.values():
+            busy_phys.update(s.phys_id for s in qk.src_bindings)
+            busy_phys.add(qk.dst_binding.phys_id)
+        for phys_id in list(self.resident):
+            res = self.resident[phys_id]
+            if (phys_id in busy_phys or self._needed_later(phys_id)
+                    or not res.dirty or not self.res_dma[res.vpu].idle_at(t)):
+                continue
+            b = self._binding_of(phys_id)
+            v = res.vpu
+            wb = (self._flush_older_aliases(b)
+                  + self._writeback_resident(b, res))
+            self.at.release(phys_id, RegionKind.DST)
+            self.stats.writeback_cycles += wb
+            iv = self.res_dma[v].acquire(t, wb, label=f"drain phys{phys_id}")
+            self.tracer.emit(f"drain phys{phys_id}", "writeback",
+                             f"vpu{v}.dma", iv.start, iv.duration,
+                             phys=phys_id, vpu=v)
+            eq.push(iv.end, "wb_done")
+
+    # -------------------------------------------------------------- pending
+    def _needed_later(self, phys_id: int) -> bool:
+        if super()._needed_later(phys_id):
+            return True
+        return any(phys_id in qk.deps.sources for qk in self._pending_pipe)
+
+    # -------------------------------------------------------------- barrier
+    def barrier(self) -> None:
+        """Drain the queue, then flush deferred results with timed DMA."""
+        self.run_pending()
+        if self.queue:
+            raise RuntimeError("kernel queue not drained — dependency deadlock?")
+        t = self.sim_time
+        for phys_id in list(self.resident):
+            res = self.resident[phys_id]
+            if res.dirty:
+                b = self._binding_of(phys_id)
+                v = res.vpu
+                wb = (self._flush_older_aliases(b)
+                      + self._writeback_resident(b, res))
+                self.stats.writeback_cycles += wb
+                self.at.release(phys_id, RegionKind.DST)
+                iv = self.res_dma[v].acquire(t, wb,
+                                             label=f"flush phys{phys_id}")
+                self.tracer.emit(f"flush phys{phys_id}", "writeback",
+                                 f"vpu{v}.dma", iv.start, iv.duration,
+                                 phys=phys_id, vpu=v)
+            else:
+                self._evict_resident(phys_id)
+                self.at.release(phys_id, RegionKind.DST)
+        self.sim_time = max([self.sim_time]
+                            + [r.free_at for r in self._all_resources()])

@@ -1,6 +1,7 @@
 """LLC functional model: coherence property tests against a flat-memory oracle."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev extra; suite runs without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import (ArcaneCache, CacheLocked, LineBusy, MainMemory,

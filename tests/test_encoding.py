@@ -1,5 +1,6 @@
 """xmnmc instruction encoding: bit-exact round-trips + properties."""
 import pytest
+pytest.importorskip("hypothesis")  # dev extra; suite runs without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import (ElemWidth, IllegalInstruction, InstrWord,

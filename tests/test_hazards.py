@@ -1,5 +1,8 @@
 """Dependency tracking + renaming (the paper's hazard checker)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev extra; suite runs without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import ElemWidth

@@ -1,0 +1,342 @@
+"""repro.sim: pipelined-vs-serial equivalence, events, configs, traces."""
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core.runtime import CacheRuntime
+from repro.sim import (EventQueue, PipelinedRuntime, Resource, SimConfig,
+                       Tracer, deep_merge)
+from repro.sim.trace import PHASES
+
+
+def make_cop(scheduler, **kw):
+    kw.setdefault("n_vpus", 4)
+    kw.setdefault("vregs_per_vpu", 16)
+    kw.setdefault("vlen_bytes", 512)
+    cls = PipelinedRuntime if scheduler == "pipelined" else CacheRuntime
+    return ArcaneCoprocessor(runtime=cls(**kw))
+
+
+def gemm_relu_pool_chain(cop, seed=0, batch=2, n=16):
+    """GEMM → LeakyReLU → MaxPool per image; returns the pooled outputs."""
+    rng = np.random.default_rng(seed)
+    outs = []
+    addrs = []
+    for _ in range(batch):
+        A = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aA = cop.place(A, ElemWidth.W)
+        aT = cop.malloc(n * n * 4)
+        aR = cop.malloc(n * n * 4)
+        aP = cop.malloc((n // 2) * (n // 2) * 4)
+        cop._xmr_w(0, aA, 0, n, n)
+        cop._xmr_w(1, aT, 0, n, n)
+        cop._xmr_w(2, aR, 0, n, n)
+        cop._xmr_w(3, aP, 0, n // 2, n // 2)
+        cop._gemm_w(1, 0, 0, 0, alpha=1.0, beta=0.0)      # T = A @ A
+        cop._leakyrelu(ElemWidth.W, 2, 1, alpha=0.25)     # R = lrelu(T)
+        cop._maxpool(ElemWidth.W, 3, 2, 2, 2)             # P = maxpool2x2(R)
+        addrs.append(aP)
+    cop.barrier()
+    for aP in addrs:
+        outs.append(cop.gather(aP, n // 2, n // 2, ElemWidth.W))
+    return outs
+
+
+# ------------------------------------------------------------- equivalence
+def test_serial_pipelined_bit_identical_chain():
+    cop_s = make_cop("serial")
+    cop_p = make_cop("pipelined")
+    outs_s = gemm_relu_pool_chain(cop_s)
+    outs_p = gemm_relu_pool_chain(cop_p)
+    for a, b in zip(outs_s, outs_p):
+        np.testing.assert_array_equal(a, b)
+    # oracle for the first image
+    rng = np.random.default_rng(0)
+    A = rng.integers(-9, 9, (16, 16), dtype=np.int32).astype(np.int64)
+    T = (A @ A).astype(np.int32).astype(np.int64)
+    R = np.where(T >= 0, T, np.round(0.25 * T)).astype(np.int32)
+    P = R.reshape(8, 2, 8, 2).max(axis=(1, 3))
+    np.testing.assert_array_equal(outs_s[0], P)
+
+
+def test_pipelined_makespan_strictly_lower():
+    """Acceptance: on a >=2-VPU config the overlapped schedule is strictly
+    faster than the serial sum of phases, for the same kernel outputs."""
+    cop_s = make_cop("serial")
+    cop_p = make_cop("pipelined")
+    gemm_relu_pool_chain(cop_s)
+    gemm_relu_pool_chain(cop_p)
+    serial_total = cop_s.rt.stats.total_cycles
+    rep = cop_p.rt.report()
+    assert rep.makespan < serial_total
+    assert rep.concurrency_speedup > 1.0
+    assert rep.kernels_run == cop_s.rt.stats.kernels_run == 6
+
+
+def test_pipelined_single_kernel_no_miracle():
+    """One kernel can't overlap with itself: makespan ~= serial phases."""
+    cop = make_cop("pipelined")
+    rng = np.random.default_rng(1)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aD, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)
+    cop.barrier()
+    s = cop.rt.stats
+    # makespan == decode + alloc + compute + wb for the single kernel, which
+    # differs from total_cycles only by the xmr-decode preamble slices that
+    # never enter the event timeline.
+    assert cop.rt.sim_time <= s.total_cycles
+    assert cop.rt.sim_time > s.compute_cycles
+
+
+def test_pipelined_deterministic_replay():
+    runs = []
+    for _ in range(2):
+        cop = make_cop("pipelined")
+        gemm_relu_pool_chain(cop)
+        runs.append((cop.rt.sim_time, tuple(cop.rt.tracer.records)))
+    assert runs[0] == runs[1]
+
+
+# ----------------------------------------------------------- event engine
+def test_event_queue_time_then_insertion_order():
+    eq = EventQueue()
+    eq.push(5, "a")
+    eq.push(5, "b")
+    eq.push(3, "c")
+    eq.push(5, "d")
+    assert [e.kind for e in eq.drain()] == ["c", "a", "b", "d"]
+
+
+def test_event_queue_rejects_negative_time():
+    with pytest.raises(ValueError):
+        EventQueue().push(-1, "x")
+
+
+def test_resource_fifo_occupancy():
+    r = Resource("dma")
+    iv1 = r.acquire(10, 5)
+    iv2 = r.acquire(0, 3)       # requester ready earlier, resource busy
+    assert (iv1.start, iv1.end) == (10, 15)
+    assert (iv2.start, iv2.end) == (15, 18)
+    assert r.busy_cycles == 8
+    assert r.idle_at(18) and not r.idle_at(17)
+
+
+# ---------------------------------------------------------------- configs
+def test_config_defaults_make_both_runtimes():
+    cfg = SimConfig(n_vpus=2, vregs_per_vpu=8, vlen_bytes=256,
+                    memory_bytes=1 << 16)
+    assert isinstance(cfg.make_runtime("serial"), CacheRuntime)
+    rt = cfg.make_runtime("pipelined")
+    assert isinstance(rt, PipelinedRuntime)
+    assert rt.cache.n_vpus == 2 and rt.geometry.lanes == 4
+    with pytest.raises(Exception):
+        cfg.make_runtime("warp-drive")
+
+
+def test_deep_merge_and_replace():
+    base = {"cache": {"n_vpus": 4, "vlen_bytes": 1024}, "vpu": {"lanes": 4}}
+    out = deep_merge(base, {"cache": {"n_vpus": 8}})
+    assert out["cache"] == {"n_vpus": 8, "vlen_bytes": 1024}
+    out = deep_merge(base, {"cache": {"replace": True, "n_vpus": 8}})
+    assert out["cache"] == {"n_vpus": 8}
+    assert base["cache"]["n_vpus"] == 4      # inputs untouched
+
+
+def test_yaml_extends_overrides(tmp_path):
+    yaml = pytest.importorskip("yaml")  # noqa: F841  (dev extra)
+    from repro.sim import load_config
+    (tmp_path / "base.yaml").write_text(
+        "description: base\n"
+        "cache: {n_vpus: 4, vregs_per_vpu: 8, vlen_bytes: 256}\n"
+        "vpu: {lanes: 2}\n"
+        "memory: {bytes: 65536}\n")
+    (tmp_path / "child.yaml").write_text(
+        "extends: base.yaml\n"
+        "description: child\n"
+        "cache: {n_vpus: 8}\n")
+    cfg = load_config(str(tmp_path / "child.yaml"))
+    assert cfg.description == "child"
+    assert cfg.n_vpus == 8                   # overridden
+    assert cfg.vregs_per_vpu == 8            # inherited through the merge
+    assert cfg.lanes == 2
+    assert cfg.memory_bytes == 65536
+
+
+def test_yaml_extends_builtin_and_cycle(tmp_path):
+    pytest.importorskip("yaml")
+    from repro.sim import ConfigError, load_config
+    cfg = load_config("arcane-8vpu")         # builtin extends builtin
+    assert cfg.n_vpus == 8 and cfg.lanes == 8
+    assert cfg.vregs_per_vpu == 32           # inherited from arcane-default
+    (tmp_path / "a.yaml").write_text("extends: b.yaml\n")
+    (tmp_path / "b.yaml").write_text("extends: a.yaml\n")
+    with pytest.raises(ConfigError, match="cyclic"):
+        load_config(str(tmp_path / "a.yaml"))
+    (tmp_path / "bad.yaml").write_text("cache: {warp_cores: 9}\n")
+    with pytest.raises(ConfigError, match="unknown key"):
+        load_config(str(tmp_path / "bad.yaml"))
+
+
+# ------------------------------------------------------------------ traces
+def test_trace_chrome_schema(tmp_path):
+    cop = make_cop("pipelined")
+    gemm_relu_pool_chain(cop, batch=1)
+    doc = cop.rt.tracer.to_chrome()
+    assert set(doc) >= {"traceEvents", "displayTimeUnit"}
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    complete = [e for e in events if e["ph"] == "X"]
+    assert complete, "no activities traced"
+    named_tids = {e["tid"] for e in meta if e["name"] == "thread_name"}
+    for e in complete:
+        assert set(e) >= {"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                          "args"}
+        assert e["cat"] in PHASES
+        assert e["ts"] >= 0 and e["dur"] >= 1
+        assert e["tid"] in named_tids
+    # all four phases appear in a full decode→alloc→compute→wb pipeline
+    assert {e["cat"] for e in complete} == set(PHASES)
+    out = cop.rt.tracer.dump(str(tmp_path / "trace.json"))
+    import json
+    with open(out) as f:
+        assert json.load(f) == doc
+
+
+def test_tracer_rejects_unknown_phase():
+    with pytest.raises(ValueError):
+        Tracer().emit("x", "mystery", "r", 0, 1)
+
+
+# -------------------------------------------------- runtime regression fixes
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_cross_vpu_consolidation_releases_at(scheduler, rng):
+    """Deferred result consumed via a cross-VPU move must release its DST
+    AddressTable registration (regression: stale region stalled host loads)."""
+    cop = make_cop(scheduler)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+    aT1, aT2 = cop.malloc(8 * 8 * 4), cop.malloc(8 * 8 * 4)
+    aO = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aB, 0, 8, 8)
+    cop._xmr_w(2, aT1, 0, 8, 8)
+    cop._xmr_w(3, aT2, 0, 8, 8)
+    cop._xmr_w(4, aO, 0, 8, 8)
+    cop._gemm_w(2, 0, 0, 0)                      # T1 = A@A   (VPU x)
+    cop._gemm_w(3, 1, 1, 1)                      # T2 = B@B   (VPU y)
+    cop._gemm_w(4, 2, 3, 2, alpha=1.0, beta=1.0)  # O = T1@T2 + T1
+    cop.barrier()
+    assert cop.rt.at.blocks_load(aT2, aT2 + 4) is None
+    assert cop.rt.at.live_count() == 0
+    T1 = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aT1, 8, 8, ElemWidth.W), T1)
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_rebound_deferred_result_not_written_back(scheduler, rng):
+    """WAW rebinding of the destination register: the superseded deferred
+    result must be discarded, not flushed over the newer kernel's output."""
+    cop = make_cop(scheduler)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aO = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aO, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)                      # m1 = A@A
+    cop._leakyrelu(ElemWidth.W, 1, 1, alpha=0.25)  # m1 = lrelu(m1): rebinds m1
+    cop.barrier()
+    T = (A.astype(np.int64) @ A.astype(np.int64))
+    ref = np.where(T >= 0, T, np.round(0.25 * T)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aO, 8, 8, ElemWidth.W), ref)
+    assert cop.rt.at.live_count() == 0
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_rebind_to_unrelated_buffer_keeps_deferred_result(scheduler, rng):
+    """Rebinding a register to a *non-aliasing* buffer must not discard the
+    deferred result — only a later aliasing writer supersedes it."""
+    cop = make_cop(scheduler)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aT = cop.malloc(8 * 8 * 4)
+    aR = cop.malloc(8 * 8 * 4)
+    aZ = cop.malloc(8 * 8 * 4)               # unrelated buffer
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aT, 0, 8, 8)
+    cop._xmr_w(2, aR, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)                  # m1 = A@A -> aT (deferred: read below)
+    cop._leakyrelu(ElemWidth.W, 2, 1, alpha=0.25)   # m2 = lrelu(m1) -> aR
+    cop._xmr_w(1, aZ, 0, 8, 8)               # metadata rebind of m1 -> aZ
+    cop.barrier()
+    T = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aT, 8, 8, ElemWidth.W), T)
+    ref = np.where(T >= 0, T, np.round(0.25 * T.astype(np.int64))).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aR, 8, 8, ElemWidth.W), ref)
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_partial_overlap_keeps_non_overlapped_bytes(scheduler, rng):
+    """A later kernel writing only *part* of a deferred result's region must
+    not lose the non-overlapped bytes: write-backs land in admission order
+    (regression: the whole deferred result was discarded on any overlap)."""
+    cop = make_cop(scheduler)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aT = cop.malloc(8 * 8 * 4)           # gemm result region [aT, aT+256)
+    aR = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aT, 0, 8, 8)
+    cop._xmr_w(2, aR, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)                        # m1 = A@A -> aT (deferred)
+    cop._leakyrelu(ElemWidth.W, 2, 1, alpha=0.25)  # consumer: defers m1
+    # later kernel overwrites only the second half of aT's region
+    cop._xmr_w(3, aT + 128, 0, 4, 8)
+    cop._xmr_w(4, aA, 0, 4, 8)                     # top 4 rows of A
+    cop._leakyrelu(ElemWidth.W, 3, 4, alpha=0.5)   # m3 = lrelu(A[:4]) -> aT+128
+    cop.barrier()
+    T = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    got = cop.gather(aT, 8, 8, ElemWidth.W)
+    np.testing.assert_array_equal(got[:4], T[:4])  # non-overlapped bytes live
+    A4 = A[:4].astype(np.int64)
+    newer = np.where(A4 >= 0, A4, np.round(0.5 * A4)).astype(np.int32)
+    np.testing.assert_array_equal(got[4:], newer)  # newer write wins overlap
+
+
+def test_repeated_operand_dispatches_on_tight_vpu():
+    """gemm(A, A) needs A's lines once; the capacity check must not count the
+    repeated operand twice and starve the event-loop dispatch (regression:
+    such kernels silently fell back to the untimed serial path)."""
+    # A: 16x16 int32 = 1024 B = 2 lines of 512 B; dst same. 5 vregs/VPU fit
+    # need(A) + need(dst) = 4 but not the double-counted 6.
+    cop = make_cop("pipelined", n_vpus=2, vregs_per_vpu=5, vlen_bytes=512)
+    rng = np.random.default_rng(2)
+    A = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aA, 0, 16, 16)
+    cop._xmr_w(1, aD, 0, 16, 16)
+    cop._gemm_w(1, 0, 0, 0)
+    cop.barrier()
+    ref = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 16, 16, ElemWidth.W), ref)
+    # dispatched through the event loop (the serial fallback emits no trace)
+    assert any(r.phase == "compute" for r in cop.rt.tracer.records)
+
+
+def test_strided_column_strips_do_not_alias():
+    from repro.core.matrix import MatrixMap
+    mm = MatrixMap()
+    left = mm.reserve(0, addr=0, rows=4, cols=2, stride=8, width=ElemWidth.W)
+    right = mm.reserve(1, addr=8, rows=4, cols=2, stride=8, width=ElemWidth.W)
+    dense = mm.reserve(2, addr=0, rows=4, cols=8, stride=8, width=ElemWidth.W)
+    assert not left.overlaps(right) and not right.overlaps(left)
+    assert left.overlaps(dense) and dense.overlaps(right)
+    shifted = mm.reserve(3, addr=4, rows=4, cols=2, stride=8,
+                         width=ElemWidth.W)
+    assert left.overlaps(shifted)                # byte bands intersect
