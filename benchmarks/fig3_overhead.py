@@ -15,11 +15,12 @@ from benchmarks.fig4_speedup import arcane_cycles
 
 
 def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
-        scheduler="serial"):
+        scheduler="serial", row_chunk=None):
     rows = []
     for ln in lanes:
         for n in sizes:
-            total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln, scheduler)
+            total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln, scheduler,
+                                          row_chunk)
             rows.append({"size": n, "lanes": ln, "cycles": total, **shares})
             if not quiet:
                 print(f"fig3,int32 3x3 {n}x{n} {ln}lane,{total},"
@@ -57,10 +58,15 @@ def main(argv=None):
                    help="C-RT scheduler; with 'pipelined' the cycles column "
                         "is the overlapped-schedule makespan (phase shares "
                         "stay on the sum-of-cycles basis)")
+    p.add_argument("--row-chunk", type=int, default=None,
+                   help="pipelined scheduler's rows-per-DMA-chunk "
+                        "granularity (0 disables intra-instruction "
+                        "pipelining; default: runtime builtin)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
-    rows = run(quiet=not args.verbose, scheduler=args.scheduler)
+    rows = run(quiet=not args.verbose, scheduler=args.scheduler,
+               row_chunk=args.row_chunk)
     for k, v in validate(rows).items():
         val = f"{v:.3f}" if isinstance(v, float) else v
         print(f"fig3_validate,{k},{val}")

@@ -82,7 +82,8 @@ def tiled_conv_layer(cop, width, aX, h, w, aF, k, aR):
 
 
 def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
-                  scheduler: str = "serial") -> tuple[int, dict]:
+                  scheduler: str = "serial",
+                  row_chunk: int | None = None) -> tuple[int, dict]:
     """Run the (strip-mined) xmk4 conv layer through the C-RT simulator;
     return total modeled cycles + phase split.
 
@@ -100,6 +101,8 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
     rt_kwargs = dict(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024, lanes=lanes)
     if scheduler == "pipelined":
         from repro.sim import PipelinedRuntime
+        if row_chunk is not None:
+            rt_kwargs["row_chunk"] = row_chunk
         cop = ArcaneCoprocessor(runtime=PipelinedRuntime(**rt_kwargs))
     elif scheduler == "serial":
         cop = ArcaneCoprocessor(memory=None, **rt_kwargs)
@@ -127,7 +130,7 @@ def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
 
 def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
         widths=(ElemWidth.B, ElemWidth.H, ElemWidth.W), quiet=False,
-        scheduler="serial"):
+        scheduler="serial", row_chunk=None):
     rows = []
     for width in widths:
         for k in filters:
@@ -138,7 +141,8 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                 scalar = scalar_cpu_cycles(cost, width)
                 simd = packed_simd_cycles(cost, width)
                 for ln in lanes:
-                    arc, shares = arcane_cycles(n, n, k, width, ln, scheduler)
+                    arc, shares = arcane_cycles(n, n, k, width, ln, scheduler,
+                                                row_chunk)
                     row = {
                         "width": width.suffix, "filter": k, "size": n,
                         "lanes": ln, "cycles": arc,
@@ -196,30 +200,69 @@ def validate(rows) -> dict:
 
 def main(argv=None):
     import argparse
+    import json
     p = argparse.ArgumentParser(description="Fig. 4 reproduction benchmark")
     p.add_argument("--scheduler", choices=("serial", "pipelined"),
                    default="serial",
                    help="C-RT scheduler: the original serial loop or the "
                         "repro.sim event-driven pipelined one (also reports "
                         "the modeled concurrency speedup vs serial)")
+    p.add_argument("--row-chunk", type=int, default=None,
+                   help="intra-instruction pipelining granularity of the "
+                        "pipelined scheduler (rows per DMA chunk; 0 disables "
+                        "chunking; default: the runtime's builtin default)")
+    p.add_argument("--sizes", type=int, nargs="+",
+                   default=(16, 32, 64, 128, 256),
+                   help="square input sizes to sweep")
+    p.add_argument("--filters", type=int, nargs="+", default=(3, 5, 7),
+                   help="filter sizes to sweep")
+    p.add_argument("--lanes", type=int, nargs="+", default=(2, 4, 8),
+                   help="VPU lane counts to sweep")
+    p.add_argument("--widths", nargs="+", choices=("b", "h", "w"),
+                   default=("b", "h", "w"),
+                   help="element widths to sweep (int8/int16/int32)")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write rows + concurrency summary as JSON "
+                        "(the CI BENCH_pipeline.json artifact)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
 
-    rows = run(quiet=not args.verbose, scheduler=args.scheduler)
+    width_of = {"b": ElemWidth.B, "h": ElemWidth.H, "w": ElemWidth.W}
+    rows = run(sizes=tuple(args.sizes), filters=tuple(args.filters),
+               lanes=tuple(args.lanes),
+               widths=tuple(width_of[w] for w in args.widths),
+               quiet=not args.verbose, scheduler=args.scheduler,
+               row_chunk=args.row_chunk)
+    summary = None
     if args.scheduler == "pipelined":
         speedups = [r["concurrency_speedup"] for r in rows]
-        print(f"fig4_pipelined,points,{len(rows)}")
-        print(f"fig4_pipelined,concurrency_speedup_max,{max(speedups):.2f}")
+        summary = {
+            "points": len(rows),
+            "concurrency_speedup_min": min(speedups),
+            "concurrency_speedup_mean": sum(speedups) / len(speedups),
+            "concurrency_speedup_max": max(speedups),
+        }
+        print(f"fig4_pipelined,points,{summary['points']}")
+        print(f"fig4_pipelined,concurrency_speedup_max,"
+              f"{summary['concurrency_speedup_max']:.2f}")
         print(f"fig4_pipelined,concurrency_speedup_mean,"
-              f"{sum(speedups) / len(speedups):.2f}")
+              f"{summary['concurrency_speedup_mean']:.2f}")
         assert all(r["cycles"] <= r["serial_cycles"] for r in rows), \
             "pipelined makespan exceeded the serial schedule"
-        return rows, None
-    res = validate(rows)
-    for k, v in res.items():
-        val = f"{v:.1f}" if isinstance(v, float) else v
-        print(f"fig4_validate,{k},{val}")
+        res = None
+    else:
+        res = validate(rows)
+        for k, v in res.items():
+            val = f"{v:.1f}" if isinstance(v, float) else v
+            print(f"fig4_validate,{k},{val}")
+    if args.out_json:
+        doc = {"benchmark": "fig4_speedup", "scheduler": args.scheduler,
+               "row_chunk": args.row_chunk, "rows": rows,
+               "summary": summary, "validate": res}
+        with open(args.out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"fig4,wrote,{args.out_json}")
     return rows, res
 
 

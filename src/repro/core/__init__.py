@@ -11,6 +11,7 @@ from repro.core.encoding import (ElemWidth, InstrWord, Offload, Operands,
 from repro.core.isa import (KernelCost, KernelDef, KernelError, KernelLibrary,
                             KernelSpec, default_library, fx_encode)
 from repro.core.matrix import MatrixBinding, MatrixMap, np_dtype
+from repro.core.regions import StridedRegion, footprints_overlap
 from repro.core.cache import (ArcaneCache, CacheLocked, LineBusy, MainMemory,
                               ResourceStall)
 from repro.core.address_table import AddressTable, RegionKind, RegionStatus
@@ -24,7 +25,8 @@ __all__ = [
     "IllegalInstruction", "OPCODE_CUSTOM2", "XMR_FUNC5", "NUM_XMK",
     "NUM_MATRIX_REGS", "KernelCost", "KernelDef", "KernelError",
     "KernelLibrary", "KernelSpec", "default_library", "fx_encode",
-    "MatrixBinding", "MatrixMap", "np_dtype", "ArcaneCache", "CacheLocked",
+    "MatrixBinding", "MatrixMap", "np_dtype", "StridedRegion",
+    "footprints_overlap", "ArcaneCache", "CacheLocked",
     "LineBusy", "MainMemory", "ResourceStall", "AddressTable", "RegionKind",
     "RegionStatus", "DependencyTracker", "KernelDeps", "CacheRuntime",
     "PhaseStats", "VPU", "VPUGeometry", "ResidentMatrix", "ArcaneCoprocessor",

@@ -1,16 +1,22 @@
 """Address Table (AT) — kernel operand state tracking (paper §III-A3).
 
-Each entry holds the start/end byte addresses of a kernel operand, a validity
-flag and a status flag, plus whether the region is a kernel *source* or
-*destination*. The Kernel Decoder registers regions when an operation is
-queued; the cache controller consults the AT on critical accesses and stalls
-only the requests that would corrupt an in-flight kernel:
+Each entry holds the *exact 2D footprint* of a kernel operand (a
+:class:`~repro.core.regions.StridedRegion`), a validity flag and a status
+flag, plus whether the region is a kernel *source* or *destination*. The
+Kernel Decoder registers regions when an operation is queued; the cache
+controller consults the AT on critical accesses and stalls only the requests
+that would corrupt an in-flight kernel:
 
 - host STORE into a live *source* region  → WAR hazard → stall until the
   operand has been allocated (copied) into VPU lines;
 - host LOAD  from a live *destination*    → RAW hazard → stall until kernel
   write-back completes;
 - host STORE into a live *destination*    → WAW hazard → stall likewise.
+
+Because entries carry the strided footprint rather than its bounding byte
+interval, a host access that lands in the *gap* between two strided rows of
+an operand (e.g. the untouched columns beside a conv strip) does not stall —
+the check is exact, not conservative.
 
 Entries are reference-counted per physical binding so that renamed matrices
 (same logical register, different physical tags) track independently.
@@ -20,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 from typing import Iterator, Optional
+
+from repro.core.regions import StridedRegion
 
 
 class RegionKind(enum.Enum):
@@ -35,16 +43,24 @@ class RegionStatus(enum.Enum):
 
 @dataclasses.dataclass
 class ATEntry:
-    start: int
-    end: int                      # one past last byte
+    region: StridedRegion
     kind: RegionKind
     status: RegionStatus = RegionStatus.BUSY
     valid: bool = True
     phys_id: int = -1             # owning physical matrix binding
     refcount: int = 1             # pending kernels still referencing the region
 
+    @property
+    def start(self) -> int:
+        return self.region.start
+
+    @property
+    def end(self) -> int:         # one past last byte of the bounding interval
+        return self.region.end
+
     def overlaps(self, start: int, end: int) -> bool:
-        return self.valid and self.start < end and start < self.end
+        """Exact strided-footprint check against flat interval [start, end)."""
+        return self.valid and self.region.overlaps_interval(start, end)
 
 
 class AddressTable:
@@ -63,14 +79,15 @@ class AddressTable:
                 return i
         raise RuntimeError("Address Table full — raise capacity in config")
 
-    def register(self, start: int, end: int, kind: RegionKind, phys_id: int) -> ATEntry:
+    def register(self, region: StridedRegion, kind: RegionKind,
+                 phys_id: int) -> ATEntry:
         """Register (or up-ref) an operand region for a queued kernel."""
         for e in self:
             if e.phys_id == phys_id and e.kind == kind:
                 e.refcount += 1
                 e.status = RegionStatus.BUSY
                 return e
-        entry = ATEntry(start=start, end=end, kind=kind, phys_id=phys_id)
+        entry = ATEntry(region=region, kind=kind, phys_id=phys_id)
         self._entries[self._free_slot()] = entry
         return entry
 

@@ -11,6 +11,17 @@ then vanish by construction; only true RAW dependencies between kernels remain,
 and those are expressed as edges in a dependency DAG used by both the simulator
 scheduler and the trace-time production engine (buffer-donation ordering).
 
+Memory-aliasing edges between distinct physical bindings are decided with the
+*exact* 2D region algebra (:mod:`repro.core.regions`, via
+:meth:`MatrixBinding.overlaps`): unequal-stride interleavings that never share
+a byte produce no edge, so strip-mined workloads schedule concurrently.
+
+Tracker state is bounded: when a kernel completes, every per-binding record
+(last writer, reader set, captured binding) whose physical id is no longer
+referenced by a pending kernel — and not *pinned* by the runtime for a
+deferred cache-resident result — is pruned, so long-running programs see
+O(live) admission cost and memory, not O(history).
+
 Host-side hazards against main memory regions are handled by the
 :class:`repro.core.address_table.AddressTable`; this module covers
 kernel↔kernel dependencies.
@@ -42,16 +53,19 @@ class DependencyTracker:
         a program reuses a destination register without re-reserving it —
         renaming only happens at ``xmr``) — kept as WAW/WAR edges;
       * memory aliasing — distinct physical bindings whose main-memory
-        footprints overlap (the AT-level view of the same hazard).
+        footprints overlap (the AT-level view of the same hazard), decided
+        exactly by the 2D region algebra.
     """
 
     def __init__(self):
-        self._completed: set[int] = set()
         self._pending: dict[int, KernelDeps] = {}
         self._writer_of: dict[int, int] = {}   # phys_id -> kernel_id (last writer)
         self._readers_of: dict[int, set[int]] = {}
         self._bindings: dict[int, MatrixBinding] = {}
+        self._refs: dict[int, int] = {}        # phys_id -> pending kernels using it
+        self._pinned: set[int] = set()         # runtime-held (cache-resident) ids
         self._next_kernel_id = 0
+        self._completed_count = 0
 
     # ------------------------------------------------------------------ api
     def admit(
@@ -69,19 +83,21 @@ class DependencyTracker:
         # RAW: read a pending kernel's destination.
         for src in sources:
             w = self._writer_of.get(src.phys_id)
-            if w is not None and w not in self._completed:
+            if w is not None and w in self._pending:
                 deps.add(w)
         # WAW: same physical destination written twice without renaming.
         w = self._writer_of.get(destination.phys_id)
-        if w is not None and w not in self._completed:
+        if w is not None and w in self._pending:
             deps.add(w)
         # WAR: we overwrite something a pending kernel still reads.
         for r in self._readers_of.get(destination.phys_id, ()):
-            if r not in self._completed:
+            if r in self._pending:
                 deps.add(r)
-        # Memory aliasing between distinct physical bindings (footprint overlap).
-        for other_pid, writer in list(self._writer_of.items()):
-            if writer in self._completed or other_pid == destination.phys_id:
+        # Memory aliasing between distinct physical bindings (exact 2D
+        # footprint intersection). The sweep is bounded: completed writers
+        # whose bindings no pending kernel references are pruned.
+        for other_pid, writer in self._writer_of.items():
+            if writer not in self._pending or other_pid == destination.phys_id:
                 continue
             other = self._bindings[other_pid]
             if other.overlaps(destination) or any(s.overlaps(other) for s in sources):
@@ -97,6 +113,8 @@ class DependencyTracker:
         self._writer_of[destination.phys_id] = kid
         for s in sources:
             self._readers_of.setdefault(s.phys_id, set()).add(kid)
+        for pid in {*rec.sources, rec.destination}:
+            self._refs[pid] = self._refs.get(pid, 0) + 1
         return rec
 
     def binding(self, phys_id: int) -> Optional[MatrixBinding]:
@@ -110,17 +128,57 @@ class DependencyTracker:
 
     def ready(self, kernel_id: int) -> bool:
         rec = self._pending[kernel_id]
-        return all(d in self._completed for d in rec.depends_on)
+        # A dependency is satisfied iff it is no longer pending: kernel ids
+        # are admitted once and only leave via complete().
+        return all(d not in self._pending for d in rec.depends_on)
 
     def runnable(self) -> list[int]:
         return [k for k in self._pending if self.ready(k)]
 
     def complete(self, kernel_id: int) -> None:
-        self._pending.pop(kernel_id)
-        self._completed.add(kernel_id)
+        rec = self._pending.pop(kernel_id)
+        self._completed_count += 1
+        for pid in {*rec.sources, rec.destination}:
+            readers = self._readers_of.get(pid)
+            if readers is not None:
+                readers.discard(kernel_id)
+            self._refs[pid] -= 1
+            self._maybe_prune(pid)
 
+    # ------------------------------------------------------ residency pins
+    def pin(self, phys_id: int) -> None:
+        """Runtime holds a cache-resident result for ``phys_id``: keep its
+        binding and write-order stamp alive past the writer's completion
+        (deferred write-backs replay admission order via ``writer_of``)."""
+        self._pinned.add(phys_id)
+
+    def unpin(self, phys_id: int) -> None:
+        """Residency dropped — prune the records if nothing pending uses them."""
+        self._pinned.discard(phys_id)
+        self._maybe_prune(phys_id)
+
+    def _maybe_prune(self, phys_id: int) -> None:
+        if self._refs.get(phys_id, 0) > 0 or phys_id in self._pinned:
+            return
+        w = self._writer_of.get(phys_id)
+        if w is not None and w in self._pending:
+            return
+        self._refs.pop(phys_id, None)
+        self._writer_of.pop(phys_id, None)
+        self._readers_of.pop(phys_id, None)
+        self._bindings.pop(phys_id, None)
+
+    # ------------------------------------------------------------- introspect
     def pending_count(self) -> int:
         return len(self._pending)
+
+    def completed_count(self) -> int:
+        return self._completed_count
+
+    def tracked_state_size(self) -> int:
+        """Entries held across all per-binding maps (bounded-growth metric)."""
+        return (len(self._writer_of) + len(self._bindings) + len(self._refs)
+                + sum(len(s) for s in self._readers_of.values()))
 
     def has_cycle(self) -> bool:
         """DAG invariant (property-tested): admission can never create a cycle

@@ -13,12 +13,14 @@ way register renaming does in an OoO core.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Optional
 
 import numpy as np
 
 from repro.core.encoding import ElemWidth, NUM_MATRIX_REGS
+from repro.core.regions import StridedRegion
 
 _WIDTH_TO_NP = {
     ElemWidth.W: np.int32,
@@ -81,29 +83,33 @@ class MatrixBinding:
     def shape(self) -> tuple[int, int]:
         return (self.rows, self.cols)
 
-    def overlaps(self, other: "MatrixBinding") -> bool:
-        """True if the two strided 2D footprints can share a byte.
+    @functools.cached_property
+    def region(self) -> StridedRegion:
+        """Exact 2D byte footprint of this binding in main memory.
 
-        Interval intersection is necessary but not sufficient: two column
-        strips of the same row-major array (equal strides, disjoint column
-        byte-bands within the stride period) interleave in the flat address
-        space without aliasing — the case the strip-mined conv tiling emits.
+        Cached: bindings are frozen, and ``overlaps`` sits in the admission
+        and dispatch sweeps (``cached_property`` writes the instance dict
+        directly, which frozen dataclasses permit)."""
+        return StridedRegion(addr=self.addr, rows=self.rows,
+                             row_bytes=self.row_bytes,
+                             stride_bytes=self.stride_bytes)
+
+    def overlaps(self, other: "MatrixBinding") -> bool:
+        """Exact: True iff the two strided 2D footprints share a byte.
+
+        Interval intersection is necessary but not sufficient: column strips
+        of the same row-major array interleave in the flat address space
+        without aliasing — the case the strip-mined conv tiling emits.
         Treating those as overlapping would serialize every strip through
-        false WAW edges, so the period test below refines the check exactly
-        when it is provably safe (neither band wraps the period).
+        false WAW edges, so the decision is delegated to the exact
+        region algebra (:mod:`repro.core.regions`), which also handles
+        unequal strides and bands that wrap the stride period.
         """
-        if self.start >= other.end or other.start >= self.end:
-            return False
-        s = self.stride_bytes
-        if s == other.stride_bytes and s > 0:
-            a0, b0 = self.start % s, other.start % s
-            a1, b1 = a0 + self.row_bytes, b0 + other.row_bytes
-            if a1 <= s and b1 <= s and (a1 <= b0 or b1 <= a0):
-                return False
-        return True
+        return self.region.overlaps(other.region)
 
     def overlaps_range(self, start: int, end: int) -> bool:
-        return self.start < end and start < self.end
+        """Exact: True iff the footprint touches flat interval [start, end)."""
+        return self.region.overlaps_interval(start, end)
 
 
 class MatrixMap:

@@ -1,0 +1,154 @@
+"""Exact 2D strided-region algebra for aliasing decisions.
+
+A kernel operand's main-memory footprint is a *strided band*: ``rows`` row
+segments of ``row_bytes`` bytes whose starts form the arithmetic progression
+``addr + i * stride_bytes``. Hazard tracking needs one question answered
+exactly: can two such footprints share a byte?
+
+Interval intersection of the bounding ranges is necessary but far from
+sufficient — two column strips of the same row-major array interleave in the
+flat address space without ever touching the same byte, and treating them as
+aliases serializes every strip of a strip-mined conv/GEMM through false
+WAW/WAR edges. The previous refinement handled only the equal-stride,
+non-wrapping case; this module decides the general problem exactly:
+
+Two row segments ``[x, x + ra)`` and ``[y, y + rb)`` intersect iff
+``-(rb - 1) <= y - x <= ra - 1``. With ``x = a.addr + i * sa`` and
+``y = b.addr + j * sb`` the footprints alias iff some
+
+    t(i, j) = (b.addr - a.addr) + j * sb - i * sa,   0 <= i < a.rows,
+                                                     0 <= j < b.rows
+
+falls in the window ``[-(rb - 1), ra - 1]``. Unbounded, ``t`` ranges over a
+single residue class mod ``gcd(sa, sb)`` — a cheap necessary condition — and
+the bounded decision reduces to, per row of the shorter operand, one integer
+interval division. Everything is O(min(rows, rows)) worst case with O(1)
+fast paths for the common equal-stride and single-row shapes; no footprint
+is ever enumerated byte by byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class StridedRegion:
+    """One 2D strided byte footprint: ``rows`` segments of ``row_bytes``
+    starting at ``addr + i * stride_bytes``.
+
+    ``stride_bytes`` may be smaller than ``row_bytes`` (self-overlapping
+    rows) — the algebra does not assume non-wrapping bands.
+    """
+
+    addr: int
+    rows: int
+    row_bytes: int
+    stride_bytes: int
+
+    def __post_init__(self):
+        if self.rows <= 0:
+            raise ValueError(f"rows must be positive, got {self.rows}")
+        if self.row_bytes <= 0:
+            raise ValueError(f"row_bytes must be positive, got {self.row_bytes}")
+        if self.rows > 1 and self.stride_bytes <= 0:
+            raise ValueError(
+                f"stride_bytes must be positive for multi-row regions, "
+                f"got {self.stride_bytes}")
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def start(self) -> int:
+        return self.addr
+
+    @property
+    def end(self) -> int:
+        """One past the last byte touched."""
+        return self.addr + (self.rows - 1) * max(self.stride_bytes, 0) \
+            + self.row_bytes
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes of payload moved (rows may self-overlap in memory)."""
+        return self.rows * self.row_bytes
+
+    def row_interval(self, i: int) -> tuple[int, int]:
+        """``[start, end)`` of row ``i``."""
+        if not 0 <= i < self.rows:
+            raise IndexError(f"row {i} out of range [0, {self.rows})")
+        s = self.addr + i * self.stride_bytes
+        return s, s + self.row_bytes
+
+    # -------------------------------------------------------------- algebra
+    def overlaps_interval(self, start: int, end: int) -> bool:
+        """Exact test against a flat byte interval ``[start, end)``."""
+        if end <= start:
+            return False
+        return self.overlaps(StridedRegion(addr=start, rows=1,
+                                           row_bytes=end - start,
+                                           stride_bytes=end - start))
+
+    def overlaps(self, other: "StridedRegion") -> bool:
+        """True iff the two footprints share at least one byte. Exact."""
+        # Bounding-interval reject (also the exact answer when both are
+        # single rows, since then footprint == bounding interval).
+        if self.start >= other.end or other.start >= self.end:
+            return False
+        if self.rows == 1 and other.rows == 1:
+            return True
+
+        c = other.addr - self.addr
+        sa, sb = self.stride_bytes, other.stride_bytes
+        lo, hi = -(other.row_bytes - 1), self.row_bytes - 1
+
+        # Single-row operands degenerate to a 1D progression-vs-interval test.
+        if self.rows == 1:
+            return _progression_hits(sb, other.rows, lo - c, hi - c)
+        if other.rows == 1:
+            return _progression_hits(sa, self.rows, c - hi, c - lo)
+
+        # Equal strides: t = c + (j - i) * s with j - i in
+        # [-(rows_a - 1), rows_b - 1] — one O(1) division.
+        if sa == sb:
+            k_lo, k_hi = -(self.rows - 1), other.rows - 1
+            j_lo = max(k_lo, _ceil_div(lo - c, sa))
+            return j_lo <= k_hi and j_lo * sa <= hi - c
+
+        # Residue fast-reject: every t is ≡ c (mod gcd); if no member of
+        # that class lands in the window, the bounded sets can't either.
+        g = math.gcd(sa, sb)
+        if g > 1 and lo + ((c - lo) % g) > hi:
+            return False
+
+        # Exact bounded decision: sweep the shorter operand's rows, answer
+        # each row with one interval division on the other progression.
+        if self.rows <= other.rows:
+            for i in range(self.rows):
+                base = i * sa - c
+                if _progression_hits(sb, other.rows, base + lo, base + hi):
+                    return True
+        else:
+            for j in range(other.rows):
+                base = j * sb + c
+                if _progression_hits(sa, self.rows, base - hi, base - lo):
+                    return True
+        return False
+
+def _ceil_div(a: int, b: int) -> int:
+    return -((-a) // b)
+
+
+def _progression_hits(step: int, count: int, lo: int, hi: int) -> bool:
+    """Does ``{k * step : 0 <= k < count}`` intersect ``[lo, hi]``?"""
+    if hi < lo:
+        return False
+    k_lo = max(0, _ceil_div(lo, step))
+    return k_lo < count and k_lo * step <= hi
+
+
+def footprints_overlap(a_addr: int, a_rows: int, a_row_bytes: int,
+                       a_stride: int, b_addr: int, b_rows: int,
+                       b_row_bytes: int, b_stride: int) -> bool:
+    """Functional form of :meth:`StridedRegion.overlaps`."""
+    return StridedRegion(a_addr, a_rows, a_row_bytes, a_stride).overlaps(
+        StridedRegion(b_addr, b_rows, b_row_bytes, b_stride))

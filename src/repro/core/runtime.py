@@ -75,6 +75,23 @@ class QueuedKernel:
     dst_binding: MatrixBinding
 
 
+@dataclasses.dataclass
+class Allocation:
+    """Result of the Matrix Allocator step for one kernel.
+
+    ``dma_segments`` records each memory→VPU source transfer as
+    ``(rows, dma_cycles)`` — the pipelined scheduler chunks these into
+    row-granular activities; the serial scheduler only uses the totals.
+    """
+
+    src_res: list[ResidentMatrix]
+    dst_res: ResidentMatrix
+    dma_cycles: int
+    wb_cycles: int
+    dma_segments: list[tuple[int, int]]      # (rows, cycles) per source DMA-in
+    wb_segments: list[tuple[int, int]]       # (vpu, cycles) per consolidation
+
+
 class CacheRuntime:
     """The C-RT instance owning one ARCANE LLC."""
 
@@ -95,7 +112,8 @@ class CacheRuntime:
         self.cache = ArcaneCache(self.memory, n_vpus=n_vpus,
                                  vregs_per_vpu=vregs_per_vpu,
                                  vlen_bytes=vlen_bytes)
-        self.geometry = geometry or VPUGeometry(lanes=lanes)
+        self.geometry = geometry or VPUGeometry(lanes=lanes,
+                                                vlen_bytes=vlen_bytes)
         self.library = library or default_library()
         self.vpus = [VPU(i, self.cache, self.geometry, self.library)
                      for i in range(n_vpus)]
@@ -106,6 +124,10 @@ class CacheRuntime:
         self.queue: deque[QueuedKernel] = deque()
         self.resident: dict[int, ResidentMatrix] = {}   # phys_id -> residency
         self.stats = PhaseStats()
+        # When set (by a scheduler wanting per-port timing), every
+        # consolidation DMA appends (vpu, cycles) here — the transfer runs on
+        # the port of the VPU *holding* the resident, not the dispatch VPU.
+        self._wb_segments: Optional[list[tuple[int, int]]] = None
 
     # ================================================================ decoder
     def decode(self, off: Offload) -> None:
@@ -157,8 +179,8 @@ class CacheRuntime:
                           dst_shape=dst_shape, params=params, cost=cost)
         deps = self.tracker.admit(srcs, dst)
         for s in srcs:
-            self.at.register(s.start, s.end, RegionKind.SRC, s.phys_id)
-        self.at.register(dst.start, dst.end, RegionKind.DST, dst.phys_id)
+            self.at.register(s.region, RegionKind.SRC, s.phys_id)
+        self.at.register(dst.region, RegionKind.DST, dst.phys_id)
         self.queue.append(QueuedKernel(deps=deps, spec=spec,
                                        src_bindings=tuple(srcs), dst_binding=dst))
         self.stats.preamble_cycles += self.geometry.decode_cycles
@@ -167,7 +189,16 @@ class CacheRuntime:
     @staticmethod
     def _xmr_stride(ops) -> int:
         # Table I: A.stride is in elements; 0 means dense (stride = cols).
-        return ops.xmr_stride if ops.xmr_stride >= ops.xmr_cols else ops.xmr_cols
+        # A nonzero stride below cols would make rows overlap in memory —
+        # reject it instead of silently clamping to dense (the clamp changed
+        # which bytes the program addressed without telling anyone).
+        if ops.xmr_stride == 0:
+            return ops.xmr_cols
+        if ops.xmr_stride < ops.xmr_cols:
+            raise KernelError(
+                f"xmr: stride {ops.xmr_stride} < cols {ops.xmr_cols} "
+                f"(Table I: stride is in elements; 0 means dense)")
+        return ops.xmr_stride
 
     # ============================================================== scheduler
     def _select_vpu(self, needed_lines: int) -> int:
@@ -203,20 +234,22 @@ class CacheRuntime:
         vpu = self.vpus[self._choose_vpu(qk)]
 
         # -------------------------------------------------- allocation phase
-        src_res, dst_res, dma_cycles, wb_cycles = self._allocation_step(qk, vpu)
-        self.stats.allocation_cycles += self.geometry.schedule_cycles + dma_cycles
-        self.stats.writeback_cycles += wb_cycles
+        alloc = self._allocation_step(qk, vpu)
+        self.stats.allocation_cycles += (self.geometry.schedule_cycles
+                                         + alloc.dma_cycles)
+        self.stats.writeback_cycles += alloc.wb_cycles
         self.stats.allocation_s += time.perf_counter() - t0
 
         # ----------------------------------------------------- compute phase
         t1 = time.perf_counter()
-        cycles = self._compute_step(qk, vpu, src_res, dst_res)
+        cycles = self._compute_step(qk, vpu, alloc.src_res, alloc.dst_res)
         self.stats.compute_cycles += cycles
         self.stats.compute_s += time.perf_counter() - t1
 
         # --------------------------------------------------- writeback phase
         t2 = time.perf_counter()
-        self.stats.writeback_cycles += self._retire_step(qk, src_res, dst_res)
+        self.stats.writeback_cycles += self._retire_step(qk, alloc.src_res,
+                                                         alloc.dst_res)
         self.stats.writeback_s += time.perf_counter() - t2
         self.stats.kernels_run += 1
 
@@ -237,17 +270,18 @@ class CacheRuntime:
             self.vpus[0].lines_needed(*s.shape, s.width) for s in qk.src_bindings
         ) + self.vpus[0].lines_needed(*qk.dst_binding.shape, qk.dst_binding.width)
 
-    def _allocation_step(
-        self, qk: QueuedKernel, vpu: VPU
-    ) -> tuple[list[ResidentMatrix], ResidentMatrix, int, int]:
+    def _allocation_step(self, qk: QueuedKernel, vpu: VPU) -> Allocation:
         """Matrix Allocator: lock, claim vregs, 2D-DMA the operands in.
 
-        Returns ``(src_res, dst_res, dma_cycles, consolidation_wb_cycles)``;
-        the caller attributes the cycles (allocation vs writeback phase).
+        Returns an :class:`Allocation`; the caller attributes the cycles
+        (allocation vs writeback phase) and may re-chunk ``dma_segments``
+        into row-granular timing activities.
         """
         if not self.cache.acquire_lock():
             raise RuntimeError("cache lock already held")
         dma_cycles = wb_cycles = 0
+        segments: list[tuple[int, int]] = []
+        self._wb_segments = wb_segments = []
         try:
             src_res = []
             for s in qk.src_bindings:
@@ -255,11 +289,16 @@ class CacheRuntime:
                 src_res.append(res)
                 dma_cycles += dma_c
                 wb_cycles += wb_c
+                if dma_c:
+                    segments.append((s.rows, dma_c))
                 self.at.mark_allocated(s.phys_id)
             dst_res = self._allocate_destination(vpu, qk.dst_binding)
         finally:
             self.cache.release_lock()
-        return src_res, dst_res, dma_cycles, wb_cycles
+            self._wb_segments = None
+        return Allocation(src_res=src_res, dst_res=dst_res,
+                          dma_cycles=dma_cycles, wb_cycles=wb_cycles,
+                          dma_segments=segments, wb_segments=wb_segments)
 
     def _compute_step(self, qk: QueuedKernel, vpu: VPU,
                       src_res: list[ResidentMatrix],
@@ -296,6 +335,9 @@ class CacheRuntime:
         res = ResidentMatrix(phys_id=b.phys_id, vpu=vpu.index, line_idxs=idxs,
                              rows=b.rows, cols=b.cols, width=b.width)
         self.resident[b.phys_id] = res
+        # Residency pins the tracker's binding + write-order stamp: deferred
+        # results need both after their writer completes (bounded-state prune).
+        self.tracker.pin(b.phys_id)
         return res
 
     def _allocate_source(
@@ -305,19 +347,30 @@ class CacheRuntime:
         wb_cycles = 0
         res = self.resident.get(b.phys_id)
         if res is not None:
+            # A deferred result from a *newer* aliasing writer supersedes
+            # this copy's bytes: land it first (the landing invalidates the
+            # stale copy, and we fall through to a fresh fetch).
+            wb_cycles += self._land_newer_aliases(b)
+            res = self.resident.get(b.phys_id)
+        if res is not None:
             if res.vpu != vpu.index:
                 # Deferred result lives on another VPU: consolidate through
                 # memory, then load here (cross-VPU move). The consolidation
                 # is the deferred write-back landing, so the DST region it
                 # guarded is released here (host RAW window closes).
                 was_dirty = res.dirty
-                wb_cycles = (self._flush_older_aliases(b)
-                             + self._writeback_resident(b, res))
+                wb_cycles += (self._flush_older_aliases(b)
+                              + self._writeback_resident(b, res))
                 if was_dirty:
                     self.at.release(b.phys_id, RegionKind.DST)
                 res = None
             else:
                 return res, 0, wb_cycles
+        # The DMA below reads main memory: any *dirty* deferred resident
+        # whose footprint overlaps this source must land first, or the read
+        # observes pre-kernel bytes (the reader's RAW edge only orders it
+        # after the writer *completed* — not after its deferred write-back).
+        wb_cycles += self._flush_aliased_dirty(b)
         res = self._claim(vpu, b)
         nbytes = self.cache.dma_in_2d(
             vpu.index, res.line_idxs, b.addr, b.rows, b.row_bytes, b.stride_bytes)
@@ -338,19 +391,79 @@ class CacheRuntime:
     def _consolidate_resident(self, b: MatrixBinding,
                               res: ResidentMatrix) -> int:
         """Write a dirty resident's data to memory *without* evicting it
-        (the residency stays for future readers); returns DMA cycles."""
+        (the residency stays for future readers); returns DMA cycles.
+
+        Landing invalidates stale copies: any *other* clean resident whose
+        footprint overlaps the bytes just written holds pre-landing data —
+        it is evicted so the next reader re-fetches the fresh union."""
         if not res.dirty:
             return 0
         nbytes = self.cache.dma_out_2d(
             res.vpu, res.line_idxs, b.addr, b.rows, b.row_bytes, b.stride_bytes)
         res.dirty = False
-        return self.geometry.dma_cycles(nbytes, b.rows)
+        for pid in list(self.resident):
+            r = self.resident.get(pid)
+            if r is None or r.dirty or pid == b.phys_id:
+                continue
+            if self._binding_of(pid).overlaps(b):
+                self._evict_resident(pid)
+        cycles = self.geometry.dma_cycles(nbytes, b.rows)
+        if self._wb_segments is not None:
+            self._wb_segments.append((res.vpu, cycles))
+        return cycles
 
     def _writeback_resident(self, b: MatrixBinding, res: ResidentMatrix) -> int:
         """Consolidate a resident matrix back to memory; returns DMA cycles."""
         cycles = self._consolidate_resident(b, res)
         self._evict_resident(b.phys_id)
         return cycles
+
+    def _aliased_dirty(self, b: MatrixBinding,
+                       newer_than: Optional[int] = None
+                       ) -> list[tuple[int, int, MatrixBinding]]:
+        """Dirty residents (≠ ``b``) overlapping ``b``, as sorted
+        ``(writer_id, phys_id, binding)`` — admission (writer) order."""
+        out = []
+        for phys_id, res in self.resident.items():
+            if phys_id == b.phys_id or not res.dirty:
+                continue
+            w = self.tracker.writer_of(phys_id)
+            w = w if w is not None else -1
+            if newer_than is not None and w <= newer_than:
+                continue
+            other = self._binding_of(phys_id)
+            if other.overlaps(b):
+                out.append((w, phys_id, other))
+        return sorted(out)
+
+    def _land_aliased(self, items) -> int:
+        """Land the given dirty residents in admission order, each preceded
+        by its own older overlapping aliases (write-order discipline).
+        Residents stay in place, clean, for their own pending readers; DST
+        regions are released (the data is in memory now). Returns DMA
+        cycles."""
+        cycles = 0
+        for _, phys_id, other in items:
+            res = self.resident.get(phys_id)
+            if res is None or not res.dirty:
+                continue                         # landed by an earlier flush
+            cycles += (self._flush_older_aliases(other)
+                       + self._consolidate_resident(other, res))
+            self.at.release(phys_id, RegionKind.DST)
+        return cycles
+
+    def _flush_aliased_dirty(self, b: MatrixBinding) -> int:
+        """Land every dirty resident overlapping ``b`` before ``b``'s bytes
+        are *read* from memory, so the read observes all deferred results."""
+        return self._land_aliased(self._aliased_dirty(b))
+
+    def _land_newer_aliases(self, b: MatrixBinding) -> int:
+        """``b`` has a resident copy; deferred results from writers admitted
+        *after* ``b``'s supersede its bytes — land them (the landing evicts
+        the now-stale copy) so the reader re-fetches the fresh union."""
+        my_w = self.tracker.writer_of(b.phys_id)
+        return self._land_aliased(
+            self._aliased_dirty(b, newer_than=my_w if my_w is not None else -1))
 
     def _flush_older_aliases(self, b: MatrixBinding) -> int:
         """Enforce admission-order memory write-backs: before ``b``'s data
@@ -366,8 +479,8 @@ class CacheRuntime:
             return 0
         cycles = 0
         for phys_id in list(self.resident):
-            res = self.resident[phys_id]
-            if phys_id == b.phys_id or not res.dirty:
+            res = self.resident.get(phys_id)
+            if res is None or phys_id == b.phys_id or not res.dirty:
                 continue
             w = self.tracker.writer_of(phys_id)
             if w is None or w >= my_writer:
@@ -383,6 +496,7 @@ class CacheRuntime:
         res = self.resident.pop(phys_id, None)
         if res is not None:
             self.cache.release_vregs(res.line_idxs)
+            self.tracker.unpin(phys_id)
 
     # ================================================================= barrier
     def barrier(self) -> None:
@@ -391,7 +505,9 @@ class CacheRuntime:
         if self.queue:
             raise RuntimeError("kernel queue not drained — dependency deadlock?")
         for phys_id in list(self.resident):
-            res = self.resident[phys_id]
+            res = self.resident.get(phys_id)
+            if res is None:              # invalidated by an earlier landing
+                continue
             if res.dirty:
                 b = self._binding_of(phys_id)
                 self.stats.writeback_cycles += (

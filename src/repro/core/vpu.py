@@ -34,13 +34,14 @@ class VPUGeometry:
     decode_cycles: int = 350         # SW decode + preamble in the eCPU ISR
     schedule_cycles: int = 120       # queue push/pop + VPU selection
     issue_cycles_per_vins: int = 4   # eCPU cost to issue one vector instruction
+    vlen_bytes: int = 1024           # vector length == LLC line length, bytes
 
     def compute_cycles(self, cost: KernelCost, width: ElemWidth) -> int:
         simd = 4 // width.nbytes                 # packed elems per 32-bit lane
         per_cycle = max(1, self.lanes * simd)
         datapath_ops = cost.macs + cost.elementwise
         # issue overhead: one vector instruction per ~vl elements chunk
-        vl_elems = 1024 // width.nbytes
+        vl_elems = self.vlen_bytes // width.nbytes
         n_vins = max(1, math.ceil(datapath_ops / max(vl_elems, 1)))
         return math.ceil(datapath_ops / per_cycle) + n_vins * self.issue_cycles_per_vins
 

@@ -35,6 +35,7 @@ _SECTIONS = {
     "cache": ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity"),
     "vpu": ("lanes", "dma_bytes_per_cycle"),
     "ecpu": ("decode_cycles", "schedule_cycles", "issue_cycles_per_vins"),
+    "pipeline": ("row_chunk",),
     "memory": ("bytes",),
 }
 
@@ -56,6 +57,7 @@ class SimConfig:
     decode_cycles: int = 350
     schedule_cycles: int = 120
     issue_cycles_per_vins: int = 4
+    row_chunk: int = 8
     memory_bytes: int = 16 << 20
     description: str = ""
 
@@ -64,6 +66,10 @@ class SimConfig:
                   "lanes", "dma_bytes_per_cycle", "memory_bytes"):
             if getattr(self, f) <= 0:
                 raise ConfigError(f"{f} must be positive, got {getattr(self, f)}")
+        if self.row_chunk < 0:
+            raise ConfigError(
+                f"row_chunk must be >= 0 (0 disables intra-instruction "
+                f"pipelining), got {self.row_chunk}")
 
     @property
     def llc_bytes(self) -> int:
@@ -76,6 +82,7 @@ class SimConfig:
             decode_cycles=self.decode_cycles,
             schedule_cycles=self.schedule_cycles,
             issue_cycles_per_vins=self.issue_cycles_per_vins,
+            vlen_bytes=self.vlen_bytes,
         )
 
     def make_runtime(self, scheduler: str = "serial", *, memory=None,
@@ -98,7 +105,8 @@ class SimConfig:
             return CacheRuntime(**kwargs)
         if scheduler == "pipelined":
             from repro.sim.pipeline import PipelinedRuntime
-            return PipelinedRuntime(tracer=tracer, **kwargs)
+            return PipelinedRuntime(tracer=tracer, row_chunk=self.row_chunk,
+                                    **kwargs)
         raise ConfigError(
             f"unknown scheduler {scheduler!r} (expected 'serial'|'pipelined')")
 

@@ -86,6 +86,40 @@ class Interval:
         return self.end - self.start
 
 
+def row_chunks(rows: int, row_chunk: int) -> list[int]:
+    """Split ``rows`` into chunks of at most ``row_chunk`` rows.
+
+    ``row_chunk <= 0`` disables chunking (one chunk with every row) — the
+    whole-transfer granularity the scheduler modeled before intra-instruction
+    row pipelining.
+    """
+    if rows <= 0:
+        return []
+    if row_chunk <= 0:
+        return [rows]
+    return [min(row_chunk, rows - r) for r in range(0, rows, row_chunk)]
+
+
+def split_proportional(total: int, weights: list[int]) -> list[int]:
+    """Deterministically split integer ``total`` into ``len(weights)`` parts
+    proportional to ``weights``; parts sum to ``total`` exactly (cumulative
+    floor rounding, so replays are bit-identical)."""
+    if not weights:
+        return []
+    s = sum(weights)
+    if s <= 0:
+        raise ValueError(f"weights must sum to a positive value, got {weights}")
+    out, acc, cum = [], 0, 0
+    for w in weights:
+        if w < 0:
+            raise ValueError(f"negative weight {w}")
+        cum += w
+        x = total * cum // s
+        out.append(x - acc)
+        acc = x
+    return out
+
+
 class Resource:
     """Single-server FIFO resource with an occupancy timeline.
 

@@ -29,7 +29,8 @@ from typing import Optional
 
 from repro.core.address_table import RegionKind
 from repro.core.runtime import CacheRuntime, QueuedKernel
-from repro.sim.events import EventQueue, Resource
+from repro.sim.events import (EventQueue, Resource, row_chunks,
+                              split_proportional)
 from repro.sim.trace import Tracer
 
 
@@ -49,10 +50,24 @@ class PipelineReport:
 
 
 class PipelinedRuntime(CacheRuntime):
-    """C-RT with an event-driven, resource-accurate pipelined scheduler."""
+    """C-RT with an event-driven, resource-accurate pipelined scheduler.
 
-    def __init__(self, *args, tracer: Optional[Tracer] = None, **kwargs):
+    ``row_chunk`` sets the intra-instruction pipelining granularity
+    (NM-Carus-style): each source DMA-in is modeled as chunks of at most
+    ``row_chunk`` rows, and the kernel's compute is split into matching
+    pieces, each starting only after its chunk has landed — so the datapath
+    starts as soon as the first rows arrive instead of waiting for the whole
+    operand. ``row_chunk=0`` disables chunking (whole-transfer granularity).
+    Functional state mutation is unchanged — only the timing model is
+    chunked, so outputs stay bit-identical to the serial scheduler.
+    """
+
+    def __init__(self, *args, tracer: Optional[Tracer] = None,
+                 row_chunk: int = 8, **kwargs):
         super().__init__(*args, **kwargs)
+        if row_chunk < 0:
+            raise ValueError(f"row_chunk must be >= 0, got {row_chunk}")
+        self.row_chunk = row_chunk
         self.tracer = tracer or Tracer()
         self.sim_time = 0
         self.res_ecpu = Resource("ecpu")
@@ -206,43 +221,109 @@ class PipelinedRuntime(CacheRuntime):
         vpu = self.vpus[v]
         # Functional allocation happens NOW, in dependency order; the events
         # below only model when the hardware would finish each piece.
-        src_res, dst_res, dma_c, wb_c = self._allocation_step(qk, vpu)
+        alloc = self._allocation_step(qk, vpu)
         lock_iv = self.res_lock.acquire(t, self.geometry.schedule_cycles,
                                         label=f"k{kid} claim")
-        dma_iv = self.res_dma[v].acquire(lock_iv.end, dma_c + wb_c,
-                                         label=f"k{kid} dma-in")
-        self.stats.allocation_cycles += self.geometry.schedule_cycles + dma_c
-        self.stats.writeback_cycles += wb_c
+        self.stats.allocation_cycles += (self.geometry.schedule_cycles
+                                         + alloc.dma_cycles)
+        self.stats.writeback_cycles += alloc.wb_cycles
         self.tracer.emit(f"{qk.spec.name} k{kid} claim", "allocation",
                          "cache.lock", lock_iv.start, lock_iv.duration,
                          kernel=kid, vpu=v)
-        self.tracer.emit(f"{qk.spec.name} k{kid} dma-in", "allocation",
-                         f"vpu{v}.dma", dma_iv.start, dma_iv.duration,
-                         kernel=kid, vpu=v)
+        # Consolidation write-backs of older deferred results happen before
+        # this kernel's operands stream in, each on the DMA port of the VPU
+        # *holding* the resident (not necessarily the dispatch VPU); they are
+        # *writeback*-phase cycles, booked separately so the trace's phase
+        # totals agree with PhaseStats. The DMA-in below reads the bytes
+        # these consolidations land, so it is gated on their completion.
+        dma_start = lock_iv.end
+        for wv, cyc in alloc.wb_segments:
+            wb_iv = self.res_dma[wv].acquire(lock_iv.end, cyc,
+                                             label=f"k{kid} consolidate")
+            dma_start = max(dma_start, wb_iv.end)
+            self.tracer.emit(f"{qk.spec.name} k{kid} consolidate", "writeback",
+                             f"vpu{wv}.dma", wb_iv.start, wb_iv.duration,
+                             kernel=kid, vpu=wv)
 
-        compute_cycles = self._compute_step(qk, vpu, src_res, dst_res)
-        dp_iv = self.res_dp[v].acquire(dma_iv.end, compute_cycles,
-                                       label=f"k{kid} {qk.spec.name}")
+        # Row-chunked DMA-in (intra-instruction pipelining): each source
+        # transfer splits into row_chunk-row activities on the DMA port.
+        chunk_rows: list[int] = []
+        chunk_cycles: list[int] = []
+        for rows, cycles in alloc.dma_segments:
+            parts = row_chunks(rows, self.row_chunk)
+            chunk_rows.extend(parts)
+            chunk_cycles.extend(split_proportional(cycles, parts))
+        dma_ivs = []
+        for ci, cyc in enumerate(chunk_cycles):
+            iv = self.res_dma[v].acquire(dma_start, cyc,
+                                         label=f"k{kid} dma-in[{ci}]")
+            dma_ivs.append(iv)
+            self.tracer.emit(f"{qk.spec.name} k{kid} dma-in[{ci}]",
+                             "allocation", f"vpu{v}.dma", iv.start,
+                             iv.duration, kernel=kid, vpu=v, chunk=ci)
+
+        compute_cycles = self._compute_step(qk, vpu, alloc.src_res,
+                                            alloc.dst_res)
         self.stats.compute_cycles += compute_cycles
-        self.tracer.emit(f"{qk.spec.name} k{kid}", "compute",
-                         f"vpu{v}.datapath", dp_iv.start, dp_iv.duration,
-                         kernel=kid, vpu=v)
+        # Matching compute pieces: piece i is gated on chunk i having landed,
+        # so the datapath starts after the first chunk instead of the full
+        # transfer. With no DMA (all operands resident) compute is one piece.
+        if dma_ivs:
+            pieces = split_proportional(compute_cycles, chunk_rows)
+            dp_iv = None
+            for ci, (dma_iv, cyc) in enumerate(zip(dma_ivs, pieces)):
+                dp_iv = self.res_dp[v].acquire(dma_iv.end, cyc,
+                                               label=f"k{kid} {qk.spec.name}"
+                                                     f"[{ci}]")
+                self.tracer.emit(f"{qk.spec.name} k{kid}[{ci}]", "compute",
+                                 f"vpu{v}.datapath", dp_iv.start,
+                                 dp_iv.duration, kernel=kid, vpu=v, chunk=ci)
+        else:
+            dp_iv = self.res_dp[v].acquire(lock_iv.end, compute_cycles,
+                                           label=f"k{kid} {qk.spec.name}")
+            self.tracer.emit(f"{qk.spec.name} k{kid}", "compute",
+                             f"vpu{v}.datapath", dp_iv.start, dp_iv.duration,
+                             kernel=kid, vpu=v)
 
-        inflight[kid] = (qk, v, src_res, dst_res)
+        inflight[kid] = (qk, v, alloc.src_res, alloc.dst_res)
         eq.push(dp_iv.end, "compute_done", kid)
+
+    def _book_writebacks(self, segments: list, fallback: tuple[int, int],
+                         t: int, label: str, eq: Optional[EventQueue],
+                         **args) -> None:
+        """Book write-back DMA activities per owning-VPU port. ``fallback``
+        is ``(vpu, cycles)`` for the rare case cycles were accrued without
+        segment attribution. ``eq=None`` when no event loop is running
+        (barrier): completion then surfaces via the resources' free_at."""
+        if not segments and fallback[1]:
+            segments = [fallback]
+        for wv, cyc in segments:
+            iv = self.res_dma[wv].acquire(t, cyc, label=label)
+            self.tracer.emit(label, "writeback", f"vpu{wv}.dma",
+                             iv.start, iv.duration, vpu=wv, **args)
+            if eq is not None:
+                eq.push(iv.end, "wb_done")
+
+    def _retire_timed(self, qk, src_res, dst_res) -> tuple[int, list]:
+        """Run the shared retire step, capturing (vpu, cycles) per
+        consolidation so each lands on the right DMA port."""
+        self._wb_segments = segs = []
+        try:
+            wb = self._retire_step(qk, src_res, dst_res)
+        finally:
+            self._wb_segments = None
+        return wb, segs
 
     def _handle_compute_done(self, kid: int, t: int, inflight: dict,
                              eq: EventQueue) -> None:
         qk, v, src_res, dst_res = inflight.pop(kid)
-        wb = self._retire_step(qk, src_res, dst_res)
+        wb, segs = self._retire_timed(qk, src_res, dst_res)
         self.stats.writeback_cycles += wb
         self.stats.kernels_run += 1
         if wb:
-            iv = self.res_dma[v].acquire(t, wb, label=f"k{kid} writeback")
-            self.tracer.emit(f"{qk.spec.name} k{kid} writeback", "writeback",
-                             f"vpu{v}.dma", iv.start, iv.duration,
-                             kernel=kid, vpu=v)
-            eq.push(iv.end, "wb_done")
+            self._book_writebacks(segs, (v, wb), t,
+                                  f"{qk.spec.name} k{kid} writeback", eq,
+                                  kernel=kid)
         self._drain_idle_dma(t, inflight, eq)
 
     def _drain_idle_dma(self, t: int, inflight: dict, eq: EventQueue) -> None:
@@ -253,21 +334,23 @@ class PipelinedRuntime(CacheRuntime):
             busy_phys.update(s.phys_id for s in qk.src_bindings)
             busy_phys.add(qk.dst_binding.phys_id)
         for phys_id in list(self.resident):
-            res = self.resident[phys_id]
-            if (phys_id in busy_phys or self._needed_later(phys_id)
+            res = self.resident.get(phys_id)
+            if (res is None or phys_id in busy_phys
+                    or self._needed_later(phys_id)
                     or not res.dirty or not self.res_dma[res.vpu].idle_at(t)):
                 continue
             b = self._binding_of(phys_id)
             v = res.vpu
-            wb = (self._flush_older_aliases(b)
-                  + self._writeback_resident(b, res))
+            self._wb_segments = segs = []
+            try:
+                wb = (self._flush_older_aliases(b)
+                      + self._writeback_resident(b, res))
+            finally:
+                self._wb_segments = None
             self.at.release(phys_id, RegionKind.DST)
             self.stats.writeback_cycles += wb
-            iv = self.res_dma[v].acquire(t, wb, label=f"drain phys{phys_id}")
-            self.tracer.emit(f"drain phys{phys_id}", "writeback",
-                             f"vpu{v}.dma", iv.start, iv.duration,
-                             phys=phys_id, vpu=v)
-            eq.push(iv.end, "wb_done")
+            self._book_writebacks(segs, (v, wb), t, f"drain phys{phys_id}",
+                                  eq, phys=phys_id)
 
     # -------------------------------------------------------------- pending
     def _needed_later(self, phys_id: int) -> bool:
@@ -283,19 +366,23 @@ class PipelinedRuntime(CacheRuntime):
             raise RuntimeError("kernel queue not drained — dependency deadlock?")
         t = self.sim_time
         for phys_id in list(self.resident):
-            res = self.resident[phys_id]
+            res = self.resident.get(phys_id)
+            if res is None:              # invalidated by an earlier landing
+                continue
             if res.dirty:
                 b = self._binding_of(phys_id)
                 v = res.vpu
-                wb = (self._flush_older_aliases(b)
-                      + self._writeback_resident(b, res))
+                self._wb_segments = segs = []
+                try:
+                    wb = (self._flush_older_aliases(b)
+                          + self._writeback_resident(b, res))
+                finally:
+                    self._wb_segments = None
                 self.stats.writeback_cycles += wb
                 self.at.release(phys_id, RegionKind.DST)
-                iv = self.res_dma[v].acquire(t, wb,
-                                             label=f"flush phys{phys_id}")
-                self.tracer.emit(f"flush phys{phys_id}", "writeback",
-                                 f"vpu{v}.dma", iv.start, iv.duration,
-                                 phys=phys_id, vpu=v)
+                self._book_writebacks(segs, (v, wb), t,
+                                      f"flush phys{phys_id}", None,
+                                      phys=phys_id)
             else:
                 self._evict_resident(phys_id)
                 self.at.release(phys_id, RegionKind.DST)

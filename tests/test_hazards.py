@@ -2,9 +2,6 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # dev extra; suite runs without it
-from hypothesis import given, settings, strategies as st
-
 from repro.core.encoding import ElemWidth
 from repro.core.hazards import DependencyTracker
 from repro.core.matrix import MatrixMap
@@ -65,12 +62,23 @@ def test_memory_aliasing_dependency():
     assert k0.kernel_id in k1.depends_on
 
 
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
-                          st.integers(0, 5)), min_size=1, max_size=30))
-@settings(max_examples=50, deadline=None)
-def test_dag_acyclic_and_drains(ops):
+def test_dag_acyclic_and_drains():
     """Property: any admission sequence yields an acyclic DAG that fully
-    drains when completing ready kernels repeatedly."""
+    drains when completing ready kernels repeatedly — and once drained (no
+    pins outstanding), the tracker retains no per-binding state."""
+    hypothesis = pytest.importorskip("hypothesis")  # dev extra
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                              st.integers(0, 5)), min_size=1, max_size=30))
+    @settings(max_examples=50, deadline=None)
+    def check(ops):
+        _dag_acyclic_and_drains(ops)
+
+    check()
+
+
+def _dag_acyclic_and_drains(ops):
     mm, tr = MatrixMap(), DependencyTracker()
     addr = [i * 512 for i in range(6)]
     for s1, s2, d in ops:
@@ -87,3 +95,57 @@ def test_dag_acyclic_and_drains(ops):
             tr.complete(k)
         steps += 1
         assert steps < 1000
+    assert tr.completed_count() == len(ops)
+    assert tr.tracked_state_size() == 0
+
+
+# ------------------------------------------------------ bounded state (prune)
+def test_tracker_prunes_completed_state():
+    """Regression: complete() never pruned _writer_of/_readers_of/_bindings,
+    so admit()'s aliasing sweep scanned every kernel ever admitted and
+    memory grew without bound on long runs."""
+    mm, tr = MatrixMap(), DependencyTracker()
+    high_water = 0
+    for i in range(200):
+        a = bind(mm, 0, 0)
+        d = bind(mm, 1, 1000)
+        rec = tr.admit([a], d)
+        high_water = max(high_water, tr.tracked_state_size())
+        tr.complete(rec.kernel_id)
+    assert tr.pending_count() == 0
+    assert tr.completed_count() == 200
+    assert tr.tracked_state_size() == 0          # fully pruned
+    assert high_water <= 12                      # O(live), not O(history)
+
+
+def test_tracker_prune_keeps_records_referenced_by_pending():
+    mm, tr = MatrixMap(), DependencyTracker()
+    a = bind(mm, 0, 0)
+    d = bind(mm, 1, 1000)
+    k0 = tr.admit([a], d)
+    k1 = tr.admit([mm.lookup(1)], bind(mm, 2, 2000))   # RAW on d
+    tr.complete(k0.kernel_id)
+    # d is still read by pending k1: its binding/writer stamp must survive
+    assert tr.binding(d.phys_id) is d
+    assert tr.writer_of(d.phys_id) == k0.kernel_id
+    assert tr.ready(k1.kernel_id)
+    tr.complete(k1.kernel_id)
+    assert tr.tracked_state_size() == 0
+
+
+def test_tracker_pin_keeps_deferred_result_records():
+    """The runtime pins cache-resident (deferred) results: their captured
+    binding and admission-order stamp must outlive the writer's completion
+    so write-backs can replay admission order."""
+    mm, tr = MatrixMap(), DependencyTracker()
+    a = bind(mm, 0, 0)
+    d = bind(mm, 1, 1000)
+    rec = tr.admit([a], d)
+    tr.pin(d.phys_id)
+    tr.complete(rec.kernel_id)
+    assert tr.binding(d.phys_id) is d            # pinned: retained
+    assert tr.writer_of(d.phys_id) == rec.kernel_id
+    assert tr.binding(a.phys_id) is None         # unpinned source: pruned
+    tr.unpin(d.phys_id)
+    assert tr.binding(d.phys_id) is None
+    assert tr.tracked_state_size() == 0

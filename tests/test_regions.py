@@ -1,0 +1,147 @@
+"""Exact 2D strided-region algebra: oracle equivalence + aliasing semantics."""
+import pytest
+
+from repro.core.encoding import ElemWidth
+from repro.core.matrix import MatrixMap
+from repro.core.regions import StridedRegion, footprints_overlap
+
+
+def brute_overlap(a: StridedRegion, b: StridedRegion) -> bool:
+    """Byte-set oracle (only viable for tiny regions)."""
+    sa = {a.addr + i * a.stride_bytes + j
+          for i in range(a.rows) for j in range(a.row_bytes)}
+    sb = {b.addr + i * b.stride_bytes + j
+          for i in range(b.rows) for j in range(b.row_bytes)}
+    return bool(sa & sb)
+
+
+# ------------------------------------------------------------ constructions
+def test_validation():
+    with pytest.raises(ValueError):
+        StridedRegion(0, 0, 4, 4)
+    with pytest.raises(ValueError):
+        StridedRegion(0, 2, 0, 4)
+    with pytest.raises(ValueError):
+        StridedRegion(0, 2, 4, 0)          # multi-row needs a stride
+    StridedRegion(0, 1, 4, 0)              # single row: stride unused
+
+
+def test_geometry_properties():
+    r = StridedRegion(addr=100, rows=3, row_bytes=8, stride_bytes=32)
+    assert (r.start, r.end) == (100, 100 + 2 * 32 + 8)
+    assert r.nbytes == 24
+    assert r.row_interval(2) == (164, 172)
+    with pytest.raises(IndexError):
+        r.row_interval(3)
+
+
+# ------------------------------------------------------- hand-picked cases
+def test_equal_stride_column_strips_disjoint():
+    left = StridedRegion(0, 4, 8, 32)
+    right = StridedRegion(8, 4, 8, 32)
+    assert not left.overlaps(right) and not right.overlaps(left)
+    dense = StridedRegion(0, 4, 32, 32)
+    assert left.overlaps(dense) and dense.overlaps(right)
+
+
+def test_unequal_stride_interleaving_no_alias():
+    """The case the old equal-stride-only refinement got wrong: different
+    strides whose bounding intervals interleave but whose bytes never meet.
+    a touches [0,8) mod 64; b touches [32,40) mod 128 — gcd(64,128)=64 and
+    the residues keep them 24 bytes apart at closest approach."""
+    a = StridedRegion(0, 8, 8, 64)
+    b = StridedRegion(32, 4, 8, 128)
+    assert a.start < b.end and b.start < a.end      # intervals do interleave
+    assert not a.overlaps(b) and not b.overlaps(a)
+    assert not brute_overlap(a, b)
+
+
+def test_unequal_stride_true_alias_detected():
+    a = StridedRegion(0, 8, 8, 48)
+    b = StridedRegion(140, 3, 12, 100)              # row 1 of b hits row 5 of a
+    assert brute_overlap(a, b)
+    assert a.overlaps(b) and b.overlaps(a)
+
+
+def test_band_wrapping_stride_period():
+    """Bands wider than their phase window wrap the period — the old
+    refinement refused to refine these; the algebra stays exact."""
+    a = StridedRegion(28, 4, 10, 32)                # wraps: 28+10 > 32
+    b = StridedRegion(8, 4, 10, 32)
+    assert a.overlaps(b) == brute_overlap(a, b)
+    c = StridedRegion(6, 4, 10, 32)                 # [6,16) vs [28,38)%32
+    assert c.overlaps(a) == brute_overlap(c, a)
+
+
+def test_self_overlapping_rows():
+    """stride < row_bytes (rows overlap in memory) is legal for the algebra."""
+    a = StridedRegion(0, 4, 10, 4)
+    b = StridedRegion(20, 1, 2, 0)
+    assert a.overlaps(b) == brute_overlap(a, b)
+
+
+def test_partial_row_band_interval_checks():
+    r = StridedRegion(100, 4, 8, 32)
+    assert r.overlaps_interval(100, 101)            # first byte
+    assert not r.overlaps_interval(108, 132)        # gap after row 0
+    assert r.overlaps_interval(131, 133)            # clips row 1's first byte
+    assert not r.overlaps_interval(0, 100)
+    assert not r.overlaps_interval(100, 100)        # empty interval
+    assert r.overlaps_interval(*r.row_interval(3))
+
+
+def test_functional_form():
+    assert footprints_overlap(0, 4, 8, 32, 8, 4, 8, 32) is False
+    assert footprints_overlap(0, 4, 8, 32, 4, 4, 8, 32) is True
+
+
+# -------------------------------------------------------- exhaustive sweeps
+def test_exhaustive_small_regions_match_oracle():
+    """Every (addr, rows, row_bytes, stride) pair in a small box — the
+    decision procedure must agree with the byte-set oracle everywhere,
+    including unequal strides, partial bands and wrap-arounds."""
+    shapes = [(rows, rb, st)
+              for rows in (1, 2, 3)
+              for rb in (1, 2, 5)
+              for st in (1, 3, 4, 7)]
+    regions = [StridedRegion(addr, rows, rb, st)
+               for addr in (0, 2, 5) for rows, rb, st in shapes]
+    for a in regions:
+        for b in regions:
+            assert a.overlaps(b) == brute_overlap(a, b), (a, b)
+
+
+def test_property_random_regions_match_oracle():
+    hypothesis = pytest.importorskip("hypothesis")  # dev extra
+    from hypothesis import given, settings, strategies as st
+
+    region = st.builds(
+        StridedRegion,
+        addr=st.integers(0, 60),
+        rows=st.integers(1, 8),
+        row_bytes=st.integers(1, 12),
+        stride_bytes=st.integers(1, 20),
+    )
+
+    @given(region, region)
+    @settings(max_examples=300, deadline=None)
+    def check(a, b):
+        got = a.overlaps(b)
+        assert got == brute_overlap(a, b)
+        assert got == b.overlaps(a)                 # symmetry
+
+    check()
+
+
+# ----------------------------------------------- MatrixBinding integration
+def test_matrix_binding_delegates_to_region():
+    mm = MatrixMap()
+    a = mm.reserve(0, addr=0, rows=8, cols=2, stride=16, width=ElemWidth.W)
+    b = mm.reserve(1, addr=32, rows=4, cols=2, stride=32, width=ElemWidth.W)
+    # a touches [0,8) mod 64; b touches [32,40) mod 128 — no shared byte
+    # even though strides differ and the intervals interleave.
+    assert not a.overlaps(b) and not b.overlaps(a)
+    assert a.region.overlaps(a.region)
+    # overlaps_range is exact too: the gap between a's rows is free
+    assert not a.overlaps_range(8, 16)
+    assert a.overlaps_range(0, 1) and a.overlaps_range(64, 65)

@@ -112,6 +112,44 @@ def test_war_hazard_host_store(cop, rng):
     np.testing.assert_array_equal(D, ref)
 
 
+def test_xmr_rejects_invalid_nonzero_stride(cop):
+    """Table I: stride 0 means dense; a nonzero stride below cols is a
+    programming error (rows would overlap in memory). Regression: it was
+    silently clamped to dense, changing which bytes the program addressed."""
+    a = cop.malloc(1024)
+    with pytest.raises(KernelError, match="stride"):
+        cop._xmr_w(0, a, 2, 4, 4)        # 0 < stride(2) < cols(4): reject
+    cop._xmr_w(0, a, 0, 4, 4)            # 0 = dense: ok
+    cop._xmr_w(0, a, 4, 4, 4)            # stride == cols: ok
+    cop._xmr_w(0, a, 9, 4, 4)            # padded rows: ok
+    assert cop.rt.matrix_map.lookup(0).stride == 9
+
+
+def test_host_store_into_strided_gap_does_not_stall(cop, rng):
+    """AT entries carry the exact strided footprint: a host store into the
+    bytes *between* a queued kernel's source rows is hazard-free and must
+    not force a drain (the old interval entries stalled it)."""
+    A = rng.integers(-9, 9, (8, 4), dtype=np.int32)
+    base = cop.malloc(8 * 16 * 4)        # an 8x16 int32 arena
+    # place A as a strided strip: all 8 rows, cols 0-3 of the arena
+    for r in range(8):
+        cop.store(base + r * 64, A[r], ElemWidth.W)
+    aD = cop.malloc(8 * 4 * 4)
+    cop._xmr_w(0, base, 16, 8, 4)        # strided source strip
+    cop._xmr_w(1, aD, 0, 8, 4)
+    cop._leakyrelu(ElemWidth.W, 1, 0, alpha=0.5)
+    assert cop.rt.tracker.pending_count() == 1
+    # store into cols 8-11 — inside the bounding interval, outside the strip
+    cop.store(base + 32, np.ones((1, 4), np.int32), ElemWidth.W)
+    assert cop.rt.tracker.pending_count() == 1   # no forced drain
+    # store overlapping the strip itself DOES stall-drain (WAR)
+    cop.store(base + 64, np.zeros((1, 4), np.int32), ElemWidth.W)
+    assert cop.rt.tracker.pending_count() == 0
+    A64 = A.astype(np.int64)
+    ref = np.where(A >= 0, A64, np.round(0.5 * A64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 8, 4, ElemWidth.W), ref)
+
+
 def test_preamble_rejects_bad_shapes(cop):
     aA = cop.malloc(64)
     cop._xmr_w(0, aA, 0, 4, 4)

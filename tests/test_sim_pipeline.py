@@ -167,6 +167,53 @@ def test_yaml_extends_overrides(tmp_path):
     assert cfg.memory_bytes == 65536
 
 
+def test_row_chunk_knob_threads_to_runtime(tmp_path):
+    cfg = SimConfig(n_vpus=2, vregs_per_vpu=8, vlen_bytes=256,
+                    memory_bytes=1 << 16, row_chunk=0)
+    rt = cfg.make_runtime("pipelined")
+    assert rt.row_chunk == 0
+    assert SimConfig().row_chunk == 8            # default granularity
+    from repro.sim import ConfigError
+    with pytest.raises(ConfigError, match="row_chunk"):
+        SimConfig(row_chunk=-1)
+    with pytest.raises(ValueError):
+        PipelinedRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                         row_chunk=-2)
+
+
+def test_row_chunk_yaml_knob(tmp_path):
+    pytest.importorskip("yaml")
+    from repro.sim import load_config
+    assert load_config("arcane-default").row_chunk == 8
+    assert load_config("arcane-8vpu").row_chunk == 4
+    (tmp_path / "c.yaml").write_text(
+        "extends: arcane-default\npipeline: {row_chunk: 2}\n")
+    assert load_config(str(tmp_path / "c.yaml")).row_chunk == 2
+    (tmp_path / "bad.yaml").write_text("pipeline: {chunk_rows: 2}\n")
+    from repro.sim import ConfigError
+    with pytest.raises(ConfigError, match="unknown key"):
+        load_config(str(tmp_path / "bad.yaml"))
+
+
+def test_geometry_vlen_threaded_from_config():
+    """Regression: compute_cycles hardcoded a 1024-byte VLEN for the issue
+    overhead while vlen_bytes was a config knob — non-default configs
+    silently modeled the wrong vector length."""
+    from repro.core.isa import KernelCost
+    from repro.core.vpu import VPUGeometry
+    cost = KernelCost(macs=4096)
+    small = VPUGeometry(lanes=4, vlen_bytes=128)
+    big = VPUGeometry(lanes=4, vlen_bytes=2048)
+    # shorter vectors -> more vector instructions -> more issue overhead
+    assert small.compute_cycles(cost, ElemWidth.W) > \
+        big.compute_cycles(cost, ElemWidth.W)
+    cfg = SimConfig(n_vpus=1, vregs_per_vpu=4, vlen_bytes=512,
+                    memory_bytes=1 << 16)
+    assert cfg.geometry().vlen_bytes == 512
+    rt = CacheRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256)
+    assert rt.geometry.vlen_bytes == 256         # ctor default geometry too
+
+
 def test_yaml_extends_builtin_and_cycle(tmp_path):
     pytest.importorskip("yaml")
     from repro.sim import ConfigError, load_config
@@ -340,3 +387,294 @@ def test_strided_column_strips_do_not_alias():
     shifted = mm.reserve(3, addr=4, rows=4, cols=2, stride=8,
                          width=ElemWidth.W)
     assert left.overlaps(shifted)                # byte bands intersect
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_aliased_read_of_deferred_result_sees_fresh_bytes(scheduler, rng):
+    """A kernel reading a *distinct* binding that aliases a deferred dirty
+    result must observe the result, not stale main memory: the deferred
+    write-back has to consolidate before the source DMA-in (regression: the
+    RAW edge only ordered the read after the writer *completed*, so the DMA
+    loaded pre-kernel sentinel bytes)."""
+    cop = make_cop(scheduler)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD, aO1, aO2 = (cop.malloc(8 * 8 * 4) for _ in range(3))
+    cop.store(aD, np.full((8, 8), 7, np.int32), ElemWidth.W)   # sentinel
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aD, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)                  # k0: m1 = A@A -> aD
+    cop._xmr_w(3, aD, 0, 8, 8)               # distinct binding, same bytes
+    cop._xmr_w(4, aO1, 0, 8, 8)
+    cop._leakyrelu(ElemWidth.W, 4, 3, alpha=0.0)   # k1: reads the alias
+    cop._xmr_w(5, aO2, 0, 8, 8)
+    cop._leakyrelu(ElemWidth.W, 5, 1, alpha=0.0)   # k2: reads m1 -> k0 defers
+    cop.barrier()
+    T = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    ref = np.maximum(T, 0)
+    np.testing.assert_array_equal(cop.gather(aD, 8, 8, ElemWidth.W), T)
+    np.testing.assert_array_equal(cop.gather(aO1, 8, 8, ElemWidth.W), ref)
+    np.testing.assert_array_equal(cop.gather(aO2, 8, 8, ElemWidth.W), ref)
+
+
+@pytest.mark.parametrize("keep_deferred", [False, True])
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_aliasing_writer_invalidates_stale_source_copy(scheduler,
+                                                       keep_deferred, rng):
+    """The mirror direction: a *clean* resident source copy must not survive
+    a later aliasing writer (distinct phys binding, same bytes) — whether
+    the writer's result already landed in memory (the landing evicts stale
+    copies) or is still deferred dirty (the read lands it first). Regression:
+    the re-read returned the pre-writer bytes on both schedulers."""
+    cop = make_cop(scheduler)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aP = cop.place(A, ElemWidth.W)           # bytes p: hold A initially
+    aB = cop.place(B, ElemWidth.W)
+    aO1, aO2, aO3 = (cop.malloc(8 * 8 * 4) for _ in range(3))
+    cop._xmr_w(0, aP, 0, 8, 8)               # m0: binding a over p
+    cop._xmr_w(1, aO1, 0, 8, 8)
+    cop._leakyrelu(ElemWidth.W, 1, 0, alpha=0.5)   # k0: reads m0, a resident
+    cop._xmr_w(2, aP, 0, 8, 8)               # fresh binding over the same p
+    cop._xmr_w(3, aB, 0, 8, 8)
+    cop._leakyrelu(ElemWidth.W, 2, 3, alpha=0.0)   # k1: p = relu(B)
+    cop._xmr_w(4, aO2, 0, 8, 8)
+    cop._leakyrelu(ElemWidth.W, 4, 0, alpha=0.0)   # k2: re-reads m0 (stale?)
+    if keep_deferred:
+        # k3 reads k1's result, so it is still deferred dirty when k2 reads
+        cop._xmr_w(5, aO3, 0, 8, 8)
+        cop._leakyrelu(ElemWidth.W, 5, 2, alpha=0.0)
+    cop.barrier()
+    A64, B64 = A.astype(np.int64), B.astype(np.int64)
+    p_new = np.maximum(B, 0)
+    np.testing.assert_array_equal(
+        cop.gather(aO1, 8, 8, ElemWidth.W),
+        np.where(A >= 0, A64, np.round(0.5 * A64)).astype(np.int32))
+    np.testing.assert_array_equal(cop.gather(aO2, 8, 8, ElemWidth.W), p_new)
+    np.testing.assert_array_equal(cop.gather(aP, 8, 8, ElemWidth.W), p_new)
+    if keep_deferred:
+        np.testing.assert_array_equal(cop.gather(aO3, 8, 8, ElemWidth.W),
+                                      p_new)
+
+
+def test_consolidation_books_on_owning_vpu_port():
+    """Consolidation DMA runs on the port of the VPU holding the resident;
+    booking it on the dispatch VPU's port would model contention on the
+    wrong resource (and skew utilization)."""
+    cop = make_cop("pipelined")
+    rng = np.random.default_rng(0)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+    aT1, aT2, aO = (cop.malloc(8 * 8 * 4) for _ in range(3))
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aB, 0, 8, 8)
+    cop._xmr_w(2, aT1, 0, 8, 8)
+    cop._xmr_w(3, aT2, 0, 8, 8)
+    cop._xmr_w(4, aO, 0, 8, 8)
+    cop._gemm_w(2, 0, 0, 0)                      # T1 on VPU x
+    cop._gemm_w(3, 1, 1, 1)                      # T2 on VPU y
+    cop._gemm_w(4, 2, 3, 2, alpha=1.0, beta=1.0)  # dispatches to T1's VPU;
+    cop.barrier()                                 # consolidates T2 from y
+    consolidates = [r for r in cop.rt.tracer.records
+                    if "consolidate" in r.name]
+    assert consolidates, "cross-VPU move produced no consolidation interval"
+    for r in consolidates:
+        assert r.resource == f"vpu{dict(r.args)['vpu']}.dma"
+    # the consolidated operand (T2) lived on a different VPU than the
+    # dispatching kernel ran on
+    k2_compute = [r for r in cop.rt.tracer.records if r.phase == "compute"
+                  and dict(r.args).get("kernel") == 2]
+    dispatch_vpu = dict(k2_compute[0].args)["vpu"]
+    assert any(dict(r.args)["vpu"] != dispatch_vpu for r in consolidates)
+
+
+# --------------------------------------- exact aliasing: unequal strides
+def test_unequal_stride_strips_no_false_edge():
+    """Two disjoint views of one buffer with *different* strides (all rows /
+    cols 0-3 vs even rows / cols 4-11) must not produce an aliasing edge —
+    the case the old interval-overlap fallback serialized."""
+    from repro.core.hazards import DependencyTracker
+    from repro.core.matrix import MatrixMap
+    mm, tr = MatrixMap(), DependencyTracker()
+    src1 = mm.reserve(0, addr=8192, rows=16, cols=4, stride=4,
+                      width=ElemWidth.W)
+    src2 = mm.reserve(1, addr=12288, rows=8, cols=8, stride=8,
+                      width=ElemWidth.W)
+    # strip A: every row of the 16-wide buffer, columns 0-3
+    dstA = mm.reserve(2, addr=0, rows=16, cols=4, stride=16,
+                      width=ElemWidth.W)
+    # strip B: even rows only, columns 4-11 (stride 32 elems = 2 rows)
+    dstB = mm.reserve(3, addr=16, rows=8, cols=8, stride=32,
+                      width=ElemWidth.W)
+    assert not dstA.overlaps(dstB)               # exact algebra: disjoint
+    k0 = tr.admit([src1], dstA)
+    k1 = tr.admit([src2], dstB)
+    assert k0.kernel_id not in k1.depends_on     # no false WAW edge
+    assert tr.ready(k1.kernel_id)
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_unequal_stride_interleaved_strips_bit_identical(scheduler, rng):
+    """Aliased strip workload: two kernels write disjoint unequal-stride
+    strips of ONE destination buffer, a third reads the dense union (true
+    RAW on both). Serial and pipelined must agree bit for bit, and the
+    untouched odd-row right-half bytes must survive."""
+    cop = make_cop(scheduler)
+    n = 16
+    A = rng.integers(-9, 9, (n, 4), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+    aD = cop.malloc(n * n * 4)                   # shared 16x16 buffer
+    aO = cop.malloc(n * n * 4)
+    sentinel = np.full((n, n), 7, np.int32)
+    cop.store(aD, sentinel, ElemWidth.W)
+    cop._xmr_w(0, aA, 0, n, 4)
+    cop._xmr_w(1, aB, 0, 8, 8)
+    cop._xmr_w(2, aD, n, n, 4)                   # strip A: all rows, cols 0-3
+    cop._xmr_w(3, aD + 16, 2 * n, 8, 8)          # strip B: even rows, cols 4-11
+    cop._leakyrelu(ElemWidth.W, 2, 0, alpha=0.5)
+    cop._leakyrelu(ElemWidth.W, 3, 1, alpha=0.25)
+    cop._xmr_w(4, aD, 0, n, n)                   # dense union view (RAW both)
+    cop._xmr_w(5, aO, 0, n, n)
+    cop._leakyrelu(ElemWidth.W, 5, 4, alpha=0.0)
+    cop.barrier()
+    got = cop.gather(aD, n, n, ElemWidth.W)
+    ref = sentinel.copy()
+    A64, B64 = A.astype(np.int64), B.astype(np.int64)
+    ref[:, :4] = np.where(A >= 0, A64, np.round(0.5 * A64)).astype(np.int32)
+    ref[0::2, 4:12] = np.where(B >= 0, B64,
+                               np.round(0.25 * B64)).astype(np.int32)
+    np.testing.assert_array_equal(got, ref)
+    out = cop.gather(aO, n, n, ElemWidth.W)
+    np.testing.assert_array_equal(out, np.maximum(ref, 0))
+
+
+def test_unequal_stride_strips_overlap_in_pipelined_schedule():
+    """The two unequal-stride strip writers must actually run concurrently:
+    with a false aliasing edge kernel 1 could only claim the allocator after
+    kernel 0 retired; exact aliasing lets it claim while kernel 0 is still
+    streaming/computing."""
+    cop = make_cop("pipelined")
+    rng = np.random.default_rng(3)
+    n = 64
+    A = rng.integers(-9, 9, (n, 16), dtype=np.int32)
+    B = rng.integers(-9, 9, (32, 32), dtype=np.int32)
+    aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+    aD = cop.malloc(n * n * 4)
+    cop._xmr_w(0, aA, 0, n, 16)
+    cop._xmr_w(1, aB, 0, 32, 32)
+    cop._xmr_w(2, aD, n, n, 16)                  # all rows, cols 0-15
+    cop._xmr_w(3, aD + 64, 2 * n, 32, 32)        # even rows, cols 16-47
+    cop._leakyrelu(ElemWidth.W, 2, 0, alpha=0.5)
+    cop._leakyrelu(ElemWidth.W, 3, 1, alpha=0.25)
+    cop.barrier()
+    recs = cop.rt.tracer.records
+    k0_compute_end = max(r.start + r.duration for r in recs
+                         if r.phase == "compute"
+                         and dict(r.args).get("kernel") == 0)
+    k1_claim_start = min(r.start for r in recs
+                         if "claim" in r.name
+                         and dict(r.args).get("kernel") == 1)
+    assert k1_claim_start < k0_compute_end, "strips serialized by false edge"
+
+
+# ------------------------------------------------ row-chunked DMA/compute
+def chunked_cop(row_chunk):
+    return ArcaneCoprocessor(runtime=PipelinedRuntime(
+        row_chunk=row_chunk, n_vpus=4, vregs_per_vpu=16, vlen_bytes=512))
+
+
+def test_row_chunked_overlap_reduces_makespan_same_outputs():
+    outs, makespans = {}, {}
+    for rc in (0, 4):
+        cop = chunked_cop(rc)
+        outs[rc] = gemm_relu_pool_chain(cop, seed=5)
+        makespans[rc] = cop.rt.sim_time
+    for a, b in zip(outs[0], outs[4]):
+        np.testing.assert_array_equal(a, b)      # timing model only
+    assert makespans[4] < makespans[0], makespans
+
+
+def test_row_chunked_dma_and_compute_intervals():
+    """With row_chunk=4 a 16-row operand DMA splits into 4 chunk intervals,
+    and the first compute piece starts before the last DMA chunk ends —
+    intra-instruction pipelining in the trace."""
+    cop = chunked_cop(4)
+    rng = np.random.default_rng(7)
+    A = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aA, 0, 16, 16)
+    cop._xmr_w(1, aD, 0, 16, 16)
+    cop._gemm_w(1, 0, 0, 0)
+    cop.barrier()
+    dma = [r for r in cop.rt.tracer.records
+           if r.phase == "allocation" and "dma-in" in r.name]
+    comp = [r for r in cop.rt.tracer.records if r.phase == "compute"]
+    assert len(dma) == 4 and len(comp) == 4
+    assert comp[0].start < dma[-1].start + dma[-1].duration
+    # chunk cycles conserve the un-chunked totals
+    s = cop.rt.stats
+    assert sum(r.duration for r in dma) + 120 == s.allocation_cycles
+    assert sum(r.duration for r in comp) == s.compute_cycles
+    ref = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 16, 16, ElemWidth.W), ref)
+
+
+def test_row_chunk_zero_single_interval():
+    cop = chunked_cop(0)
+    rng = np.random.default_rng(7)
+    A = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aA, 0, 16, 16)
+    cop._xmr_w(1, aD, 0, 16, 16)
+    cop._gemm_w(1, 0, 0, 0)
+    cop.barrier()
+    dma = [r for r in cop.rt.tracer.records
+           if r.phase == "allocation" and "dma-in" in r.name]
+    assert len(dma) == 1
+
+
+def test_split_helpers():
+    from repro.sim import row_chunks, split_proportional
+    assert row_chunks(10, 4) == [4, 4, 2]
+    assert row_chunks(10, 0) == [10]
+    assert row_chunks(0, 4) == []
+    parts = split_proportional(103, [4, 4, 2])
+    assert sum(parts) == 103 and len(parts) == 3
+    assert split_proportional(0, [1, 2]) == [0, 0]
+    with pytest.raises(ValueError):
+        split_proportional(10, [0, 0])
+
+
+# ------------------------------------------- trace/PhaseStats consistency
+def test_trace_phase_totals_match_phase_stats():
+    """Regression: consolidation write-back cycles used to be booked inside
+    the 'dma-in' allocation interval, so trace phase totals disagreed with
+    PhaseStats. The cross-VPU move workload exercises consolidation."""
+    cop = make_cop("pipelined")
+    rng = np.random.default_rng(0)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+    aT1, aT2, aO = (cop.malloc(8 * 8 * 4) for _ in range(3))
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aB, 0, 8, 8)
+    cop._xmr_w(2, aT1, 0, 8, 8)
+    cop._xmr_w(3, aT2, 0, 8, 8)
+    cop._xmr_w(4, aO, 0, 8, 8)
+    cop._gemm_w(2, 0, 0, 0)                      # T1 on one VPU
+    cop._gemm_w(3, 1, 1, 1)                      # T2 on another
+    cop._gemm_w(4, 2, 3, 2, alpha=1.0, beta=1.0)  # consumes both: cross-VPU
+    cop.barrier()
+    phase = cop.rt.tracer.phase_cycles()
+    s = cop.rt.stats
+    assert phase["allocation"] == s.allocation_cycles
+    assert phase["compute"] == s.compute_cycles
+    assert phase["writeback"] == s.writeback_cycles
+    # consolidation emitted as its own writeback-phase interval
+    assert any("consolidate" in r.name for r in cop.rt.tracer.records)
+    # xmr decode slices never enter the event timeline
+    assert phase["preamble"] <= s.preamble_cycles
