@@ -15,12 +15,12 @@ from benchmarks.fig4_speedup import arcane_cycles
 
 
 def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
-        scheduler="serial", row_chunk=None):
+        scheduler="serial", row_chunk=None, dataflow=True):
     rows = []
     for ln in lanes:
         for n in sizes:
             total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln, scheduler,
-                                          row_chunk)
+                                          row_chunk, dataflow)
             rows.append({"size": n, "lanes": ln, "cycles": total, **shares})
             if not quiet:
                 print(f"fig3,int32 3x3 {n}x{n} {ln}lane,{total},"
@@ -62,11 +62,15 @@ def main(argv=None):
                    help="pipelined scheduler's rows-per-DMA-chunk "
                         "granularity (0 disables intra-instruction "
                         "pipelining; default: runtime builtin)")
+    p.add_argument("--dataflow", choices=("on", "off"), default="on",
+                   help="kernel-aware per-operand DMA->compute gating in the "
+                        "pipelined scheduler (off: legacy concatenated-"
+                        "stream gating, for A/B comparison)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
     rows = run(quiet=not args.verbose, scheduler=args.scheduler,
-               row_chunk=args.row_chunk)
+               row_chunk=args.row_chunk, dataflow=args.dataflow == "on")
     for k, v in validate(rows).items():
         val = f"{v:.3f}" if isinstance(v, float) else v
         print(f"fig3_validate,{k},{val}")

@@ -83,7 +83,8 @@ def tiled_conv_layer(cop, width, aX, h, w, aF, k, aR):
 
 def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
                   scheduler: str = "serial",
-                  row_chunk: int | None = None) -> tuple[int, dict]:
+                  row_chunk: int | None = None,
+                  dataflow: bool = True) -> tuple[int, dict]:
     """Run the (strip-mined) xmk4 conv layer through the C-RT simulator;
     return total modeled cycles + phase split.
 
@@ -103,6 +104,7 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
         from repro.sim import PipelinedRuntime
         if row_chunk is not None:
             rt_kwargs["row_chunk"] = row_chunk
+        rt_kwargs["dataflow"] = dataflow
         cop = ArcaneCoprocessor(runtime=PipelinedRuntime(**rt_kwargs))
     elif scheduler == "serial":
         cop = ArcaneCoprocessor(memory=None, **rt_kwargs)
@@ -130,7 +132,7 @@ def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
 
 def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
         widths=(ElemWidth.B, ElemWidth.H, ElemWidth.W), quiet=False,
-        scheduler="serial", row_chunk=None):
+        scheduler="serial", row_chunk=None, dataflow=True):
     rows = []
     for width in widths:
         for k in filters:
@@ -142,7 +144,7 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                 simd = packed_simd_cycles(cost, width)
                 for ln in lanes:
                     arc, shares = arcane_cycles(n, n, k, width, ln, scheduler,
-                                                row_chunk)
+                                                row_chunk, dataflow)
                     row = {
                         "width": width.suffix, "filter": k, "size": n,
                         "lanes": ln, "cycles": arc,
@@ -211,6 +213,10 @@ def main(argv=None):
                    help="intra-instruction pipelining granularity of the "
                         "pipelined scheduler (rows per DMA chunk; 0 disables "
                         "chunking; default: the runtime's builtin default)")
+    p.add_argument("--dataflow", choices=("on", "off"), default="on",
+                   help="kernel-aware per-operand DMA->compute gating in the "
+                        "pipelined scheduler (off: legacy concatenated-"
+                        "stream gating, for A/B comparison)")
     p.add_argument("--sizes", type=int, nargs="+",
                    default=(16, 32, 64, 128, 256),
                    help="square input sizes to sweep")
@@ -233,7 +239,7 @@ def main(argv=None):
                lanes=tuple(args.lanes),
                widths=tuple(width_of[w] for w in args.widths),
                quiet=not args.verbose, scheduler=args.scheduler,
-               row_chunk=args.row_chunk)
+               row_chunk=args.row_chunk, dataflow=args.dataflow == "on")
     summary = None
     if args.scheduler == "pipelined":
         speedups = [r["concurrency_speedup"] for r in rows]
@@ -258,8 +264,8 @@ def main(argv=None):
             print(f"fig4_validate,{k},{val}")
     if args.out_json:
         doc = {"benchmark": "fig4_speedup", "scheduler": args.scheduler,
-               "row_chunk": args.row_chunk, "rows": rows,
-               "summary": summary, "validate": res}
+               "row_chunk": args.row_chunk, "dataflow": args.dataflow,
+               "rows": rows, "summary": summary, "validate": res}
         with open(args.out_json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"fig4,wrote,{args.out_json}")

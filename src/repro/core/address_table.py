@@ -27,6 +27,7 @@ import dataclasses
 import enum
 from typing import Iterator, Optional
 
+from repro.core.isa import KernelError
 from repro.core.regions import StridedRegion
 
 
@@ -73,11 +74,29 @@ class AddressTable:
     def __iter__(self) -> Iterator[ATEntry]:
         return (e for e in self._entries if e is not None and e.valid)
 
+    def free_slots(self) -> int:
+        """Slots available for new registrations (empty or invalidated)."""
+        return sum(1 for e in self._entries if e is None or not e.valid)
+
+    def slots_needed(self, regions: list[tuple[int, "RegionKind"]]) -> int:
+        """Fresh slots a batch of registrations would consume: repeated
+        operands and regions already registered live just up-ref the
+        existing ``(phys_id, kind)`` entry."""
+        have = {(e.phys_id, e.kind) for e in self}
+        return len(set(regions) - have)
+
     def _free_slot(self) -> int:
         for i, e in enumerate(self._entries):
             if e is None or not e.valid:
                 return i
-        raise RuntimeError("Address Table full — raise capacity in config")
+        # Preamble-level rejection (bridge answers 'kill'), not a crash: the
+        # runtime drains deferred write-backs on capacity pressure before
+        # registering, so reaching here means the table is truly over
+        # capacity for the live working set.
+        raise KernelError(
+            f"Address Table full ({self.capacity} entries live) — raise "
+            f"queue_capacity in the config or barrier() to drain deferred "
+            f"write-backs")
 
     def register(self, region: StridedRegion, kind: RegionKind,
                  phys_id: int) -> ATEntry:

@@ -1,0 +1,115 @@
+"""Per-operand dataflow descriptors — kernel-aware DMA→compute gating.
+
+The pipelined C-RT scheduler (:mod:`repro.sim.pipeline`) models NM-Carus-style
+intra-instruction pipelining: each source operand streams into the VPU as a
+row-chunked DMA activity train, and the kernel's compute is split into pieces
+that start as chunks land. *Which* chunks a compute piece actually needs is a
+property of the kernel's dataflow, not of the DMA stream order: output row *i*
+of a GEMM needs row *i* of A but **all** of B, whereas an elementwise kernel
+needs only row *i* of each operand (Neural Cache's operand-blocked dataflow;
+NM-Carus pipelines per operand at sub-instruction granularity).
+
+Each kernel in the library therefore declares one :class:`OperandFlow` per
+source operand:
+
+* :data:`ELEMENTWISE` — compute piece *i* (of *P*) needs the operand's rows up
+  to the proportional share ``ceil((i+1)·rows/P)`` — chunk *i* when the chunk
+  counts line up.
+* :data:`FULL` — every chunk must land before the first piece (GEMM's B,
+  conv's weights).
+* :func:`windowed(w)` — piece *i* needs the proportional share **plus** ``w``
+  lookahead rows (conv/maxpool row windows).
+
+``blocks=B`` marks a row-stacked operand (e.g. the 3-channel conv-layer input,
+three H-row channel planes stacked into one 3H-row matrix): every output row
+reads a window from *each* plane, so the C-RT programs ``B`` interleaved 2D
+DMA descriptors, streaming the planes round-robin — after a fraction *f* of
+the transfer, a fraction *f* of every plane has landed, and windowed gating
+applies per plane instead of degenerating to FULL on the stacked layout.
+
+Kernels that register no descriptor get :data:`FULL` on every operand — the
+conservative (sound) default; only declared dataflow earns overlap.
+
+Descriptors change **timing only**. Functional DMA and compute still execute
+atomically in dependency order, so serial and pipelined outputs remain
+bit-identical regardless of the gating policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Callable, Optional, Sequence
+
+
+class FlowKind(enum.Enum):
+    ELEMENTWISE = "elementwise"
+    FULL = "full"
+    WINDOWED = "windowed"
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandFlow:
+    """How one source operand's DMA chunks gate compute pieces."""
+
+    kind: FlowKind
+    window_rows: int = 0      # WINDOWED lookahead beyond the proportional share
+    blocks: int = 1           # row-stacked planes streamed round-robin
+
+    def __post_init__(self):
+        if self.window_rows < 0:
+            raise ValueError(f"window_rows must be >= 0, got {self.window_rows}")
+        if self.blocks < 1:
+            raise ValueError(f"blocks must be >= 1, got {self.blocks}")
+        if self.kind is not FlowKind.WINDOWED and self.window_rows:
+            raise ValueError(f"window_rows only applies to WINDOWED, "
+                             f"got {self.kind}")
+
+    def rows_required(self, piece: int, n_pieces: int, block_rows: int) -> int:
+        """Rows of each block that must have landed before ``piece`` starts."""
+        if self.kind is FlowKind.FULL:
+            return block_rows
+        share = math.ceil((piece + 1) * block_rows / max(n_pieces, 1))
+        if self.kind is FlowKind.WINDOWED:
+            share += self.window_rows
+        return min(block_rows, share)
+
+
+#: Piece *i* needs chunk *i* of the operand (row-for-row streaming).
+ELEMENTWISE = OperandFlow(FlowKind.ELEMENTWISE)
+#: Every chunk before any piece — the sound default for undeclared kernels.
+FULL = OperandFlow(FlowKind.FULL)
+
+
+def windowed(window_rows: int, *, blocks: int = 1) -> OperandFlow:
+    """Piece *i* needs its proportional rows plus ``window_rows`` lookahead."""
+    return OperandFlow(FlowKind.WINDOWED, window_rows=window_rows,
+                       blocks=blocks)
+
+
+#: Signature of a kernel's dataflow hook: (src_shapes, params, width) ->
+#: one OperandFlow per source operand.
+DataflowFn = Callable[..., Sequence[OperandFlow]]
+
+
+def resolve(dataflow: Optional[DataflowFn],
+            src_shapes: Sequence[tuple[int, int]], params: dict,
+            width) -> tuple[OperandFlow, ...]:
+    """Resolve a kernel's per-operand descriptor at decode time.
+
+    ``None`` (kernel registered without a descriptor) yields FULL for every
+    operand — never optimistic. A descriptor returning the wrong arity is a
+    kernel-registration bug and raises ``ValueError``.
+    """
+    if dataflow is None:
+        return (FULL,) * len(src_shapes)
+    flows = tuple(dataflow(src_shapes, params, width))
+    if len(flows) != len(src_shapes):
+        raise ValueError(
+            f"dataflow descriptor returned {len(flows)} operand flows for "
+            f"{len(src_shapes)} source operands")
+    for f in flows:
+        if not isinstance(f, OperandFlow):
+            raise ValueError(f"dataflow descriptor must return OperandFlow "
+                             f"instances, got {type(f).__name__}")
+    return flows

@@ -30,6 +30,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.dataflow import ELEMENTWISE, FULL, OperandFlow, windowed
 from repro.core.encoding import ElemWidth, NUM_XMK
 from repro.core.matrix import np_dtype
 
@@ -63,6 +64,9 @@ class KernelSpec:
     dst_shape: tuple[int, int]
     params: dict
     cost: KernelCost
+    # Per-source-operand DMA→compute gating policy, resolved at decode time
+    # (FULL for every operand when the kernel registers no descriptor).
+    dataflow: tuple[OperandFlow, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +79,11 @@ class KernelDef:
     # body(sources, params, width) -> destination ndarray.
     body: Callable[[Sequence[np.ndarray], dict, ElemWidth], np.ndarray]
     doc: str = ""
+    # dataflow(src_shapes, params, width) -> one OperandFlow per source: how
+    # DMA chunks of each operand gate compute pieces in the pipelined
+    # scheduler (see repro.core.dataflow). None -> FULL on every operand.
+    dataflow: Optional[Callable[[Sequence[tuple[int, int]], dict, ElemWidth],
+                                Sequence[OperandFlow]]] = None
 
 
 class KernelLibrary:
@@ -282,16 +291,57 @@ def _convlayer_body(sources, params, width):
     return _wrap(np.maximum(pooled, 0), width)
 
 
+# ---------------------------------------------------------------------------
+# Per-operand dataflow descriptors (pipelined-scheduler gating; §IV-B timing).
+
+def _gemm_dataflow(shapes, params, width):
+    # Output row i = A[i] @ B (+ beta*C[i]): A and the accumulator stream
+    # row-for-row, but every row of B participates in every output row.
+    return (ELEMENTWISE, FULL) + (ELEMENTWISE,) * (len(shapes) - 2)
+
+
+def _leakyrelu_dataflow(shapes, params, width):
+    return (ELEMENTWISE,)
+
+
+def _maxpool_dataflow(shapes, params, width):
+    # Output row i reads input rows i*stride .. i*stride+win-1: the window
+    # overhang beyond the proportional share is at most `win` rows.
+    win = params.get("win_size", 2)
+    return (windowed(win),)
+
+
+def _conv2d_dataflow(shapes, params, width):
+    # Valid conv: output row i reads input rows i .. i+km-1; the filter is
+    # read in full by every output row.
+    km = shapes[1][0]
+    return (windowed(km), FULL)
+
+
+def _convlayer_dataflow(shapes, params, width):
+    # 3-channel-stacked input (3H rows = three H-row planes): every output
+    # row reads a k-row window from EACH plane, so the planes stream as three
+    # round-robin-interleaved DMA trains; the 2x2 pool consumes two conv rows
+    # per output row, hence the +2 lookahead on top of the filter window.
+    km = shapes[1][0] // 3
+    return (windowed(km + 2, blocks=3), FULL)
+
+
 def default_library() -> KernelLibrary:
     lib = KernelLibrary()
     lib.register(KernelDef(0, "gemm", 3, _gemm_preamble, _gemm_body,
-                           "D = alpha * ms1 @ ms2 + beta * ms3 (Q8.8 scalars)"))
+                           "D = alpha * ms1 @ ms2 + beta * ms3 (Q8.8 scalars)",
+                           dataflow=_gemm_dataflow))
     lib.register(KernelDef(1, "leakyrelu", 1, _leakyrelu_preamble, _leakyrelu_body,
-                           "D = x >= 0 ? x : alpha * x (alpha Q8.8)"))
+                           "D = x >= 0 ? x : alpha * x (alpha Q8.8)",
+                           dataflow=_leakyrelu_dataflow))
     lib.register(KernelDef(2, "maxpool", 1, _maxpool_preamble, _maxpool_body,
-                           "D = maxpool(ms1, win_size, stride)"))
+                           "D = maxpool(ms1, win_size, stride)",
+                           dataflow=_maxpool_dataflow))
     lib.register(KernelDef(3, "conv2d", 2, _conv2d_preamble, _conv2d_body,
-                           "D = conv2d_valid(ms1, ms2)"))
+                           "D = conv2d_valid(ms1, ms2)",
+                           dataflow=_conv2d_dataflow))
     lib.register(KernelDef(4, "conv_layer", 2, _convlayer_preamble, _convlayer_body,
-                           "D = relu(maxpool2x2(conv3ch(ms1, ms2))) — fused"))
+                           "D = relu(maxpool2x2(conv3ch(ms1, ms2))) — fused",
+                           dataflow=_convlayer_dataflow))
     return lib

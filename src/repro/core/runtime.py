@@ -27,6 +27,7 @@ from typing import Optional
 
 from repro.core.address_table import AddressTable, RegionKind
 from repro.core.cache import ArcaneCache, MainMemory
+from repro.core.dataflow import resolve as resolve_dataflow
 from repro.core.encoding import ElemWidth, Offload, NUM_MATRIX_REGS
 from repro.core.hazards import DependencyTracker, KernelDeps
 from repro.core.isa import KernelError, KernelLibrary, KernelSpec, default_library
@@ -80,15 +81,18 @@ class Allocation:
     """Result of the Matrix Allocator step for one kernel.
 
     ``dma_segments`` records each memory→VPU source transfer as
-    ``(rows, dma_cycles)`` — the pipelined scheduler chunks these into
-    row-granular activities; the serial scheduler only uses the totals.
+    ``(src_idx, rows, dma_cycles)`` — the pipelined scheduler chunks these
+    into per-operand row-granular activity trains (``src_idx`` identifies
+    which operand's dataflow policy gates the chunks; operands already
+    resident, including repeated ones, produce no segment); the serial
+    scheduler only uses the totals.
     """
 
     src_res: list[ResidentMatrix]
     dst_res: ResidentMatrix
     dma_cycles: int
     wb_cycles: int
-    dma_segments: list[tuple[int, int]]      # (rows, cycles) per source DMA-in
+    dma_segments: list[tuple[int, int, int]]  # (src_idx, rows, cycles) per DMA-in
     wb_segments: list[tuple[int, int]]       # (vpu, cycles) per consolidation
 
 
@@ -176,7 +180,19 @@ class CacheRuntime:
 
         spec = KernelSpec(func5=instr.func5, name=kdef.name, width=instr.width,
                           src_shapes=tuple(s.shape for s in srcs),
-                          dst_shape=dst_shape, params=params, cost=cost)
+                          dst_shape=dst_shape, params=params, cost=cost,
+                          dataflow=resolve_dataflow(
+                              kdef.dataflow, tuple(s.shape for s in srcs),
+                              params, instr.width))
+        # Capacity pressure: make room in the Address Table *before* admitting
+        # (a failed registration mid-admission would leak tracker state).
+        # Repeated operands and regions already registered only up-ref, so
+        # count the genuinely fresh slots. The drain first retires the queue,
+        # then lands deferred write-backs — each release frees an AT entry —
+        # and only a table that stays full after that raises.
+        self._relieve_at_pressure(self.at.slots_needed(
+            [(s.phys_id, RegionKind.SRC) for s in srcs]
+            + [(dst.phys_id, RegionKind.DST)]))
         deps = self.tracker.admit(srcs, dst)
         for s in srcs:
             self.at.register(s.region, RegionKind.SRC, s.phys_id)
@@ -280,17 +296,17 @@ class CacheRuntime:
         if not self.cache.acquire_lock():
             raise RuntimeError("cache lock already held")
         dma_cycles = wb_cycles = 0
-        segments: list[tuple[int, int]] = []
+        segments: list[tuple[int, int, int]] = []
         self._wb_segments = wb_segments = []
         try:
             src_res = []
-            for s in qk.src_bindings:
+            for si, s in enumerate(qk.src_bindings):
                 res, dma_c, wb_c = self._allocate_source(vpu, s)
                 src_res.append(res)
                 dma_cycles += dma_c
                 wb_cycles += wb_c
                 if dma_c:
-                    segments.append((s.rows, dma_c))
+                    segments.append((si, s.rows, dma_c))
                 self.at.mark_allocated(s.phys_id)
             dst_res = self._allocate_destination(vpu, qk.dst_binding)
         finally:
@@ -499,12 +515,17 @@ class CacheRuntime:
             self.tracker.unpin(phys_id)
 
     # ================================================================= barrier
-    def barrier(self) -> None:
-        """Drain all queued kernels and write back all deferred results."""
-        self.run_pending()
-        if self.queue:
-            raise RuntimeError("kernel queue not drained — dependency deadlock?")
+    def _drain_deferred_residents(self, need_slots: Optional[int] = None) -> None:
+        """Write back deferred dirty results and drop clean residents,
+        releasing their AT destination regions — all of them (``barrier``),
+        or just enough to free ``need_slots`` AT slots (capacity-pressure
+        relief: residency affinity of the rest survives). Only sound once the
+        kernel queue is empty (pending readers re-fetch from memory
+        afterwards — the consolidation lands the bytes first, so this is a
+        pure timing cost)."""
         for phys_id in list(self.resident):
+            if need_slots is not None and self.at.free_slots() >= need_slots:
+                return
             res = self.resident.get(phys_id)
             if res is None:              # invalidated by an earlier landing
                 continue
@@ -520,6 +541,35 @@ class CacheRuntime:
                 # host loads don't stall on a stale registration.
                 self._evict_resident(phys_id)
                 self.at.release(phys_id, RegionKind.DST)
+
+    def _relieve_at_pressure(self, need: int) -> None:
+        """Ensure ``need`` free Address Table slots before a registration.
+
+        Static tables fill up when deferred write-backs pin DST entries
+        (capacity pressure, §IV-B static allocation): first drain the kernel
+        queue (retires release SRC entries), then force the deferred
+        write-backs to land (each release frees its DST entry). A table that
+        is still full afterwards is genuinely over capacity — raise a clear
+        :class:`KernelError` instead of corrupting a half-registered kernel.
+        """
+        if need <= 0 or self.at.free_slots() >= need:
+            return
+        self.run_pending()
+        if self.at.free_slots() < need and not self.queue:
+            self._drain_deferred_residents(need_slots=need)
+        if self.at.free_slots() < need:
+            raise KernelError(
+                f"Address Table full ({self.at.capacity} entries, "
+                f"{self.at.free_slots()} free, {need} needed) even after a "
+                f"deferred write-back drain — raise queue_capacity (the AT "
+                f"holds 4 entries per queue slot) in the config")
+
+    def barrier(self) -> None:
+        """Drain all queued kernels and write back all deferred results."""
+        self.run_pending()
+        if self.queue:
+            raise RuntimeError("kernel queue not drained — dependency deadlock?")
+        self._drain_deferred_residents()
 
     def _binding_of(self, phys_id: int) -> MatrixBinding:
         for b in self.matrix_map.live_bindings():

@@ -35,7 +35,7 @@ _SECTIONS = {
     "cache": ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity"),
     "vpu": ("lanes", "dma_bytes_per_cycle"),
     "ecpu": ("decode_cycles", "schedule_cycles", "issue_cycles_per_vins"),
-    "pipeline": ("row_chunk",),
+    "pipeline": ("row_chunk", "dataflow"),
     "memory": ("bytes",),
 }
 
@@ -58,10 +58,20 @@ class SimConfig:
     schedule_cycles: int = 120
     issue_cycles_per_vins: int = 4
     row_chunk: int = 8
+    dataflow: bool = True
     memory_bytes: int = 16 << 20
     description: str = ""
 
     def __post_init__(self):
+        if isinstance(self.dataflow, str):
+            # YAML spells the knob on/off; quoted strings normalise too.
+            val = {"on": True, "true": True, "yes": True,
+                   "off": False, "false": False, "no": False,
+                   }.get(self.dataflow.lower())
+            if val is None:
+                raise ConfigError(
+                    f"pipeline.dataflow must be on/off, got {self.dataflow!r}")
+            object.__setattr__(self, "dataflow", val)
         for f in ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity",
                   "lanes", "dma_bytes_per_cycle", "memory_bytes"):
             if getattr(self, f) <= 0:
@@ -106,7 +116,7 @@ class SimConfig:
         if scheduler == "pipelined":
             from repro.sim.pipeline import PipelinedRuntime
             return PipelinedRuntime(tracer=tracer, row_chunk=self.row_chunk,
-                                    **kwargs)
+                                    dataflow=self.dataflow, **kwargs)
         raise ConfigError(
             f"unknown scheduler {scheduler!r} (expected 'serial'|'pipelined')")
 

@@ -17,10 +17,13 @@ produce bit-identical numerics and reproducible traces run-to-run).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
 from typing import Any, Iterator, Optional
+
+from repro.core.dataflow import OperandFlow
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +121,59 @@ def split_proportional(total: int, weights: list[int]) -> list[int]:
         out.append(x - acc)
         acc = x
     return out
+
+
+def interleave_blocks(parts_per_block: list[list[int]]) -> list[tuple[int, int]]:
+    """Round-robin interleave per-block chunk lists into one DMA order.
+
+    Models the C-RT programming one 2D DMA descriptor per row-stacked block
+    (e.g. the three channel planes of the conv-layer input) and streaming
+    them alternately, so every block's early rows land early. Returns
+    ``(block, rows)`` entries in transfer order.
+    """
+    out: list[tuple[int, int]] = []
+    for j in range(max((len(p) for p in parts_per_block), default=0)):
+        for b, parts in enumerate(parts_per_block):
+            if j < len(parts):
+                out.append((b, parts[j]))
+    return out
+
+
+@dataclasses.dataclass
+class ChunkTrain:
+    """One operand's row-chunked DMA activity train, per stacked block.
+
+    ``cum_rows[b][j]`` is the cumulative row count of block ``b`` after its
+    chunk ``j``; ``end_times[b][j]`` is the modeled completion cycle of that
+    chunk. The gating question "when may compute piece *i* start, given this
+    operand's dataflow policy?" reduces to: for each block, which chunk first
+    covers the rows the policy requires — the answer is the max of those
+    chunks' end times.
+    """
+
+    cum_rows: list[list[int]]
+    end_times: list[list[int]]
+
+    @property
+    def pace(self) -> int:
+        """Chunk count of the longest block — the train's natural piece count
+        when it paces the compute split."""
+        return max(len(c) for c in self.cum_rows)
+
+    def piece_weights(self) -> list[int]:
+        """Row weights of the pacing block's chunks (compute-split weights)."""
+        longest = max(self.cum_rows, key=len)
+        return [c - p for c, p in zip(longest, [0] + longest[:-1])]
+
+    def gate(self, flow: OperandFlow, piece: int, n_pieces: int) -> int:
+        """Cycle at which piece ``piece`` (of ``n_pieces``) has every chunk
+        this operand's ``flow`` demands."""
+        t = 0
+        for cum, ends in zip(self.cum_rows, self.end_times):
+            need = flow.rows_required(piece, n_pieces, cum[-1])
+            j = bisect.bisect_left(cum, need)
+            t = max(t, ends[j])
+        return t
 
 
 class Resource:

@@ -28,8 +28,10 @@ import dataclasses
 from typing import Optional
 
 from repro.core.address_table import RegionKind
+from repro.core.dataflow import FULL, FlowKind
 from repro.core.runtime import CacheRuntime, QueuedKernel
-from repro.sim.events import (EventQueue, Resource, row_chunks,
+from repro.sim.events import (ChunkTrain, EventQueue, Resource,
+                              interleave_blocks, row_chunks,
                               split_proportional)
 from repro.sim.trace import Tracer
 
@@ -55,19 +57,29 @@ class PipelinedRuntime(CacheRuntime):
     ``row_chunk`` sets the intra-instruction pipelining granularity
     (NM-Carus-style): each source DMA-in is modeled as chunks of at most
     ``row_chunk`` rows, and the kernel's compute is split into matching
-    pieces, each starting only after its chunk has landed — so the datapath
-    starts as soon as the first rows arrive instead of waiting for the whole
-    operand. ``row_chunk=0`` disables chunking (whole-transfer granularity).
-    Functional state mutation is unchanged — only the timing model is
-    chunked, so outputs stay bit-identical to the serial scheduler.
+    pieces, each starting only after the chunks it needs have landed — so the
+    datapath starts as soon as the first rows arrive instead of waiting for
+    the whole operand. ``row_chunk=0`` disables chunking (whole-transfer
+    granularity).
+
+    ``dataflow`` selects the gating model. ``True`` (default): each operand
+    streams as its *own* chunk train and compute piece *i* waits for the
+    per-operand chunk set the kernel's dataflow descriptor demands
+    (:mod:`repro.core.dataflow` — e.g. all of GEMM's B before the first
+    piece). ``False``: the legacy concatenated-stream model (piece *i* gated
+    on chunk *i* of the sources concatenated in operand order) — optimistic
+    for GEMM-like kernels, kept as an A/B reference. Functional state
+    mutation is unchanged either way — only the timing model differs, so
+    outputs stay bit-identical to the serial scheduler.
     """
 
     def __init__(self, *args, tracer: Optional[Tracer] = None,
-                 row_chunk: int = 8, **kwargs):
+                 row_chunk: int = 8, dataflow: bool = True, **kwargs):
         super().__init__(*args, **kwargs)
         if row_chunk < 0:
             raise ValueError(f"row_chunk must be >= 0, got {row_chunk}")
         self.row_chunk = row_chunk
+        self.dataflow = bool(dataflow)
         self.tracer = tracer or Tracer()
         self.sim_time = 0
         self.res_ecpu = Resource("ecpu")
@@ -126,8 +138,13 @@ class PipelinedRuntime(CacheRuntime):
             t = ev.time
             if ev.kind == "compute_done":
                 self._handle_compute_done(ev.payload, t, inflight, eq)
-            # "dispatch" / "wb_done" events only advance time; the dispatch
-            # sweep at the top of the loop does the work.
+            elif ev.kind == "wb_done":
+                # A port that just finished a write-back immediately takes
+                # the next least-booked-port drain instead of leaving it for
+                # the final barrier flush.
+                self._drain_idle_dma(t, inflight, eq)
+            # "dispatch" events only advance time; the dispatch sweep at the
+            # top of the loop does the work.
 
         end = max([t, self.sim_time]
                   + [r.free_at for r in self._all_resources()])
@@ -246,38 +263,96 @@ class PipelinedRuntime(CacheRuntime):
                              kernel=kid, vpu=wv)
 
         # Row-chunked DMA-in (intra-instruction pipelining): each source
-        # transfer splits into row_chunk-row activities on the DMA port.
-        chunk_rows: list[int] = []
-        chunk_cycles: list[int] = []
-        for rows, cycles in alloc.dma_segments:
-            parts = row_chunks(rows, self.row_chunk)
-            chunk_rows.extend(parts)
-            chunk_cycles.extend(split_proportional(cycles, parts))
+        # operand streams as its OWN train of row_chunk-row activities on the
+        # VPU's DMA port. With dataflow gating on, FULL operands (GEMM's B,
+        # conv weights) stream first so the row-paced operands can feed the
+        # datapath while still in flight; trains are keyed by physical
+        # binding, so a repeated operand (gemm(A, A)) gates every occurrence
+        # on the one train that was actually scheduled.
+        flows = (qk.spec.dataflow
+                 if self.dataflow and qk.spec.dataflow else None)
+        segs = alloc.dma_segments
+        if flows is not None:
+            order = sorted(range(len(segs)),
+                           key=lambda i: (flows[segs[i][0]].kind
+                                          is not FlowKind.FULL, i))
+            segs = [segs[i] for i in order]
+        trains: dict[int, ChunkTrain] = {}
+        eff_flows = list(flows) if flows is not None else None
         dma_ivs = []
-        for ci, cyc in enumerate(chunk_cycles):
-            iv = self.res_dma[v].acquire(dma_start, cyc,
-                                         label=f"k{kid} dma-in[{ci}]")
-            dma_ivs.append(iv)
-            self.tracer.emit(f"{qk.spec.name} k{kid} dma-in[{ci}]",
-                             "allocation", f"vpu{v}.dma", iv.start,
-                             iv.duration, kernel=kid, vpu=v, chunk=ci)
+        chunk_rows: list[int] = []
+        ci = 0
+        for si, rows, cycles in segs:
+            flow = flows[si] if flows is not None else None
+            blocks = 1
+            if flow is not None and flow.blocks > 1:
+                if rows % flow.blocks == 0:
+                    blocks = flow.blocks
+                else:
+                    # Rows don't split into the declared blocks: stream as one
+                    # train and gate FULL — a per-row window over a layout we
+                    # can't decompose would be optimistic, not conservative.
+                    eff_flows[si] = FULL
+            parts = [row_chunks(rows // blocks, self.row_chunk)
+                     for _ in range(blocks)]
+            entries = interleave_blocks(parts)
+            cyc_parts = split_proportional(cycles, [r for _, r in entries])
+            cum: list[list[int]] = [[] for _ in range(blocks)]
+            ends: list[list[int]] = [[] for _ in range(blocks)]
+            for (b, r), cyc in zip(entries, cyc_parts):
+                iv = self.res_dma[v].acquire(
+                    dma_start, cyc, label=f"k{kid} dma-in[op{si}.{ci}]")
+                dma_ivs.append(iv)
+                if flows is None:       # legacy concatenated-gating weights
+                    chunk_rows.append(r)
+                cum[b].append((cum[b][-1] if cum[b] else 0) + r)
+                ends[b].append(iv.end)
+                self.tracer.emit(f"{qk.spec.name} k{kid} dma-in[op{si}.{ci}]",
+                                 "allocation", f"vpu{v}.dma", iv.start,
+                                 iv.duration, lane=f"op{si}", kernel=kid,
+                                 vpu=v, chunk=ci, operand=si)
+                ci += 1
+            trains[qk.src_bindings[si].phys_id] = ChunkTrain(cum, ends)
 
         compute_cycles = self._compute_step(qk, vpu, alloc.src_res,
                                             alloc.dst_res)
         self.stats.compute_cycles += compute_cycles
-        # Matching compute pieces: piece i is gated on chunk i having landed,
-        # so the datapath starts after the first chunk instead of the full
-        # transfer. With no DMA (all operands resident) compute is one piece.
-        if dma_ivs:
+        # Matching compute pieces. Dataflow gating: the piece count is paced
+        # by the longest non-FULL train, and piece i waits for the chunk set
+        # every operand's policy demands (operands without a train are
+        # already resident — they impose no gate). Legacy (dataflow off):
+        # piece i is gated on chunk i of the concatenated stream. With no DMA
+        # at all, compute is one piece.
+        if dma_ivs and flows is not None:
+            constraints = [(trains[s.phys_id], eff_flows[si])
+                           for si, s in enumerate(qk.src_bindings)
+                           if s.phys_id in trains]
+            pacing = [tr for tr, fl in constraints
+                      if fl.kind is not FlowKind.FULL]
+            n_pieces = max((tr.pace for tr in pacing), default=1)
+            weights = next((tr.piece_weights() for tr in pacing
+                            if tr.pace == n_pieces), [1] * n_pieces)
+            pieces = split_proportional(compute_cycles, weights)
+            dp_iv = None
+            for pi, cyc in enumerate(pieces):
+                ready = max([lock_iv.end] + [tr.gate(fl, pi, n_pieces)
+                                             for tr, fl in constraints])
+                dp_iv = self.res_dp[v].acquire(ready, cyc,
+                                               label=f"k{kid} {qk.spec.name}"
+                                                     f"[{pi}]")
+                self.tracer.emit(f"{qk.spec.name} k{kid}[{pi}]", "compute",
+                                 f"vpu{v}.datapath", dp_iv.start,
+                                 dp_iv.duration, kernel=kid, vpu=v, chunk=pi)
+        elif dma_ivs:
             pieces = split_proportional(compute_cycles, chunk_rows)
             dp_iv = None
-            for ci, (dma_iv, cyc) in enumerate(zip(dma_ivs, pieces)):
+            for pi, (dma_iv, cyc) in enumerate(zip(dma_ivs, pieces)):
                 dp_iv = self.res_dp[v].acquire(dma_iv.end, cyc,
                                                label=f"k{kid} {qk.spec.name}"
-                                                     f"[{ci}]")
-                self.tracer.emit(f"{qk.spec.name} k{kid}[{ci}]", "compute",
+                                                     f"[{pi}]")
+                self.tracer.emit(f"{qk.spec.name} k{kid}[{pi}]", "compute",
                                  f"vpu{v}.datapath", dp_iv.start,
-                                 dp_iv.duration, kernel=kid, vpu=v, chunk=ci)
+                                 dp_iv.duration, kernel=kid, vpu=v, chunk=pi)
         else:
             dp_iv = self.res_dp[v].acquire(lock_iv.end, compute_cycles,
                                            label=f"k{kid} {qk.spec.name}")
@@ -328,16 +403,32 @@ class PipelinedRuntime(CacheRuntime):
 
     def _drain_idle_dma(self, t: int, inflight: dict, eq: EventQueue) -> None:
         """Opportunistically write back deferred results whose consumers are
-        all done, using DMA ports that would otherwise sit idle."""
+        all done, using DMA ports that would otherwise sit idle.
+
+        Eligible residents are served least-booked-port first — ascending
+        DMA-port ``free_at`` on the event timelines, not resident scan order
+        — so on wide configs the drains land on the ports with the most
+        headroom; each port takes one drain per sweep, and the ``wb_done``
+        event triggers the next sweep."""
         busy_phys: set[int] = set()
         for qk, _, _, _ in inflight.values():
             busy_phys.update(s.phys_id for s in qk.src_bindings)
             busy_phys.add(qk.dst_binding.phys_id)
-        for phys_id in list(self.resident):
+        eligible = []
+        for phys_id, res in self.resident.items():
+            if (phys_id in busy_phys or self._needed_later(phys_id)
+                    or not res.dirty):
+                continue
+            port = self.res_dma[res.vpu]
+            eligible.append((port.free_at, port.busy_cycles, phys_id))
+        eligible.sort()
+        for _, _, phys_id in eligible:
             res = self.resident.get(phys_id)
-            if (res is None or phys_id in busy_phys
-                    or self._needed_later(phys_id)
-                    or not res.dirty or not self.res_dma[res.vpu].idle_at(t)):
+            # Re-check: an earlier drain's alias flush may have landed this
+            # resident, and a port that took a drain this sweep is no longer
+            # idle — its next drain waits for the wb_done sweep.
+            if (res is None or not res.dirty
+                    or not self.res_dma[res.vpu].idle_at(t)):
                 continue
             b = self._binding_of(phys_id)
             v = res.vpu
@@ -359,13 +450,14 @@ class PipelinedRuntime(CacheRuntime):
         return any(phys_id in qk.deps.sources for qk in self._pending_pipe)
 
     # -------------------------------------------------------------- barrier
-    def barrier(self) -> None:
-        """Drain the queue, then flush deferred results with timed DMA."""
-        self.run_pending()
-        if self.queue:
-            raise RuntimeError("kernel queue not drained — dependency deadlock?")
+    def _drain_deferred_residents(self, need_slots: Optional[int] = None) -> None:
+        """Timed flush of deferred results (all for barrier, just enough AT
+        slots for capacity-pressure relief): each consolidation books on the
+        owning VPU's DMA port, so the flushes overlap across ports."""
         t = self.sim_time
         for phys_id in list(self.resident):
+            if need_slots is not None and self.at.free_slots() >= need_slots:
+                break
             res = self.resident.get(phys_id)
             if res is None:              # invalidated by an earlier landing
                 continue
@@ -388,3 +480,10 @@ class PipelinedRuntime(CacheRuntime):
                 self.at.release(phys_id, RegionKind.DST)
         self.sim_time = max([self.sim_time]
                             + [r.free_at for r in self._all_resources()])
+
+    def barrier(self) -> None:
+        """Drain the queue, then flush deferred results with timed DMA."""
+        self.run_pending()
+        if self.queue:
+            raise RuntimeError("kernel queue not drained — dependency deadlock?")
+        self._drain_deferred_residents()

@@ -27,6 +27,14 @@ class TraceRecord:
     start: int             # cycles
     duration: int          # cycles
     args: tuple            # sorted (key, value) pairs — keeps records hashable
+    lane: Optional[str] = None   # sub-lane within the resource, e.g. "op1"
+                                 # (per-operand DMA trains) — display only;
+                                 # busy/phase accounting stays per resource
+
+    @property
+    def row(self) -> str:
+        """Display row in the Chrome export: resource, or resource/lane."""
+        return f"{self.resource}/{self.lane}" if self.lane else self.resource
 
 
 class Tracer:
@@ -38,12 +46,13 @@ class Tracer:
         self._resources: list[str] = []   # insertion order -> tid
 
     def emit(self, name: str, phase: str, resource: str, start: int,
-             duration: int, **args: Any) -> TraceRecord:
+             duration: int, lane: Optional[str] = None,
+             **args: Any) -> TraceRecord:
         if phase not in PHASES:
             raise ValueError(f"unknown phase {phase!r}, expected one of {PHASES}")
         rec = TraceRecord(name=name, phase=phase, resource=resource,
                           start=int(start), duration=int(duration),
-                          args=tuple(sorted(args.items())))
+                          args=tuple(sorted(args.items())), lane=lane)
         self.records.append(rec)
         if resource not in self._resources:
             self._resources.append(resource)
@@ -55,8 +64,19 @@ class Tracer:
 
     # ------------------------------------------------------------- exporters
     def to_chrome(self) -> dict:
-        """Build the Chrome trace_event JSON object (dict, ready to dump)."""
-        tid_of = {r: i for i, r in enumerate(self._resources)}
+        """Build the Chrome trace_event JSON object (dict, ready to dump).
+
+        Laned records (per-operand DMA trains) render as their own thread
+        rows, grouped directly under their parent resource row."""
+        lanes_of: dict[str, list[str]] = {r: [] for r in self._resources}
+        for rec in self.records:
+            if rec.lane is not None and rec.lane not in lanes_of[rec.resource]:
+                lanes_of[rec.resource].append(rec.lane)
+        tid_of: dict[str, int] = {}
+        for r in self._resources:
+            tid_of[r] = len(tid_of)
+            for lane in lanes_of[r]:
+                tid_of[f"{r}/{lane}"] = len(tid_of)
         events: list[dict] = [{
             "name": "process_name", "ph": "M", "pid": 0, "tid": 0,
             "args": {"name": self.process_name},
@@ -74,7 +94,7 @@ class Tracer:
                 "ts": rec.start,          # 1 modeled cycle == 1 us on screen
                 "dur": max(rec.duration, 1),   # zero-width events are invisible
                 "pid": 0,
-                "tid": tid_of[rec.resource],
+                "tid": tid_of[rec.row],
                 "args": dict(rec.args),
             })
         return {"traceEvents": events, "displayTimeUnit": "ms",

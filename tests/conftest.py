@@ -6,6 +6,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+try:
+    # Capped hypothesis profiles keep tier-1 inside the CI time budget: the
+    # workflow exports HYPOTHESIS_PROFILE=ci (25 examples/test); a plain
+    # local run keeps hypothesis's own defaults. The dev extra may be absent
+    # — property tests importorskip hypothesis per-module.
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", max_examples=25, deadline=None)
+    _hyp_settings.register_profile("thorough", max_examples=500,
+                                   deadline=None)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        _hyp_settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+except ImportError:  # pragma: no cover - dev extra absent
+    pass
+
 
 @pytest.fixture
 def rng():

@@ -1,0 +1,551 @@
+"""Kernel-aware per-operand dataflow gating: descriptors, bit-identity,
+makespan monotonicity, repeated-operand/capacity/drain regressions."""
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core.address_table import AddressTable, RegionKind
+from repro.core.dataflow import (ELEMENTWISE, FULL, FlowKind, OperandFlow,
+                                 resolve, windowed)
+from repro.core.isa import KernelError, default_library
+from repro.core.runtime import CacheRuntime
+from repro.sim import PipelinedRuntime, SimConfig
+
+
+def make_cop(scheduler, dataflow=True, row_chunk=4, **kw):
+    kw.setdefault("n_vpus", 4)
+    kw.setdefault("vregs_per_vpu", 16)
+    kw.setdefault("vlen_bytes", 512)
+    if scheduler == "serial":
+        return ArcaneCoprocessor(runtime=CacheRuntime(**kw))
+    return ArcaneCoprocessor(runtime=PipelinedRuntime(
+        dataflow=dataflow, row_chunk=row_chunk, **kw))
+
+
+# --------------------------------------------------------------- descriptors
+def test_default_descriptor_is_full_per_operand():
+    flows = resolve(None, ((4, 4), (4, 4)), {}, ElemWidth.W)
+    assert flows == (FULL, FULL)
+
+
+def test_resolve_rejects_wrong_arity_and_type():
+    with pytest.raises(ValueError, match="2 operand flows for 1"):
+        resolve(lambda s, p, w: (ELEMENTWISE, FULL), ((4, 4),), {},
+                ElemWidth.W)
+    with pytest.raises(ValueError, match="OperandFlow"):
+        resolve(lambda s, p, w: ("full",), ((4, 4),), {}, ElemWidth.W)
+
+
+def test_operand_flow_validation():
+    with pytest.raises(ValueError, match="window_rows"):
+        OperandFlow(FlowKind.ELEMENTWISE, window_rows=2)
+    with pytest.raises(ValueError, match="blocks"):
+        OperandFlow(FlowKind.FULL, blocks=0)
+    with pytest.raises(ValueError, match="window_rows"):
+        windowed(-1)
+
+
+def test_rows_required_math():
+    # ELEMENTWISE: proportional share, monotone, last piece needs all rows.
+    assert ELEMENTWISE.rows_required(0, 4, 16) == 4
+    assert ELEMENTWISE.rows_required(3, 4, 16) == 16
+    # FULL: everything before the first piece.
+    assert FULL.rows_required(0, 4, 16) == 16
+    # WINDOWED: share plus lookahead, clamped to the operand.
+    w = windowed(3)
+    assert w.rows_required(0, 4, 16) == 7
+    assert w.rows_required(3, 4, 16) == 16
+
+
+def test_library_descriptors_match_issue_table():
+    lib = default_library()
+    gemm = lib.lookup(0).dataflow(((4, 8), (8, 4), (4, 4)), {}, ElemWidth.W)
+    assert [f.kind for f in gemm] == [FlowKind.ELEMENTWISE, FlowKind.FULL,
+                                      FlowKind.ELEMENTWISE]
+    (lrelu,) = lib.lookup(1).dataflow(((4, 4),), {}, ElemWidth.W)
+    assert lrelu.kind is FlowKind.ELEMENTWISE
+    (mp,) = lib.lookup(2).dataflow(((8, 8),), {"win_size": 3, "stride": 1},
+                                   ElemWidth.W)
+    assert mp.kind is FlowKind.WINDOWED and mp.window_rows == 3
+    conv = lib.lookup(3).dataflow(((8, 8), (3, 3)), {}, ElemWidth.W)
+    assert (conv[0].kind, conv[1].kind) == (FlowKind.WINDOWED, FlowKind.FULL)
+    cl = lib.lookup(4).dataflow(((24, 8), (9, 3)), {}, ElemWidth.W)
+    assert cl[0].kind is FlowKind.WINDOWED and cl[0].blocks == 3
+    assert cl[0].window_rows == 5         # k + 2 pool lookahead
+    assert cl[1] is FULL
+
+
+# ------------------------------------------------- per-kernel fixed oracles
+def _issue_kernel(cop, name, rng, n=16):
+    """Issue one library kernel on fresh deterministic inputs; returns
+    (dst_addr, dst_shape, oracle ndarray)."""
+    if name == "gemm":
+        A = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        B = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        C = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aA, aB, aC = (cop.place(M, ElemWidth.W) for M in (A, B, C))
+        aD = cop.malloc(n * n * 4)
+        cop._xmr_w(0, aA, 0, n, n)
+        cop._xmr_w(1, aB, 0, n, n)
+        cop._xmr_w(2, aC, 0, n, n)
+        cop._xmr_w(3, aD, 0, n, n)
+        cop._gemm_w(3, 0, 1, 2, alpha=1.0, beta=1.0)
+        ref = (A.astype(np.int64) @ B.astype(np.int64)
+               + C.astype(np.int64)).astype(np.int32)
+        return aD, (n, n), ref
+    if name == "leakyrelu":
+        X = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aX = cop.place(X, ElemWidth.W)
+        aD = cop.malloc(n * n * 4)
+        cop._xmr_w(0, aX, 0, n, n)
+        cop._xmr_w(1, aD, 0, n, n)
+        cop._leakyrelu(ElemWidth.W, 1, 0, alpha=0.25)
+        X64 = X.astype(np.int64)
+        ref = np.where(X >= 0, X64, np.round(0.25 * X64)).astype(np.int32)
+        return aD, (n, n), ref
+    if name == "maxpool":
+        X = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aX = cop.place(X, ElemWidth.W)
+        aD = cop.malloc((n // 2) * (n // 2) * 4)
+        cop._xmr_w(0, aX, 0, n, n)
+        cop._xmr_w(1, aD, 0, n // 2, n // 2)
+        cop._maxpool(ElemWidth.W, 1, 0, 2, 2)
+        ref = X.reshape(n // 2, 2, n // 2, 2).max(axis=(1, 3))
+        return aD, (n // 2, n // 2), ref
+    if name == "conv2d":
+        X = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        F = rng.integers(-3, 3, (3, 3), dtype=np.int32)
+        aX, aF = cop.place(X, ElemWidth.W), cop.place(F, ElemWidth.W)
+        m = n - 2
+        aD = cop.malloc(m * m * 4)
+        cop._xmr_w(0, aX, 0, n, n)
+        cop._xmr_w(1, aF, 0, 3, 3)
+        cop._xmr_w(2, aD, 0, m, m)
+        cop._conv2d(ElemWidth.W, 2, 0, 1)
+        from repro.core.isa import _conv2d_valid
+        ref = _conv2d_valid(X, F).astype(np.int32)
+        return aD, (m, m), ref
+    if name == "conv_layer":
+        X = rng.integers(-5, 5, (3 * n, n), dtype=np.int32)
+        F = rng.integers(-3, 3, (9, 3), dtype=np.int32)
+        aX, aF = cop.place(X, ElemWidth.W), cop.place(F, ElemWidth.W)
+        cm = n - 2
+        om = cm // 2
+        aD = cop.malloc(om * om * 4)
+        cop._xmr_w(0, aX, 0, 3 * n, n)
+        cop._xmr_w(1, aF, 0, 9, 3)
+        cop._xmr_w(2, aD, 0, om, om)
+        cop._conv_layer(ElemWidth.W, 2, 0, 1)
+        from repro.core.isa import _conv2d_valid
+        acc = sum(_conv2d_valid(X[c * n:(c + 1) * n], F[c * 3:(c + 1) * 3])
+                  for c in range(3))
+        pooled = acc[: om * 2, : om * 2].reshape(om, 2, om, 2).max(axis=(1, 3))
+        ref = np.maximum(pooled, 0).astype(np.int32)
+        return aD, (om, om), ref
+    raise KeyError(name)
+
+
+LIBRARY_KERNELS = ("gemm", "leakyrelu", "maxpool", "conv2d", "conv_layer")
+
+
+@pytest.mark.parametrize("kernel", LIBRARY_KERNELS)
+def test_bit_identity_and_makespan_monotone_all_kernels(kernel):
+    """Serial, pipelined(dataflow=on) and pipelined(dataflow=off) must agree
+    bit for bit on every library kernel, and either gating model's makespan
+    must stay within the serial sum of phases (gating never un-overlaps past
+    serial)."""
+    results = {}
+    for mode in ("serial", "on", "off"):
+        cop = make_cop("serial" if mode == "serial" else "pipelined",
+                       dataflow=mode == "on")
+        rng = np.random.default_rng(11)
+        aD, shape, ref = _issue_kernel(cop, kernel, rng)
+        cop.barrier()
+        out = cop.gather(aD, *shape, ElemWidth.W)
+        np.testing.assert_array_equal(out, ref)
+        results[mode] = (out, cop)
+    np.testing.assert_array_equal(results["serial"][0], results["on"][0])
+    np.testing.assert_array_equal(results["serial"][0], results["off"][0])
+    serial_total = results["serial"][1].rt.stats.total_cycles
+    for mode in ("on", "off"):
+        assert results[mode][1].rt.sim_time <= serial_total, (kernel, mode)
+
+
+# ----------------------------------------------------------- gemm FULL gate
+def gemm_strip_workload(cop, strips=4, n=16):
+    rng = np.random.default_rng(3)
+    addrs = []
+    for i in range(strips):
+        A = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        B = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+        aD = cop.malloc(n * n * 4)
+        cop._xmr_w(0, aA, 0, n, n)
+        cop._xmr_w(1, aB, 0, n, n)
+        cop._xmr_w(2, aD, 0, n, n)
+        cop._gemm_w(2, 0, 1, 1)
+        addrs.append((aD, A, B))
+    cop.barrier()
+    return addrs
+
+
+def test_gemm_gated_on_all_of_b():
+    """With dataflow on, no GEMM compute piece starts before B's whole train
+    has landed, B streams before A (FULL-first port order), and the strip
+    workload's makespan is no better than the old concatenated model."""
+    cop = make_cop("pipelined", dataflow=True)
+    addrs = gemm_strip_workload(cop)
+    for aD, A, B in addrs:
+        ref = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+        np.testing.assert_array_equal(
+            cop.gather(aD, 16, 16, ElemWidth.W), ref)
+    recs = cop.rt.tracer.records
+    for kid in range(len(addrs)):
+        dma = [r for r in recs if dict(r.args).get("kernel") == kid
+               and "dma-in" in r.name]
+        comp = [r for r in recs if dict(r.args).get("kernel") == kid
+                and r.phase == "compute"]
+        b_end = max(r.start + r.duration for r in dma
+                    if dict(r.args)["operand"] == 1)
+        a_first = min(r.start for r in dma if dict(r.args)["operand"] == 0)
+        b_first = min(r.start for r in dma if dict(r.args)["operand"] == 1)
+        assert all(c.start >= b_end for c in comp), f"k{kid} beat B's train"
+        assert b_first < a_first, "FULL operand B did not stream ahead of A"
+
+    cop_off = make_cop("pipelined", dataflow=False)
+    gemm_strip_workload(cop_off)
+    assert cop.rt.sim_time >= cop_off.rt.sim_time
+    # and the optimistic model really was optimistic here: its first compute
+    # piece starts before the sound model's
+    first_on = min(r.start for r in recs if r.phase == "compute")
+    first_off = min(r.start for r in cop_off.rt.tracer.records
+                    if r.phase == "compute")
+    assert first_off < first_on
+
+
+def test_elementwise_overlap_survives_dataflow_gating():
+    """The concurrency-win side: an elementwise kernel's first compute piece
+    still starts before its operand's last chunk lands."""
+    cop = make_cop("pipelined", dataflow=True)
+    rng = np.random.default_rng(5)
+    X = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aX = cop.place(X, ElemWidth.W)
+    aD = cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aX, 0, 16, 16)
+    cop._xmr_w(1, aD, 0, 16, 16)
+    cop._leakyrelu(ElemWidth.W, 1, 0, alpha=0.5)
+    cop.barrier()
+    recs = cop.rt.tracer.records
+    dma_end = max(r.start + r.duration for r in recs if "dma-in" in r.name)
+    first_comp = min(r.start for r in recs if r.phase == "compute")
+    assert first_comp < dma_end
+
+
+def test_convlayer_blocked_train_keeps_overlap():
+    """The 3-channel conv-layer input streams as three round-robin block
+    trains, so early compute pieces start before the stacked operand's train
+    finishes (a plain windowed gate over the stacked layout would degenerate
+    to FULL)."""
+    cop = make_cop("pipelined", dataflow=True, row_chunk=2)
+    rng = np.random.default_rng(9)
+    aD, shape, ref = _issue_kernel(cop, "conv_layer", rng)
+    cop.barrier()
+    np.testing.assert_array_equal(cop.gather(aD, *shape, ElemWidth.W), ref)
+    recs = cop.rt.tracer.records
+    x_dma = [r for r in recs if "dma-in" in r.name
+             and dict(r.args)["operand"] == 0]
+    assert len(x_dma) > 3
+    x_end = max(r.start + r.duration for r in x_dma)
+    first_comp = min(r.start for r in recs if r.phase == "compute")
+    assert first_comp < x_end
+
+
+# ------------------------------------------- repeated operands (satellite 1)
+def test_repeated_operand_gates_on_single_train():
+    """gemm(A, A): one DMA train serves both operand slots; the FULL policy
+    on ms2 must gate every compute piece on that train's end — and nothing
+    may wait on a second train that is never scheduled (hang risk)."""
+    cop = make_cop("pipelined", dataflow=True)
+    rng = np.random.default_rng(2)
+    A = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aA, 0, 16, 16)
+    cop._xmr_w(1, aD, 0, 16, 16)
+    cop._gemm_w(1, 0, 0, 0)
+    cop.barrier()                      # completes — no gate on missing train
+    ref = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 16, 16, ElemWidth.W), ref)
+    recs = cop.rt.tracer.records
+    dma = [r for r in recs if "dma-in" in r.name]
+    comp = [r for r in recs if r.phase == "compute"]
+    assert len(dma) == 4               # A streamed once, not once per slot
+    train_end = max(r.start + r.duration for r in dma)
+    assert all(c.start >= train_end for c in comp)
+
+
+def test_resident_operand_imposes_no_gate():
+    """A source already resident from the producing kernel schedules no DMA
+    train and therefore no gate: the consumer's compute must not wait on
+    chunks that are never scheduled."""
+    cop = make_cop("pipelined", dataflow=True)
+    rng = np.random.default_rng(4)
+    X = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+    aX = cop.place(X, ElemWidth.W)
+    aT, aO = cop.malloc(16 * 16 * 4), cop.malloc(16 * 16 * 4)
+    cop._xmr_w(0, aX, 0, 16, 16)
+    cop._xmr_w(1, aT, 0, 16, 16)
+    cop._xmr_w(2, aO, 0, 16, 16)
+    cop._leakyrelu(ElemWidth.W, 1, 0, alpha=0.5)    # T resident afterwards
+    cop._leakyrelu(ElemWidth.W, 2, 1, alpha=0.25)   # reads resident T
+    cop.barrier()
+    X64 = X.astype(np.int64)
+    T = np.where(X >= 0, X64, np.round(0.5 * X64)).astype(np.int32)
+    T64 = T.astype(np.int64)
+    ref = np.where(T >= 0, T64, np.round(0.25 * T64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aO, 16, 16, ElemWidth.W), ref)
+    recs = cop.rt.tracer.records
+    k1_dma = [r for r in recs if "dma-in" in r.name
+              and dict(r.args).get("kernel") == 1]
+    k1_comp = [r for r in recs if r.phase == "compute"
+               and dict(r.args).get("kernel") == 1]
+    assert not k1_dma                  # operand was resident — no train
+    assert len(k1_comp) == 1           # single ungated piece
+
+
+# --------------------------------------------- AT capacity (satellite 2)
+def test_address_table_overflow_raises_kernel_error():
+    from repro.core.regions import StridedRegion
+    at = AddressTable(capacity=2)
+    at.register(StridedRegion(0, 1, 16, 16), RegionKind.SRC, phys_id=1)
+    at.register(StridedRegion(64, 1, 16, 16), RegionKind.DST, phys_id=2)
+    with pytest.raises(KernelError, match="Address Table full"):
+        at.register(StridedRegion(128, 1, 16, 16), RegionKind.SRC, phys_id=3)
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_capacity_pressure_forces_deferred_drain(scheduler, rng):
+    """A deferred result pinning a DST entry must not crash a small Address
+    Table: decode under pressure forces the deferred write-back to land
+    (freeing its entry) and the program completes with correct results."""
+    cop = make_cop(scheduler)
+    cop.rt.at = AddressTable(capacity=4)
+    # Manufacture a deferred dirty result pinning a DST entry (the pipelined
+    # scheduler's opportunistic drains would otherwise land it early).
+    T = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aT = cop.malloc(8 * 8 * 4)
+    bT = cop.rt.matrix_map.reserve(1, addr=aT, rows=8, cols=8, stride=8,
+                                   width=ElemWidth.W)
+    res = cop.rt._claim(cop.rt.vpus[0], bT)
+    cop.rt.vpus[0].load_matrix(res, T)
+    res.dirty = True
+    cop.rt.at.register(bT.region, RegionKind.DST, bT.phys_id)
+    assert cop.rt.at.free_slots() == 3
+    # gemm on distinct operands needs 4 fresh slots — only possible after
+    # the forced drain
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    C = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA, aB, aC = (cop.place(M, ElemWidth.W) for M in (A, B, C))
+    aD = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(3, aA, 0, 8, 8)
+    cop._xmr_w(4, aB, 0, 8, 8)
+    cop._xmr_w(5, aC, 0, 8, 8)
+    cop._xmr_w(6, aD, 0, 8, 8)
+    cop._gemm_w(6, 3, 4, 5, alpha=1.0, beta=1.0)   # decode triggers the drain
+    assert bT.phys_id not in cop.rt.resident       # deferred result landed
+    np.testing.assert_array_equal(cop.gather(aT, 8, 8, ElemWidth.W), T)
+    cop.barrier()
+    refD = (A.astype(np.int64) @ B.astype(np.int64)
+            + C.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 8, 8, ElemWidth.W), refD)
+    assert cop.rt.at.live_count() == 0
+
+
+def test_capacity_drain_stops_at_needed_slots(rng):
+    """Pressure relief drains only enough deferred results to free the slots
+    the decode needs — the rest keep their residency affinity."""
+    cop = make_cop("serial")
+    cop.rt.at = AddressTable(capacity=5)
+    bindings = []
+    for i in range(2):
+        T = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+        aT = cop.malloc(8 * 8 * 4)
+        b = cop.rt.matrix_map.reserve(i, addr=aT, rows=8, cols=8, stride=8,
+                                      width=ElemWidth.W)
+        res = cop.rt._claim(cop.rt.vpus[0], b)
+        cop.rt.vpus[0].load_matrix(res, T)
+        res.dirty = True
+        cop.rt.at.register(b.region, RegionKind.DST, b.phys_id)
+        bindings.append(b)
+    assert cop.rt.at.free_slots() == 3
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    C = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA, aB, aC = (cop.place(M, ElemWidth.W) for M in (A, B, C))
+    aD = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(3, aA, 0, 8, 8)
+    cop._xmr_w(4, aB, 0, 8, 8)
+    cop._xmr_w(5, aC, 0, 8, 8)
+    cop._xmr_w(6, aD, 0, 8, 8)
+    cop._gemm_w(6, 3, 4, 5)          # needs 4 slots: drain exactly one result
+    assert bindings[0].phys_id not in cop.rt.resident
+    assert bindings[1].phys_id in cop.rt.resident   # affinity survives
+    cop.barrier()
+    refD = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 8, 8, ElemWidth.W), refD)
+
+
+def test_capacity_pressure_beyond_drain_raises():
+    """When even a full drain cannot free enough entries (table smaller than
+    one kernel's operand set) the decode rejects with a clear KernelError —
+    but repeated operands count once (register up-refs the shared entry), so
+    gemm(A, A, A) fits where distinct operands do not."""
+    rng = np.random.default_rng(0)
+    cop = make_cop("serial")
+    cop.rt.at = AddressTable(capacity=3)
+    A = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aA = cop.place(A, ElemWidth.W)
+    aD = cop.malloc(8 * 8 * 4)
+    cop._xmr_w(0, aA, 0, 8, 8)
+    cop._xmr_w(1, aD, 0, 8, 8)
+    cop._gemm_w(1, 0, 0, 0)                  # 1 SRC entry (x3 refs) + 1 DST
+    cop.barrier()
+    ref = (A.astype(np.int64) @ A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, 8, 8, ElemWidth.W), ref)
+    # distinct operands genuinely need 4 slots: clear rejection
+    B = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    C = rng.integers(-9, 9, (8, 8), dtype=np.int32)
+    aB, aC = cop.place(B, ElemWidth.W), cop.place(C, ElemWidth.W)
+    cop._xmr_w(2, aB, 0, 8, 8)
+    cop._xmr_w(3, aC, 0, 8, 8)
+    with pytest.raises(KernelError, match="Address Table full"):
+        cop._gemm_w(1, 0, 2, 3)
+
+
+# ------------------------------------------------ drain policy (satellite 3)
+def test_deferred_drains_complete_during_run():
+    """Deferred results whose consumers finished drain on their owning ports
+    during the schedule (least-booked-port sweeps chained off wb_done), not
+    in the end-of-program barrier flush."""
+    cop = make_cop("pipelined")
+    rng = np.random.default_rng(8)
+    outs = []
+    for i in range(4):
+        X = rng.integers(-9, 9, (16, 16), dtype=np.int32)
+        aX = cop.place(X, ElemWidth.W)
+        aT = cop.malloc(16 * 16 * 4)
+        aO = cop.malloc(16 * 16 * 4)
+        cop._xmr_w(2 * i % 8, aX, 0, 16, 16)
+        r1, r2 = (2 * i + 1) % 8, (2 * i + 2) % 8
+        cop._xmr_w(r1, aT, 0, 16, 16)
+        cop._leakyrelu(ElemWidth.W, r1, 2 * i % 8, alpha=0.5)
+        cop._xmr_w(r2, aO, 0, 16, 16)
+        cop._leakyrelu(ElemWidth.W, r2, r1, alpha=0.25)
+        outs.append((aO, X))
+    cop.barrier()
+    for aO, X in outs:
+        X64 = X.astype(np.int64)
+        T = np.where(X >= 0, X64, np.round(0.5 * X64)).astype(np.int64)
+        ref = np.where(T >= 0, T, np.round(0.25 * T)).astype(np.int32)
+        np.testing.assert_array_equal(cop.gather(aO, 16, 16, ElemWidth.W),
+                                      ref)
+    names = [r.name for r in cop.rt.tracer.records]
+    assert any(n.startswith("drain phys") for n in names)
+
+
+def test_drain_order_is_least_booked_port_first():
+    """With several drainable residents, bookings follow ascending DMA-port
+    free_at on the event timelines, not resident insertion order."""
+    from repro.sim.events import EventQueue
+    rt = PipelinedRuntime(n_vpus=2, vregs_per_vpu=8, vlen_bytes=256)
+    b0 = rt.matrix_map.reserve(0, addr=0, rows=2, cols=8, stride=8,
+                               width=ElemWidth.W)
+    b1 = rt.matrix_map.reserve(1, addr=256, rows=2, cols=8, stride=8,
+                               width=ElemWidth.W)
+    # Insertion order: vpu0's resident first — but vpu0's port is the busier
+    # one, so the drain sweep must book vpu1's resident first.
+    rt._claim(rt.vpus[0], b0).dirty = True
+    rt._claim(rt.vpus[1], b1).dirty = True
+    rt.at.register(b0.region, RegionKind.DST, b0.phys_id)
+    rt.at.register(b1.region, RegionKind.DST, b1.phys_id)
+    rt.res_dma[0].acquire(0, 500)
+    rt.res_dma[1].acquire(0, 100)
+    rt._drain_idle_dma(600, {}, EventQueue())
+    drains = [r for r in rt.tracer.records if r.name.startswith("drain phys")]
+    assert [dict(r.args)["vpu"] for r in drains] == [1, 0]
+    assert rt.at.live_count() == 0
+
+
+# --------------------------------------------------------------- config knob
+def test_dataflow_knob_threads_to_runtime(tmp_path):
+    cfg = SimConfig(n_vpus=2, vregs_per_vpu=8, vlen_bytes=256,
+                    memory_bytes=1 << 16, dataflow=False)
+    assert cfg.make_runtime("pipelined").dataflow is False
+    assert SimConfig().dataflow is True
+    assert SimConfig(dataflow="on").dataflow is True
+    assert SimConfig(dataflow="off").dataflow is False
+    from repro.sim import ConfigError
+    with pytest.raises(ConfigError, match="dataflow"):
+        SimConfig(dataflow="sideways")
+
+
+def test_dataflow_yaml_knob(tmp_path):
+    pytest.importorskip("yaml")
+    from repro.sim import load_config
+    assert load_config("arcane-default").dataflow is True
+    assert load_config("arcane-8vpu").dataflow is True
+    (tmp_path / "c.yaml").write_text(
+        "extends: arcane-default\npipeline: {dataflow: off}\n")
+    cfg = load_config(str(tmp_path / "c.yaml"))
+    assert cfg.dataflow is False
+    assert cfg.make_runtime("pipelined").dataflow is False
+
+
+def test_per_operand_dma_lanes_in_chrome_export():
+    """dma-in activities carry their operand lane into the Chrome export as
+    distinct thread rows under the port's row."""
+    cop = make_cop("pipelined", dataflow=True)
+    rng = np.random.default_rng(11)
+    aD, shape, _ = _issue_kernel(cop, "gemm", rng)
+    cop.barrier()
+    cop.gather(aD, *shape, ElemWidth.W)
+    doc = cop.rt.tracer.to_chrome()
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    lanes = {n for n in names if "/op" in n}
+    assert any(n.endswith("/op0") for n in lanes)
+    assert any(n.endswith("/op1") for n in lanes)
+    tid_of_named = {e["args"]["name"]: e["tid"] for e in doc["traceEvents"]
+                    if e["ph"] == "M" and e["name"] == "thread_name"}
+    complete = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all(e["tid"] in set(tid_of_named.values()) for e in complete)
+
+
+# ------------------------------------------------------- property (optional)
+def test_random_chains_bit_identical_across_gating_modes():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.sampled_from(["leakyrelu", "maxpool", "gemm"]),
+                    min_size=1, max_size=4),
+           st.integers(0, 2 ** 31 - 1))
+    def prop(kernels, seed):
+        outs = {}
+        for mode in ("serial", "on", "off"):
+            cop = make_cop("serial" if mode == "serial" else "pipelined",
+                           dataflow=mode == "on")
+            rng = np.random.default_rng(seed)
+            got = []
+            for k in kernels:
+                aD, shape, ref = _issue_kernel(cop, k, rng, n=8)
+                got.append((aD, shape))
+            cop.barrier()
+            outs[mode] = [cop.gather(aD, *shape, ElemWidth.W)
+                          for aD, shape in got]
+        for a, b, c in zip(outs["serial"], outs["on"], outs["off"]):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+
+    prop()
