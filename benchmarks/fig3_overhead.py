@@ -15,12 +15,13 @@ from benchmarks.fig4_speedup import arcane_cycles
 
 
 def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
-        scheduler="serial", row_chunk=None, dataflow=True):
+        scheduler="serial", row_chunk=None, dataflow=True, tiling=None,
+        reuse=False):
     rows = []
     for ln in lanes:
         for n in sizes:
             total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln, scheduler,
-                                          row_chunk, dataflow)
+                                          row_chunk, dataflow, tiling, reuse)
             rows.append({"size": n, "lanes": ln, "cycles": total, **shares})
             if not quiet:
                 print(f"fig3,int32 3x3 {n}x{n} {ln}lane,{total},"
@@ -66,11 +67,20 @@ def main(argv=None):
                    help="kernel-aware per-operand DMA->compute gating in the "
                         "pipelined scheduler (off: legacy concatenated-"
                         "stream gating, for A/B comparison)")
+    p.add_argument("--tile", type=int, nargs=2, default=None,
+                   metavar=("ROWS", "COLS"),
+                   help="2D tile trains: rows per band (0: inherit "
+                        "--row-chunk) and cols per tile (0: whole rows)")
+    p.add_argument("--reuse", choices=("on", "off"), default="off",
+                   help="cross-instruction operand reuse (skip DMA-in of "
+                        "regions already modeled resident and clean)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
     rows = run(quiet=not args.verbose, scheduler=args.scheduler,
-               row_chunk=args.row_chunk, dataflow=args.dataflow == "on")
+               row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
+               tiling=tuple(args.tile) if args.tile else None,
+               reuse=args.reuse == "on")
     for k, v in validate(rows).items():
         val = f"{v:.3f}" if isinstance(v, float) else v
         print(f"fig3_validate,{k},{val}")

@@ -84,7 +84,9 @@ def tiled_conv_layer(cop, width, aX, h, w, aF, k, aR):
 def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
                   scheduler: str = "serial",
                   row_chunk: int | None = None,
-                  dataflow: bool = True) -> tuple[int, dict]:
+                  dataflow: bool = True,
+                  tiling: tuple[int, int] | None = None,
+                  reuse: bool = False) -> tuple[int, dict]:
     """Run the (strip-mined) xmk4 conv layer through the C-RT simulator;
     return total modeled cycles + phase split.
 
@@ -105,6 +107,8 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
         if row_chunk is not None:
             rt_kwargs["row_chunk"] = row_chunk
         rt_kwargs["dataflow"] = dataflow
+        rt_kwargs["tiling"] = tiling
+        rt_kwargs["reuse"] = reuse
         cop = ArcaneCoprocessor(runtime=PipelinedRuntime(**rt_kwargs))
     elif scheduler == "serial":
         cop = ArcaneCoprocessor(memory=None, **rt_kwargs)
@@ -132,7 +136,8 @@ def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
 
 def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
         widths=(ElemWidth.B, ElemWidth.H, ElemWidth.W), quiet=False,
-        scheduler="serial", row_chunk=None, dataflow=True):
+        scheduler="serial", row_chunk=None, dataflow=True, tiling=None,
+        reuse=False):
     rows = []
     for width in widths:
         for k in filters:
@@ -144,7 +149,8 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                 simd = packed_simd_cycles(cost, width)
                 for ln in lanes:
                     arc, shares = arcane_cycles(n, n, k, width, ln, scheduler,
-                                                row_chunk, dataflow)
+                                                row_chunk, dataflow, tiling,
+                                                reuse)
                     row = {
                         "width": width.suffix, "filter": k, "size": n,
                         "lanes": ln, "cycles": arc,
@@ -153,6 +159,8 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                         "simd_vs_scalar": scalar / simd,
                     }
                     if scheduler == "pipelined":
+                        row["tiling"] = list(tiling) if tiling else None
+                        row["reuse"] = reuse
                         serial_arc, _ = arcane_cycles(n, n, k, width, ln,
                                                       "serial")
                         row["serial_cycles"] = serial_arc
@@ -217,6 +225,16 @@ def main(argv=None):
                    help="kernel-aware per-operand DMA->compute gating in the "
                         "pipelined scheduler (off: legacy concatenated-"
                         "stream gating, for A/B comparison)")
+    p.add_argument("--tile", type=int, nargs=2, default=None,
+                   metavar=("ROWS", "COLS"),
+                   help="2D tile trains in the pipelined scheduler: rows per "
+                        "band (0: inherit --row-chunk) and cols per tile "
+                        "(0: whole rows); requires --dataflow on")
+    p.add_argument("--reuse", choices=("on", "off"), default="off",
+                   help="cross-instruction operand reuse in the pipelined "
+                        "scheduler: skip DMA-in trains whose region is "
+                        "already modeled resident and clean on the dispatch "
+                        "VPU (strip-mined weight re-fetch elimination)")
     p.add_argument("--sizes", type=int, nargs="+",
                    default=(16, 32, 64, 128, 256),
                    help="square input sizes to sweep")
@@ -239,7 +257,9 @@ def main(argv=None):
                lanes=tuple(args.lanes),
                widths=tuple(width_of[w] for w in args.widths),
                quiet=not args.verbose, scheduler=args.scheduler,
-               row_chunk=args.row_chunk, dataflow=args.dataflow == "on")
+               row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
+               tiling=tuple(args.tile) if args.tile else None,
+               reuse=args.reuse == "on")
     summary = None
     if args.scheduler == "pipelined":
         speedups = [r["concurrency_speedup"] for r in rows]
@@ -265,6 +285,8 @@ def main(argv=None):
     if args.out_json:
         doc = {"benchmark": "fig4_speedup", "scheduler": args.scheduler,
                "row_chunk": args.row_chunk, "dataflow": args.dataflow,
+               "tiling": list(args.tile) if args.tile else None,
+               "reuse": args.reuse,
                "rows": rows, "summary": summary, "validate": res}
         with open(args.out_json, "w") as f:
             json.dump(doc, f, indent=2)

@@ -30,7 +30,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.dataflow import ELEMENTWISE, FULL, OperandFlow, windowed
+from repro.core.dataflow import (ELEMENTWISE, FULL, OperandFlow, TILED,
+                                 windowed)
 from repro.core.encoding import ElemWidth, NUM_XMK
 from repro.core.matrix import np_dtype
 
@@ -293,38 +294,48 @@ def _convlayer_body(sources, params, width):
 
 # ---------------------------------------------------------------------------
 # Per-operand dataflow descriptors (pipelined-scheduler gating; §IV-B timing).
+# Each flow carries a row-axis and a column-axis policy (TILED); the column
+# axis only becomes visible when the scheduler runs with 2D tiling enabled —
+# with a single column tile per operand the column policy is vacuous and the
+# gating reduces exactly to the 1D row-train model.
 
 def _gemm_dataflow(shapes, params, width):
-    # Output row i = A[i] @ B (+ beta*C[i]): A and the accumulator stream
-    # row-for-row, but every row of B participates in every output row.
-    return (ELEMENTWISE, FULL) + (ELEMENTWISE,) * (len(shapes) - 2)
+    # Output tile (i, j) = A-band i @ B-column-tile j (+ beta*C tile (i, j)):
+    # A streams row-for-row and is read across all its columns (the inner
+    # dimension); B needs every row but only the output tile's column tile;
+    # the accumulator streams tile-for-tile.
+    return (ELEMENTWISE, TILED(FULL, ELEMENTWISE)) \
+        + (TILED(ELEMENTWISE, ELEMENTWISE),) * (len(shapes) - 2)
 
 
 def _leakyrelu_dataflow(shapes, params, width):
-    return (ELEMENTWISE,)
+    return (TILED(ELEMENTWISE, ELEMENTWISE),)
 
 
 def _maxpool_dataflow(shapes, params, width):
-    # Output row i reads input rows i*stride .. i*stride+win-1: the window
-    # overhang beyond the proportional share is at most `win` rows.
+    # Output element (i, j) reads the input window at (i*stride, j*stride):
+    # the overhang beyond the proportional share is at most `win` on each
+    # axis.
     win = params.get("win_size", 2)
-    return (windowed(win),)
+    return (TILED(windowed(win), windowed(win)),)
 
 
 def _conv2d_dataflow(shapes, params, width):
-    # Valid conv: output row i reads input rows i .. i+km-1; the filter is
-    # read in full by every output row.
-    km = shapes[1][0]
-    return (windowed(km), FULL)
+    # Valid conv: output tile (i, j) reads input rows i .. i+km-1 and cols
+    # j .. j+kn-1; the filter is read in full by every output element.
+    km, kn = shapes[1]
+    return (TILED(windowed(km), windowed(kn)), FULL)
 
 
 def _convlayer_dataflow(shapes, params, width):
     # 3-channel-stacked input (3H rows = three H-row planes): every output
     # row reads a k-row window from EACH plane, so the planes stream as three
-    # round-robin-interleaved DMA trains; the 2x2 pool consumes two conv rows
-    # per output row, hence the +2 lookahead on top of the filter window.
+    # round-robin-interleaved DMA trains; the 2x2 pool consumes two conv
+    # rows/cols per output element, hence the +2 lookahead on top of the
+    # filter window on both axes.
     km = shapes[1][0] // 3
-    return (windowed(km + 2, blocks=3), FULL)
+    kn = shapes[1][1]
+    return (TILED(windowed(km + 2, blocks=3), windowed(kn + 2)), FULL)
 
 
 def default_library() -> KernelLibrary:

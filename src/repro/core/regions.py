@@ -134,6 +134,39 @@ class StridedRegion:
                     return True
         return False
 
+    def contains(self, other: "StridedRegion") -> bool:
+        """True iff every byte of ``other`` is also a byte of ``self``. Exact.
+
+        This is the cross-instruction reuse question the pipelined scheduler
+        asks: a fresh operand binding may skip its DMA-in train when a copy of
+        a *containing* region is already modeled resident and clean. Two
+        regimes cover the general case exactly:
+
+        * ``self`` with ``stride_bytes <= row_bytes`` (or a single row) tiles
+          memory contiguously — its footprint is the flat interval
+          ``[start, end)``, so bounding-interval inclusion is the answer.
+        * ``self`` with inter-row gaps: no contained byte run can span two of
+          ``self``'s rows (the gap would intrude), so every row of ``other``
+          must land inside a single row of ``self`` — one divmod per row of
+          ``other``, O(1) when the strides match (the column-tile case).
+        """
+        if other.start < self.start or other.end > self.end:
+            return False
+        if self.rows == 1 or self.stride_bytes <= self.row_bytes:
+            return True          # contiguous footprint == bounding interval
+        sa = self.stride_bytes
+        if other.rows > 1 and other.stride_bytes == sa:
+            # Equal strides: row j of other sits at the same intra-row offset
+            # of self's row i0+j for every j — one check plus a row-count bound.
+            i0, off = divmod(other.addr - self.addr, sa)
+            return (off + other.row_bytes <= self.row_bytes
+                    and i0 + other.rows <= self.rows)
+        for j in range(other.rows):
+            i, off = divmod(other.addr + j * other.stride_bytes - self.addr, sa)
+            if i >= self.rows or off + other.row_bytes > self.row_bytes:
+                return False
+        return True
+
 def _ceil_div(a: int, b: int) -> int:
     return -((-a) // b)
 

@@ -32,6 +32,7 @@ from repro.core.encoding import ElemWidth, Offload, NUM_MATRIX_REGS
 from repro.core.hazards import DependencyTracker, KernelDeps
 from repro.core.isa import KernelError, KernelLibrary, KernelSpec, default_library
 from repro.core.matrix import MatrixBinding, MatrixMap
+from repro.core.regions import StridedRegion
 from repro.core.vpu import VPU, VPUGeometry, ResidentMatrix
 
 
@@ -48,6 +49,12 @@ class PhaseStats:
     compute_s: float = 0.0
     writeback_s: float = 0.0
     kernels_run: int = 0
+    # Cross-instruction operand reuse (pipelined scheduler only): DMA-in
+    # trains skipped because a containing region was already modeled resident
+    # and clean in the dispatch VPU's data array, and the transfer cycles
+    # those skips avoided (excluded from allocation_cycles/total_cycles).
+    reuse_hits: int = 0
+    reused_dma_cycles: int = 0
 
     @property
     def total_cycles(self) -> int:
@@ -426,7 +433,13 @@ class CacheRuntime:
         cycles = self.geometry.dma_cycles(nbytes, b.rows)
         if self._wb_segments is not None:
             self._wb_segments.append((res.vpu, cycles))
+        self._note_memory_write(b.region)
         return cycles
+
+    def _note_memory_write(self, region) -> None:
+        """Hook: ``region``'s bytes in main memory just changed (consolidation
+        landing). The pipelined scheduler invalidates modeled reuse copies
+        here; the serial scheduler models no reuse."""
 
     def _writeback_resident(self, b: MatrixBinding, res: ResidentMatrix) -> int:
         """Consolidate a resident matrix back to memory; returns DMA cycles."""
@@ -595,3 +608,6 @@ class CacheRuntime:
         if self.at.blocks_store(addr, addr + len(buf)):
             self.barrier()
         self.cache.host_write(addr, buf)
+        if len(buf):
+            self._note_memory_write(StridedRegion(
+                addr=addr, rows=1, row_bytes=len(buf), stride_bytes=len(buf)))

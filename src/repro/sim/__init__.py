@@ -13,15 +13,15 @@ kernel outputs are bit-identical; only the modeled timing differs.
 from repro.sim.config import (ConfigError, SimConfig, builtin_config_path,
                               deep_merge, load_config, load_raw)
 from repro.sim.events import (ChunkTrain, Event, EventQueue, Interval,
-                              Resource, interleave_blocks, row_chunks,
-                              split_proportional)
-from repro.sim.pipeline import PipelinedRuntime, PipelineReport
+                              Resource, TileTrain, interleave_blocks,
+                              row_chunks, split_proportional, tile_entries)
+from repro.sim.pipeline import PipelinedRuntime, PipelineReport, ReuseEntry
 from repro.sim.trace import PHASES, TraceRecord, Tracer
 
 __all__ = [
     "ConfigError", "SimConfig", "builtin_config_path", "deep_merge",
     "load_config", "load_raw", "ChunkTrain", "Event", "EventQueue",
-    "Interval", "Resource", "interleave_blocks", "row_chunks",
-    "split_proportional", "PipelinedRuntime", "PipelineReport",
-    "PHASES", "TraceRecord", "Tracer",
+    "Interval", "Resource", "TileTrain", "interleave_blocks", "row_chunks",
+    "split_proportional", "tile_entries", "PipelinedRuntime",
+    "PipelineReport", "ReuseEntry", "PHASES", "TraceRecord", "Tracer",
 ]

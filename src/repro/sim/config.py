@@ -35,7 +35,7 @@ _SECTIONS = {
     "cache": ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity"),
     "vpu": ("lanes", "dma_bytes_per_cycle"),
     "ecpu": ("decode_cycles", "schedule_cycles", "issue_cycles_per_vins"),
-    "pipeline": ("row_chunk", "dataflow"),
+    "pipeline": ("row_chunk", "dataflow", "tiling", "reuse"),
     "memory": ("bytes",),
 }
 
@@ -59,19 +59,24 @@ class SimConfig:
     issue_cycles_per_vins: int = 4
     row_chunk: int = 8
     dataflow: bool = True
+    tile_rows: int = 0
+    tile_cols: int = 0
+    reuse: bool = False
     memory_bytes: int = 16 << 20
     description: str = ""
 
     def __post_init__(self):
-        if isinstance(self.dataflow, str):
-            # YAML spells the knob on/off; quoted strings normalise too.
-            val = {"on": True, "true": True, "yes": True,
-                   "off": False, "false": False, "no": False,
-                   }.get(self.dataflow.lower())
-            if val is None:
-                raise ConfigError(
-                    f"pipeline.dataflow must be on/off, got {self.dataflow!r}")
-            object.__setattr__(self, "dataflow", val)
+        for knob in ("dataflow", "reuse"):
+            raw = getattr(self, knob)
+            if isinstance(raw, str):
+                # YAML spells the knobs on/off; quoted strings normalise too.
+                val = {"on": True, "true": True, "yes": True,
+                       "off": False, "false": False, "no": False,
+                       }.get(raw.lower())
+                if val is None:
+                    raise ConfigError(
+                        f"pipeline.{knob} must be on/off, got {raw!r}")
+                object.__setattr__(self, knob, val)
         for f in ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity",
                   "lanes", "dma_bytes_per_cycle", "memory_bytes"):
             if getattr(self, f) <= 0:
@@ -80,6 +85,25 @@ class SimConfig:
             raise ConfigError(
                 f"row_chunk must be >= 0 (0 disables intra-instruction "
                 f"pipelining), got {self.row_chunk}")
+        for f in ("tile_rows", "tile_cols"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise ConfigError(
+                    f"pipeline.tiling.{f[5:]} must be a non-negative integer "
+                    f"(0 disables that axis), got {v!r}")
+        if (self.tile_rows or self.tile_cols or self.reuse) \
+                and not self.dataflow:
+            raise ConfigError(
+                "pipeline.tiling/reuse require pipeline.dataflow: on (the "
+                "legacy concatenated-stream model has no per-operand trains)")
+
+    @property
+    def tiling(self):
+        """``(tile_rows, tile_cols)`` when 2D tiling is configured, None
+        otherwise (the 1D ``row_chunk`` trains)."""
+        if self.tile_rows or self.tile_cols:
+            return (self.tile_rows, self.tile_cols)
+        return None
 
     @property
     def llc_bytes(self) -> int:
@@ -116,7 +140,9 @@ class SimConfig:
         if scheduler == "pipelined":
             from repro.sim.pipeline import PipelinedRuntime
             return PipelinedRuntime(tracer=tracer, row_chunk=self.row_chunk,
-                                    dataflow=self.dataflow, **kwargs)
+                                    dataflow=self.dataflow,
+                                    tiling=self.tiling, reuse=self.reuse,
+                                    **kwargs)
         raise ConfigError(
             f"unknown scheduler {scheduler!r} (expected 'serial'|'pipelined')")
 
@@ -137,11 +163,33 @@ class SimConfig:
                     raise ConfigError(
                         f"unknown key {section}.{k} (expected one of {keys})")
             for k, v in sub.items():
-                kwargs["memory_bytes" if (section, k) == ("memory", "bytes")
-                       else k] = v
+                if (section, k) == ("pipeline", "tiling"):
+                    kwargs.update(cls._parse_tiling(v))
+                elif (section, k) == ("memory", "bytes"):
+                    kwargs["memory_bytes"] = v
+                else:
+                    kwargs[k] = v
         if raw:
             raise ConfigError(f"unknown top-level keys: {sorted(raw)}")
         return cls(**kwargs)
+
+    @staticmethod
+    def _parse_tiling(sub: Any) -> dict:
+        """Validate the nested ``pipeline.tiling`` mapping ({rows, cols})."""
+        if sub is None:
+            return {}
+        if not isinstance(sub, dict):
+            raise ConfigError(
+                f"pipeline.tiling must be a mapping with keys rows/cols "
+                f"(rows per band / cols per tile; 0 disables an axis), "
+                f"got {sub!r}")
+        sub = {k: v for k, v in sub.items() if k != "replace"}
+        for k in sub:
+            if k not in ("rows", "cols"):
+                raise ConfigError(
+                    f"unknown key pipeline.tiling.{k} "
+                    f"(expected one of ('rows', 'cols'))")
+        return {"tile_rows": sub.get("rows", 0), "tile_cols": sub.get("cols", 0)}
 
 
 # ------------------------------------------------------------------ merging

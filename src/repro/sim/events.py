@@ -139,41 +139,110 @@ def interleave_blocks(parts_per_block: list[list[int]]) -> list[tuple[int, int]]
     return out
 
 
-@dataclasses.dataclass
-class ChunkTrain:
-    """One operand's row-chunked DMA activity train, per stacked block.
+def tile_entries(bands_per_block: list[list[int]], col_parts: list[int],
+                 col_major: bool = False) -> list[tuple[int, int, int]]:
+    """Transfer order of one operand's 2D tile train.
 
-    ``cum_rows[b][j]`` is the cumulative row count of block ``b`` after its
-    chunk ``j``; ``end_times[b][j]`` is the modeled completion cycle of that
-    chunk. The gating question "when may compute piece *i* start, given this
-    operand's dataflow policy?" reduces to: for each block, which chunk first
-    covers the rows the policy requires — the answer is the max of those
-    chunks' end times.
+    Returns ``(block, band, tile)`` index triples: blocks round-robin at band
+    granularity (every plane's early rows land early), and within a block's
+    band the column tiles stream consecutively. ``col_major`` flips the
+    nesting — all bands of column tile 0, then tile 1, … — the order a
+    row-FULL / column-streamed operand (GEMM's B) wants, so its first column
+    tile is complete as early as possible.
+    """
+    out: list[tuple[int, int, int]] = []
+    n_bands = max((len(p) for p in bands_per_block), default=0)
+    if col_major:
+        for t in range(len(col_parts)):
+            for j in range(n_bands):
+                for b, parts in enumerate(bands_per_block):
+                    if j < len(parts):
+                        out.append((b, j, t))
+    else:
+        for j in range(n_bands):
+            for b, parts in enumerate(bands_per_block):
+                if j < len(parts):
+                    for t in range(len(col_parts)):
+                        out.append((b, j, t))
+    return out
+
+
+@dataclasses.dataclass
+class TileTrain:
+    """One operand's tile-indexed DMA activity train, per stacked block.
+
+    ``cum_rows[b][i]`` is the cumulative row count of block ``b`` after its
+    row band ``i``; ``cum_cols[t]`` the cumulative column count after column
+    tile ``t`` (columns are shared across blocks — blocks stack rows);
+    ``end_times[b][i][t]`` the modeled completion cycle of tile ``(i, t)`` of
+    block ``b``. The gating question "when may compute piece ``(pi, pj)``
+    start, given this operand's dataflow policy?" reduces to: per block, which
+    band/tile rectangle first covers the rows × cols the policy requires —
+    the answer is the prefix maximum of that rectangle's end times.
     """
 
     cum_rows: list[list[int]]
-    end_times: list[list[int]]
+    cum_cols: list[int]
+    end_times: list[list[list[int]]]
+
+    def __post_init__(self):
+        # Prefix max over the (band, tile) grid per block: pmax[b][i][t] is
+        # the latest completion among tiles (<=i, <=t) — one O(grid) pass
+        # makes every gate query O(log bands + log tiles).
+        self._pmax = []
+        for grid in self.end_times:
+            pm: list[list[int]] = []
+            for i, row in enumerate(grid):
+                cur = []
+                run = 0
+                for t, e in enumerate(row):
+                    run = max(run, e)
+                    cur.append(max(run, pm[i - 1][t]) if i else run)
+                pm.append(cur)
+            self._pmax.append(pm)
 
     @property
     def pace(self) -> int:
-        """Chunk count of the longest block — the train's natural piece count
-        when it paces the compute split."""
+        """Band count of the longest block — the train's natural row-piece
+        count when it paces the compute split."""
         return max(len(c) for c in self.cum_rows)
 
+    @property
+    def col_pace(self) -> int:
+        """Column-tile count — the natural column-piece count."""
+        return len(self.cum_cols)
+
     def piece_weights(self) -> list[int]:
-        """Row weights of the pacing block's chunks (compute-split weights)."""
+        """Row weights of the pacing block's bands (compute-split weights)."""
         longest = max(self.cum_rows, key=len)
         return [c - p for c, p in zip(longest, [0] + longest[:-1])]
 
-    def gate(self, flow: OperandFlow, piece: int, n_pieces: int) -> int:
-        """Cycle at which piece ``piece`` (of ``n_pieces``) has every chunk
-        this operand's ``flow`` demands."""
+    def col_weights(self) -> list[int]:
+        """Column weights of the tiles (compute column-split weights)."""
+        return [c - p for c, p in
+                zip(self.cum_cols, [0] + self.cum_cols[:-1])]
+
+    def gate(self, flow: OperandFlow, piece: int, n_pieces: int,
+             col_piece: int = 0, n_col_pieces: int = 1) -> int:
+        """Cycle at which piece ``(piece, col_piece)`` of an
+        ``n_pieces × n_col_pieces`` grid has every tile this operand's
+        ``flow`` demands."""
+        need_c = flow.cols_required(col_piece, n_col_pieces, self.cum_cols[-1])
+        jc = bisect.bisect_left(self.cum_cols, need_c)
         t = 0
-        for cum, ends in zip(self.cum_rows, self.end_times):
-            need = flow.rows_required(piece, n_pieces, cum[-1])
-            j = bisect.bisect_left(cum, need)
-            t = max(t, ends[j])
+        for cum, pm in zip(self.cum_rows, self._pmax):
+            need_r = flow.rows_required(piece, n_pieces, cum[-1])
+            jr = bisect.bisect_left(cum, need_r)
+            t = max(t, pm[jr][jc])
         return t
+
+
+def ChunkTrain(cum_rows: list[list[int]],
+               end_times: list[list[int]]) -> TileTrain:
+    """Backward-compatible 1D constructor: a :class:`TileTrain` with a single
+    column tile per band (the PR-3 row-chunked train)."""
+    return TileTrain(cum_rows=cum_rows, cum_cols=[1],
+                     end_times=[[[e] for e in ends] for ends in end_times])
 
 
 class Resource:

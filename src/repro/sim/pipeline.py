@@ -24,15 +24,16 @@ mirrored into a :class:`~repro.sim.trace.Tracer` for Chrome trace export.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
 from repro.core.address_table import RegionKind
 from repro.core.dataflow import FULL, FlowKind
+from repro.core.regions import StridedRegion
 from repro.core.runtime import CacheRuntime, QueuedKernel
-from repro.sim.events import (ChunkTrain, EventQueue, Resource,
-                              interleave_blocks, row_chunks,
-                              split_proportional)
+from repro.sim.events import (EventQueue, Resource, TileTrain, row_chunks,
+                              split_proportional, tile_entries)
 from repro.sim.trace import Tracer
 
 
@@ -45,10 +46,22 @@ class PipelineReport:
     kernels_run: int
     resource_busy: dict[str, int]   # resource name -> busy cycles
     utilization: dict[str, float]   # resource name -> busy / makespan
+    reuse_hits: int = 0             # operand DMA trains skipped by reuse
 
     @property
     def concurrency_speedup(self) -> float:
         return self.serial_cycles / self.makespan if self.makespan else 1.0
+
+
+@dataclasses.dataclass
+class ReuseEntry:
+    """One modeled clean operand copy in a VPU's data array.
+
+    ``region`` is the main-memory footprint the copy mirrors; ``ready_at`` the
+    cycle its DMA train completed (a reuse hit gates compute no earlier)."""
+
+    region: StridedRegion
+    ready_at: int
 
 
 class PipelinedRuntime(CacheRuntime):
@@ -63,23 +76,60 @@ class PipelinedRuntime(CacheRuntime):
     granularity).
 
     ``dataflow`` selects the gating model. ``True`` (default): each operand
-    streams as its *own* chunk train and compute piece *i* waits for the
-    per-operand chunk set the kernel's dataflow descriptor demands
+    streams as its *own* tile train and compute piece *i* waits for the
+    per-operand tile set the kernel's dataflow descriptor demands
     (:mod:`repro.core.dataflow` — e.g. all of GEMM's B before the first
     piece). ``False``: the legacy concatenated-stream model (piece *i* gated
     on chunk *i* of the sources concatenated in operand order) — optimistic
     for GEMM-like kernels, kept as an A/B reference. Functional state
     mutation is unchanged either way — only the timing model differs, so
     outputs stay bit-identical to the serial scheduler.
+
+    ``tiling=(rows, cols)`` generalizes the 1D row trains to 2D tile trains:
+    each operand DMA splits into row bands of at most ``rows`` rows (0 falls
+    back to ``row_chunk``) × column tiles of at most ``cols`` columns (0
+    keeps whole rows), compute splits into the matching output-tile grid, and
+    piece ``(i, j)`` waits only for the operand tiles its dataflow policy
+    projects onto it — GEMM output tile ``(i, j)`` needs A-band ``i`` and
+    B-column-tile ``j``, not all of B. Operands whose column policy is FULL
+    keep single-tile rows (column-splitting them buys no earlier gate).
+
+    ``reuse`` enables cross-instruction operand reuse (NM-Carus keeps
+    operands resident in the cache data arrays): the scheduler remembers the
+    memory regions whose clean copies it modeled streaming into each VPU, and
+    an operand whose region is *contained* in a remembered copy
+    (:meth:`repro.core.regions.StridedRegion.contains`) skips its DMA-in
+    train entirely — strip-mined GEMM/conv sequences stop paying repeated
+    B/weight fetches. Copies are invalidated whenever main memory changes
+    under them (consolidations, host stores) and bounded by the VPU register
+    file capacity (oldest copies fall out first). Reuse is a *timing* model:
+    functional DMA still executes, so outputs stay bit-identical.
+
+    Both ``tiling`` and ``reuse`` require ``dataflow`` gating (the legacy
+    concatenated-stream model has no per-operand structure to tile or skip).
     """
 
     def __init__(self, *args, tracer: Optional[Tracer] = None,
-                 row_chunk: int = 8, dataflow: bool = True, **kwargs):
+                 row_chunk: int = 8, dataflow: bool = True,
+                 tiling: Optional[tuple[int, int]] = None,
+                 reuse: bool = False, **kwargs):
         super().__init__(*args, **kwargs)
         if row_chunk < 0:
             raise ValueError(f"row_chunk must be >= 0, got {row_chunk}")
         self.row_chunk = row_chunk
         self.dataflow = bool(dataflow)
+        if tiling is not None:
+            tr, tc = tiling
+            if tr < 0 or tc < 0:
+                raise ValueError(f"tiling dims must be >= 0, got {tiling}")
+            # (0, 0) disables both axes — same normalization as SimConfig.
+            tiling = (int(tr), int(tc)) if (tr or tc) else None
+        self.tiling = tiling
+        self.reuse = bool(reuse)
+        if (self.tiling or self.reuse) and not self.dataflow:
+            raise ValueError(
+                "tiling/reuse require dataflow gating (dataflow=True); the "
+                "legacy concatenated-stream model has no per-operand trains")
         self.tracer = tracer or Tracer()
         self.sim_time = 0
         self.res_ecpu = Resource("ecpu")
@@ -90,6 +140,12 @@ class PipelinedRuntime(CacheRuntime):
                         for v in range(self.cache.n_vpus)]
         self._ready_at: dict[int, int] = {}     # kernel_id -> decode done time
         self._pending_pipe: list[QueuedKernel] = []
+        # Cross-instruction reuse: per-VPU FIFO of modeled clean copies,
+        # bounded by the register-file capacity (oldest copies reclaimed
+        # first — the model's stand-in for line reclamation).
+        self._reuse_sets: list[collections.deque[ReuseEntry]] = [
+            collections.deque() for _ in range(self.cache.n_vpus)]
+        self._reuse_cap = self.cache.vregs_per_vpu * self.cache.vlen_bytes
 
     # ----------------------------------------------------------- public api
     def _all_resources(self) -> list[Resource]:
@@ -104,7 +160,39 @@ class PipelinedRuntime(CacheRuntime):
             resource_busy=busy,
             utilization={n: (b / self.sim_time if self.sim_time else 0.0)
                          for n, b in busy.items()},
+            reuse_hits=self.stats.reuse_hits,
         )
+
+    # ----------------------------------------------------- operand reuse set
+    def _reuse_lookup(self, v: int, region: StridedRegion) -> Optional[int]:
+        """Cycle at which a containing clean copy on VPU ``v`` is fully
+        landed, or None when the operand must stream."""
+        if not self.reuse:
+            return None
+        for e in self._reuse_sets[v]:
+            if e.region.contains(region):
+                return e.ready_at
+        return None
+
+    def _reuse_note(self, v: int, region: StridedRegion, ready_at: int) -> None:
+        """Record a freshly-streamed clean copy on VPU ``v``."""
+        if not self.reuse:
+            return
+        s = self._reuse_sets[v]
+        for e in list(s):
+            if e.region == region:
+                s.remove(e)
+        s.append(ReuseEntry(region=region, ready_at=ready_at))
+        while sum(e.region.nbytes for e in s) > self._reuse_cap:
+            s.popleft()
+
+    def _note_memory_write(self, region: StridedRegion) -> None:
+        """Main memory changed under ``region`` (consolidation landing or a
+        host store): every modeled copy overlapping it is stale."""
+        for s in self._reuse_sets:
+            for e in list(s):
+                if e.region.overlaps(region):
+                    s.remove(e)
 
     # ------------------------------------------------------------ scheduler
     def run_pending(self) -> None:
@@ -237,12 +325,41 @@ class PipelinedRuntime(CacheRuntime):
         kid = qk.deps.kernel_id
         vpu = self.vpus[v]
         # Functional allocation happens NOW, in dependency order; the events
-        # below only model when the hardware would finish each piece.
+        # below only model when the hardware would finish each piece. (The
+        # allocation's aliased-dirty flushes consolidate through
+        # _consolidate_resident, which invalidates any reuse copies the
+        # landing made stale — so the reuse lookups below see post-flush
+        # memory state.)
         alloc = self._allocation_step(qk, vpu)
         lock_iv = self.res_lock.acquire(t, self.geometry.schedule_cycles,
                                         label=f"k{kid} claim")
+        flows = (qk.spec.dataflow
+                 if self.dataflow and qk.spec.dataflow else None)
+        # Cross-instruction reuse: an operand whose region is contained in a
+        # clean copy already modeled on this VPU skips its DMA-in train — the
+        # skipped transfer cycles never enter the allocation phase (they are
+        # tallied separately in PhaseStats.reused_dma_cycles).
+        segs = alloc.dma_segments
+        reuse_gates: list[int] = []
+        skip_cycles = 0
+        if self.reuse and flows is not None:
+            kept = []
+            for si, rows, cycles in segs:
+                hit = self._reuse_lookup(v, qk.src_bindings[si].region)
+                if hit is None:
+                    kept.append((si, rows, cycles))
+                    continue
+                reuse_gates.append(hit)
+                skip_cycles += cycles
+                self.stats.reuse_hits += 1
+                self.stats.reused_dma_cycles += cycles
+                self.tracer.emit(f"{qk.spec.name} k{kid} reuse[op{si}]",
+                                 "allocation", f"vpu{v}.dma",
+                                 max(lock_iv.end, hit), 0, lane=f"op{si}",
+                                 instant=True, kernel=kid, vpu=v, operand=si)
+            segs = kept
         self.stats.allocation_cycles += (self.geometry.schedule_cycles
-                                         + alloc.dma_cycles)
+                                         + alloc.dma_cycles - skip_cycles)
         self.stats.writeback_cycles += alloc.wb_cycles
         self.tracer.emit(f"{qk.spec.name} k{kid} claim", "allocation",
                          "cache.lock", lock_iv.start, lock_iv.duration,
@@ -262,28 +379,41 @@ class PipelinedRuntime(CacheRuntime):
                              f"vpu{wv}.dma", wb_iv.start, wb_iv.duration,
                              kernel=kid, vpu=wv)
 
-        # Row-chunked DMA-in (intra-instruction pipelining): each source
-        # operand streams as its OWN train of row_chunk-row activities on the
-        # VPU's DMA port. With dataflow gating on, FULL operands (GEMM's B,
-        # conv weights) stream first so the row-paced operands can feed the
-        # datapath while still in flight; trains are keyed by physical
-        # binding, so a repeated operand (gemm(A, A)) gates every occurrence
-        # on the one train that was actually scheduled.
-        flows = (qk.spec.dataflow
-                 if self.dataflow and qk.spec.dataflow else None)
-        segs = alloc.dma_segments
+        # Tile-train DMA-in (intra-instruction pipelining): each source
+        # operand streams as its OWN train of (row-band × column-tile)
+        # activities on the VPU's DMA port. With dataflow gating on, operands
+        # that gate FULL on *both* axes (conv weights; GEMM's B when column
+        # tiling is off) stream first so the streamable operands can feed the
+        # datapath while still in flight. A row-FULL operand whose column
+        # axis streams (GEMM's B under `tiling`) instead keeps its program
+        # position: it transfers column-tile-major *after* the row-paced
+        # operands, so output tile (*, 0) unblocks at B's first column tile
+        # and compute overlaps the remaining tiles' DMA — the Neural-Cache
+        # strip pipeline. Trains are keyed by physical binding, so a repeated
+        # operand (gemm(A, A)) gates every occurrence on the one train that
+        # was actually scheduled. Without a `tiling` config every operand has
+        # a single column tile and the model reduces to the 1D row trains.
+        band_limit = ((self.tiling[0] or self.row_chunk) if self.tiling
+                      else self.row_chunk)
+        col_limit = self.tiling[1] if self.tiling else 0
         if flows is not None:
+            def fully_gated(flow) -> bool:
+                return (flow.kind is FlowKind.FULL
+                        and not (col_limit
+                                 and flow.col_kind is not FlowKind.FULL))
             order = sorted(range(len(segs)),
-                           key=lambda i: (flows[segs[i][0]].kind
-                                          is not FlowKind.FULL, i))
+                           key=lambda i: (not fully_gated(flows[segs[i][0]]),
+                                          i))
             segs = [segs[i] for i in order]
-        trains: dict[int, ChunkTrain] = {}
+        trains: dict[int, TileTrain] = {}
+        streamed: list[tuple[StridedRegion, int]] = []
         eff_flows = list(flows) if flows is not None else None
         dma_ivs = []
         chunk_rows: list[int] = []
         ci = 0
         for si, rows, cycles in segs:
             flow = flows[si] if flows is not None else None
+            binding = qk.src_bindings[si]
             blocks = 1
             if flow is not None and flow.blocks > 1:
                 if rows % flow.blocks == 0:
@@ -293,37 +423,71 @@ class PipelinedRuntime(CacheRuntime):
                     # train and gate FULL — a per-row window over a layout we
                     # can't decompose would be optimistic, not conservative.
                     eff_flows[si] = FULL
-            parts = [row_chunks(rows // blocks, self.row_chunk)
-                     for _ in range(blocks)]
-            entries = interleave_blocks(parts)
-            cyc_parts = split_proportional(cycles, [r for _, r in entries])
-            cum: list[list[int]] = [[] for _ in range(blocks)]
-            ends: list[list[int]] = [[] for _ in range(blocks)]
-            for (b, r), cyc in zip(entries, cyc_parts):
+            flow_eff = eff_flows[si] if flows is not None else None
+            band_parts = row_chunks(rows // blocks, band_limit)
+            # Column tiles only pay off when the operand's column policy can
+            # gate on partial columns; a column-FULL operand streams whole
+            # rows (one tile) — splitting it buys no earlier compute start.
+            if (flow_eff is not None and col_limit
+                    and flow_eff.col_kind is not FlowKind.FULL):
+                col_parts = row_chunks(binding.cols, col_limit)
+            else:
+                col_parts = [binding.cols]
+            # Row-FULL / column-streamed operands (GEMM's B) transfer
+            # column-tile-major so output tile (*, 0) unblocks as early as
+            # possible; everything else goes band-major.
+            col_major = (flow_eff is not None and len(col_parts) > 1
+                         and flow_eff.kind is FlowKind.FULL)
+            entries = tile_entries([band_parts] * blocks, col_parts,
+                                   col_major)
+            cyc_parts = split_proportional(
+                cycles, [band_parts[bi] * col_parts[ti]
+                         for _, bi, ti in entries])
+            nb, nt = len(band_parts), len(col_parts)
+            ends = [[[0] * nt for _ in range(nb)] for _ in range(blocks)]
+            for (blk, bi, ti), cyc in zip(entries, cyc_parts):
                 iv = self.res_dma[v].acquire(
                     dma_start, cyc, label=f"k{kid} dma-in[op{si}.{ci}]")
                 dma_ivs.append(iv)
                 if flows is None:       # legacy concatenated-gating weights
-                    chunk_rows.append(r)
-                cum[b].append((cum[b][-1] if cum[b] else 0) + r)
-                ends[b].append(iv.end)
+                    chunk_rows.append(band_parts[bi])
+                ends[blk][bi][ti] = iv.end
+                lane = f"op{si}" if nt == 1 else f"op{si}.c{ti}"
                 self.tracer.emit(f"{qk.spec.name} k{kid} dma-in[op{si}.{ci}]",
                                  "allocation", f"vpu{v}.dma", iv.start,
-                                 iv.duration, lane=f"op{si}", kernel=kid,
-                                 vpu=v, chunk=ci, operand=si)
+                                 iv.duration, lane=lane, kernel=kid,
+                                 vpu=v, chunk=ci, operand=si, band=bi,
+                                 tile=ti)
                 ci += 1
-            trains[qk.src_bindings[si].phys_id] = ChunkTrain(cum, ends)
+            cum_r = []
+            acc = 0
+            for r in band_parts:
+                acc += r
+                cum_r.append(acc)
+            cum_c = []
+            acc = 0
+            for c in col_parts:
+                acc += c
+                cum_c.append(acc)
+            trains[binding.phys_id] = TileTrain(
+                [list(cum_r) for _ in range(blocks)], cum_c, ends)
+            if self.reuse:
+                streamed.append((binding.region,
+                                 max(iv.end
+                                     for iv in dma_ivs[-len(entries):])))
 
         compute_cycles = self._compute_step(qk, vpu, alloc.src_res,
                                             alloc.dst_res)
         self.stats.compute_cycles += compute_cycles
-        # Matching compute pieces. Dataflow gating: the piece count is paced
-        # by the longest non-FULL train, and piece i waits for the chunk set
-        # every operand's policy demands (operands without a train are
-        # already resident — they impose no gate). Legacy (dataflow off):
-        # piece i is gated on chunk i of the concatenated stream. With no DMA
-        # at all, compute is one piece.
-        if dma_ivs and flows is not None:
+        # Matching compute pieces. Dataflow gating: the output-tile grid is
+        # paced row-wise by the longest row-streaming train and column-wise
+        # by the widest column-streaming train, and tile (i, j) waits for the
+        # tile set every operand's policy demands (operands without a train
+        # are already resident or reuse-skipped — residents impose no gate,
+        # reuse copies gate at their modeled landing time). Legacy (dataflow
+        # off): piece i is gated on chunk i of the concatenated stream. With
+        # no DMA at all, compute is one piece.
+        if flows is not None and (dma_ivs or reuse_gates):
             constraints = [(trains[s.phys_id], eff_flows[si])
                            for si, s in enumerate(qk.src_bindings)
                            if s.phys_id in trains]
@@ -332,17 +496,28 @@ class PipelinedRuntime(CacheRuntime):
             n_pieces = max((tr.pace for tr in pacing), default=1)
             weights = next((tr.piece_weights() for tr in pacing
                             if tr.pace == n_pieces), [1] * n_pieces)
-            pieces = split_proportional(compute_cycles, weights)
+            col_pacing = [tr for tr, fl in constraints
+                          if fl.col_kind is not FlowKind.FULL
+                          and tr.col_pace > 1]
+            n_cols = max((tr.col_pace for tr in col_pacing), default=1)
+            col_weights = next((tr.col_weights() for tr in col_pacing
+                                if tr.col_pace == n_cols), [1] * n_cols)
+            band_cycles = split_proportional(compute_cycles, weights)
+            base_gate = max([lock_iv.end] + reuse_gates)
             dp_iv = None
-            for pi, cyc in enumerate(pieces):
-                ready = max([lock_iv.end] + [tr.gate(fl, pi, n_pieces)
-                                             for tr, fl in constraints])
-                dp_iv = self.res_dp[v].acquire(ready, cyc,
-                                               label=f"k{kid} {qk.spec.name}"
-                                                     f"[{pi}]")
-                self.tracer.emit(f"{qk.spec.name} k{kid}[{pi}]", "compute",
-                                 f"vpu{v}.datapath", dp_iv.start,
-                                 dp_iv.duration, kernel=kid, vpu=v, chunk=pi)
+            for pi, bc in enumerate(band_cycles):
+                for pj, cyc in enumerate(split_proportional(bc, col_weights)):
+                    ready = max([base_gate]
+                                + [tr.gate(fl, pi, n_pieces, pj, n_cols)
+                                   for tr, fl in constraints])
+                    tag = f"{pi},{pj}" if n_cols > 1 else f"{pi}"
+                    dp_iv = self.res_dp[v].acquire(
+                        ready, cyc, label=f"k{kid} {qk.spec.name}[{tag}]")
+                    self.tracer.emit(f"{qk.spec.name} k{kid}[{tag}]",
+                                     "compute", f"vpu{v}.datapath",
+                                     dp_iv.start, dp_iv.duration, kernel=kid,
+                                     vpu=v, chunk=pi * n_cols + pj, band=pi,
+                                     tile=pj)
         elif dma_ivs:
             pieces = split_proportional(compute_cycles, chunk_rows)
             dp_iv = None
@@ -360,6 +535,9 @@ class PipelinedRuntime(CacheRuntime):
                              f"vpu{v}.datapath", dp_iv.start, dp_iv.duration,
                              kernel=kid, vpu=v)
 
+        if self.reuse:
+            for region, landed in streamed:
+                self._reuse_note(v, region, landed)
         inflight[kid] = (qk, v, alloc.src_res, alloc.dst_res)
         eq.push(dp_iv.end, "compute_done", kid)
 

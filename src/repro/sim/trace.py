@@ -27,9 +27,14 @@ class TraceRecord:
     start: int             # cycles
     duration: int          # cycles
     args: tuple            # sorted (key, value) pairs — keeps records hashable
-    lane: Optional[str] = None   # sub-lane within the resource, e.g. "op1"
-                                 # (per-operand DMA trains) — display only;
-                                 # busy/phase accounting stays per resource
+    lane: Optional[str] = None   # sub-lane within the resource, e.g. "op1" or
+                                 # "op1.c2" (per-operand / per-column-tile DMA
+                                 # trains) — display only; busy/phase
+                                 # accounting stays per resource
+    instant: bool = False        # zero-cycle marker (e.g. a reuse-skipped
+                                 # DMA-in) — exported as a Chrome instant
+                                 # event; contributes nothing to busy/phase
+                                 # totals (emit rejects a nonzero duration)
 
     @property
     def row(self) -> str:
@@ -46,13 +51,17 @@ class Tracer:
         self._resources: list[str] = []   # insertion order -> tid
 
     def emit(self, name: str, phase: str, resource: str, start: int,
-             duration: int, lane: Optional[str] = None,
+             duration: int, lane: Optional[str] = None, instant: bool = False,
              **args: Any) -> TraceRecord:
         if phase not in PHASES:
             raise ValueError(f"unknown phase {phase!r}, expected one of {PHASES}")
+        if instant and duration:
+            raise ValueError(f"instant record carries no duration, "
+                             f"got {duration}")
         rec = TraceRecord(name=name, phase=phase, resource=resource,
                           start=int(start), duration=int(duration),
-                          args=tuple(sorted(args.items())), lane=lane)
+                          args=tuple(sorted(args.items())), lane=lane,
+                          instant=instant)
         self.records.append(rec)
         if resource not in self._resources:
             self._resources.append(resource)
@@ -87,6 +96,18 @@ class Tracer:
             events.append({"name": "thread_sort_index", "ph": "M", "pid": 0,
                            "tid": tid, "args": {"sort_index": tid}})
         for rec in self.records:
+            if rec.instant:
+                events.append({
+                    "name": rec.name,
+                    "cat": rec.phase,
+                    "ph": "i",
+                    "s": "t",             # thread-scoped instant marker
+                    "ts": rec.start,
+                    "pid": 0,
+                    "tid": tid_of[rec.row],
+                    "args": dict(rec.args),
+                })
+                continue
             events.append({
                 "name": rec.name,
                 "cat": rec.phase,

@@ -1,0 +1,129 @@
+"""sim/config.py error paths (satellite): extends cycles, unknown builtins,
+malformed ``pipeline:``/``tiling:`` sections — every bad input raises a clear
+``ConfigError``, never a KeyError/TypeError."""
+import pytest
+
+from repro.sim import ConfigError, SimConfig, builtin_config_path, load_config
+
+
+# ------------------------------------------------------------- from_dict
+def test_non_mapping_sections_rejected():
+    for section in ("cache", "vpu", "ecpu", "pipeline", "memory"):
+        with pytest.raises(ConfigError, match="must be a mapping"):
+            SimConfig.from_dict({section: [1, 2]})
+        with pytest.raises(ConfigError, match="must be a mapping"):
+            SimConfig.from_dict({section: "fast"})
+
+
+def test_unknown_keys_rejected_with_expectations():
+    with pytest.raises(ConfigError, match=r"unknown key pipeline\.chunk"):
+        SimConfig.from_dict({"pipeline": {"chunk": 4}})
+    with pytest.raises(ConfigError, match="unknown top-level keys"):
+        SimConfig.from_dict({"pipelines": {}})
+
+
+def test_malformed_tiling_sections():
+    with pytest.raises(ConfigError, match=r"pipeline\.tiling must be a "
+                                          r"mapping"):
+        SimConfig.from_dict({"pipeline": {"tiling": 4}})
+    with pytest.raises(ConfigError, match=r"pipeline\.tiling must be a "
+                                          r"mapping"):
+        SimConfig.from_dict({"pipeline": {"tiling": [4, 8]}})
+    with pytest.raises(ConfigError, match=r"unknown key pipeline\.tiling\.row"):
+        SimConfig.from_dict({"pipeline": {"tiling": {"row": 4}}})
+    with pytest.raises(ConfigError, match=r"tiling\.rows must be a "
+                                          r"non-negative integer"):
+        SimConfig.from_dict({"pipeline": {"tiling": {"rows": -1}}})
+    with pytest.raises(ConfigError, match="non-negative integer"):
+        SimConfig.from_dict({"pipeline": {"tiling": {"cols": "wide"}}})
+    # an empty/None tiling mapping is a no-op, not an error
+    assert SimConfig.from_dict({"pipeline": {"tiling": None}}).tiling is None
+    assert SimConfig.from_dict({"pipeline": {"tiling": {}}}).tiling is None
+
+
+def test_on_off_knobs_normalise_and_reject():
+    assert SimConfig.from_dict({"pipeline": {"dataflow": "off"}}) \
+        .dataflow is False
+    assert SimConfig.from_dict(
+        {"pipeline": {"reuse": "on", "dataflow": "on"}}).reuse is True
+    with pytest.raises(ConfigError, match=r"pipeline\.dataflow must be "
+                                          r"on/off"):
+        SimConfig.from_dict({"pipeline": {"dataflow": "sideways"}})
+    with pytest.raises(ConfigError, match=r"pipeline\.reuse must be on/off"):
+        SimConfig.from_dict({"pipeline": {"reuse": "maybe"}})
+
+
+def test_tiling_reuse_require_dataflow():
+    with pytest.raises(ConfigError, match="require pipeline.dataflow"):
+        SimConfig.from_dict({"pipeline": {"dataflow": "off",
+                                          "tiling": {"cols": 8}}})
+    with pytest.raises(ConfigError, match="require pipeline.dataflow"):
+        SimConfig(dataflow=False, reuse=True)
+
+
+def test_positive_geometry_enforced():
+    with pytest.raises(ConfigError, match="n_vpus must be positive"):
+        SimConfig(n_vpus=0)
+    with pytest.raises(ConfigError, match="row_chunk must be >= 0"):
+        SimConfig(row_chunk=-2)
+
+
+def test_unknown_scheduler_name():
+    with pytest.raises(ConfigError, match="unknown scheduler"):
+        SimConfig(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                  memory_bytes=1 << 16).make_runtime("quantum")
+
+
+# ----------------------------------------------------------- file loading
+def test_unknown_builtin_lists_available():
+    with pytest.raises(ConfigError, match="no builtin config 'warp9'"):
+        builtin_config_path("warp9")
+    with pytest.raises(ConfigError) as ei:
+        load_config("warp9")
+    assert "arcane-default" in str(ei.value)
+    assert "arcane-8vpu" in str(ei.value)
+
+
+def test_extends_cycle_detected(tmp_path):
+    pytest.importorskip("yaml")
+    (tmp_path / "a.yaml").write_text("extends: b.yaml\n")
+    (tmp_path / "b.yaml").write_text("extends: c.yaml\n")
+    (tmp_path / "c.yaml").write_text("extends: a.yaml\n")
+    with pytest.raises(ConfigError, match="cyclic extends chain"):
+        load_config(str(tmp_path / "a.yaml"))
+    # self-extension is the degenerate cycle
+    (tmp_path / "self.yaml").write_text("extends: self.yaml\n")
+    with pytest.raises(ConfigError, match="cyclic"):
+        load_config(str(tmp_path / "self.yaml"))
+
+
+def test_extends_target_missing(tmp_path):
+    pytest.importorskip("yaml")
+    (tmp_path / "orphan.yaml").write_text("extends: nowhere.yaml\n")
+    with pytest.raises(ConfigError, match="extends target not found"):
+        load_config(str(tmp_path / "orphan.yaml"))
+    (tmp_path / "ghost.yaml").write_text("extends: not-a-builtin\n")
+    with pytest.raises(ConfigError, match="no builtin config"):
+        load_config(str(tmp_path / "ghost.yaml"))
+
+
+def test_non_mapping_yaml_rejected(tmp_path):
+    pytest.importorskip("yaml")
+    (tmp_path / "list.yaml").write_text("- 1\n- 2\n")
+    with pytest.raises(ConfigError, match="top level must be a mapping"):
+        load_config(str(tmp_path / "list.yaml"))
+
+
+def test_malformed_tiling_through_yaml(tmp_path):
+    pytest.importorskip("yaml")
+    (tmp_path / "bad.yaml").write_text(
+        "extends: arcane-default\npipeline: {tiling: {rows: two}}\n")
+    with pytest.raises(ConfigError, match="non-negative integer"):
+        load_config(str(tmp_path / "bad.yaml"))
+    # deep-merge composes tiling overrides from a base before validation
+    (tmp_path / "base.yaml").write_text(
+        "extends: arcane-default\npipeline: {tiling: {rows: 2, cols: 8}}\n")
+    (tmp_path / "child.yaml").write_text(
+        "extends: base.yaml\npipeline: {tiling: {cols: 16}}\n")
+    cfg = load_config(str(tmp_path / "child.yaml"))
+    assert cfg.tiling == (2, 16)

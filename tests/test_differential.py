@@ -1,0 +1,261 @@
+"""Differential scheduler fuzzing: random kernel programs, serial oracle.
+
+The generator draws random programs over the whole kernel library (gemm /
+conv2d / conv_layer / maxpool / leakyrelu) with random shapes, strided
+sub-matrix views, aliased destinations, and random scheduler knobs
+(row_chunk / dataflow / tiling / reuse / VPU geometry / queue capacity), then
+asserts for every program:
+
+  * **bit-identity** — the pipelined schedule's final memory image equals the
+    serial scheduler's, byte for byte (after an LLC flush);
+  * **makespan sanity** — the modeled makespan is bounded below by every
+    single-server resource's busy cycles (the critical-path lower bound our
+    resource model implies) and above by the serial sum of phases;
+  * **no deadlock** — the event loop drains the queue, every admitted kernel
+    retires, the Address Table empties, and per-resource busy intervals never
+    overlap.
+
+The core harness is plain seeded numpy (so it runs without the dev extra);
+a hypothesis wrapper adds shrinking when hypothesis is installed. Locally the
+loop covers 200 generated programs; under ``HYPOTHESIS_PROFILE=ci`` it is
+capped to keep tier-1 inside the CI time budget.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core.matrix import np_dtype
+from repro.core.runtime import CacheRuntime
+from repro.sim import PipelinedRuntime
+
+KERNELS = ("leakyrelu", "maxpool", "gemm", "conv2d", "conv_layer")
+
+#: program count of the seeded sweep: 200 locally (the acceptance floor),
+#: capped under the CI profile (the hypothesis wrapper keeps fuzzing there).
+N_PROGRAMS = 25 if os.environ.get("HYPOTHESIS_PROFILE") == "ci" else 200
+
+
+# ------------------------------------------------------------ generation
+def _draw_view(rng, pool, rows, cols, fresh_bias=0.5):
+    """A (buf, r0, c0, rows, cols) view of shape (rows, cols): a random
+    sub-rectangle of an existing pool buffer when one fits (strided /
+    aliasing reads), else a fresh placed buffer (sometimes oversized, so the
+    view is strided even then)."""
+    fits = [i for i, (br, bc, _) in enumerate(pool)
+            if br >= rows and bc >= cols]
+    if fits and rng.random() > fresh_bias:
+        i = int(rng.choice(fits))
+        br, bc, _ = pool[i]
+        return (i, int(rng.integers(0, br - rows + 1)),
+                int(rng.integers(0, bc - cols + 1)), rows, cols)
+    pad_r = int(rng.integers(0, 3))
+    pad_c = int(rng.integers(0, 3))
+    pool.append((rows + pad_r, cols + pad_c, "placed"))
+    i = len(pool) - 1
+    return (i, int(rng.integers(0, pad_r + 1)),
+            int(rng.integers(0, pad_c + 1)), rows, cols)
+
+
+def _draw_dst(rng, pool, rows, cols):
+    """Destination view: usually a fresh exact buffer, sometimes an aliasing
+    view over an existing buffer (WAW/WAR pressure)."""
+    fits = [i for i, (br, bc, _) in enumerate(pool)
+            if br >= rows and bc >= cols]
+    if fits and rng.random() < 0.35:
+        i = int(rng.choice(fits))
+        br, bc, _ = pool[i]
+        return (i, int(rng.integers(0, br - rows + 1)),
+                int(rng.integers(0, bc - cols + 1)), rows, cols)
+    pool.append((rows, cols, "dst"))
+    return (len(pool) - 1, 0, 0, rows, cols)
+
+
+def gen_program(seed: int) -> dict:
+    """Draw one random program + scheduler-knob assignment."""
+    rng = np.random.default_rng(seed)
+    width = (ElemWidth.B, ElemWidth.H, ElemWidth.W)[int(rng.integers(3))]
+    pool: list = []      # (rows, cols, origin)
+    ops = []
+    for _ in range(int(rng.integers(1, 5))):
+        kind = KERNELS[int(rng.integers(len(KERNELS)))]
+        if kind == "leakyrelu":
+            r, c = int(rng.integers(3, 11)), int(rng.integers(3, 11))
+            ops.append({"kind": kind,
+                        "srcs": [_draw_view(rng, pool, r, c)],
+                        "dst": _draw_dst(rng, pool, r, c),
+                        "alpha": float(rng.integers(-8, 9)) / 4})
+        elif kind == "maxpool":
+            r, c = int(rng.integers(4, 11)), int(rng.integers(4, 11))
+            win = int(rng.integers(2, min(r, c, 3) + 1))
+            stride = int(rng.integers(1, win + 1))
+            om, on = (r - win) // stride + 1, (c - win) // stride + 1
+            ops.append({"kind": kind,
+                        "srcs": [_draw_view(rng, pool, r, c)],
+                        "dst": _draw_dst(rng, pool, om, on),
+                        "win": win, "stride": stride})
+        elif kind == "gemm":
+            m, k, n = (int(rng.integers(2, 9)) for _ in range(3))
+            ops.append({"kind": kind,
+                        "srcs": [_draw_view(rng, pool, m, k),
+                                 _draw_view(rng, pool, k, n),
+                                 _draw_view(rng, pool, m, n)],
+                        "dst": _draw_dst(rng, pool, m, n),
+                        "alpha": float(rng.integers(1, 5)) / 2,
+                        "beta": float(rng.integers(-2, 3)) / 2})
+        elif kind == "conv2d":
+            r, c = int(rng.integers(5, 11)), int(rng.integers(5, 11))
+            km, kn = int(rng.integers(2, 4)), int(rng.integers(2, 4))
+            ops.append({"kind": kind,
+                        "srcs": [_draw_view(rng, pool, r, c),
+                                 _draw_view(rng, pool, km, kn)],
+                        "dst": _draw_dst(rng, pool, r - km + 1, c - kn + 1)})
+        else:  # conv_layer
+            h, w = int(rng.integers(6, 10)), int(rng.integers(6, 11))
+            kk = int(rng.integers(2, 4))
+            om, on = (h - kk + 1) // 2, (w - kk + 1) // 2
+            ops.append({"kind": kind,
+                        "srcs": [_draw_view(rng, pool, 3 * h, w),
+                                 _draw_view(rng, pool, 3 * kk, kk)],
+                        "dst": _draw_dst(rng, pool, om, on)})
+    dataflow = bool(rng.random() < 0.8)
+    tiling = (None, (0, 4), (3, 5), (2, 0))[int(rng.integers(4))] \
+        if dataflow else None
+    return {
+        "seed": seed, "width": width, "pool": pool, "ops": ops,
+        "rt": {"n_vpus": int(rng.choice((1, 2, 4))),
+               "vregs_per_vpu": int(rng.choice((16, 32))),
+               "vlen_bytes": int(rng.choice((256, 512))),
+               "queue_capacity": int(rng.choice((2, 4, 16)))},
+        "pipe": {"row_chunk": int(rng.choice((0, 1, 3, 8))),
+                 "dataflow": dataflow, "tiling": tiling,
+                 "reuse": bool(dataflow and rng.random() < 0.5)},
+    }
+
+
+def run_program(prog: dict, scheduler: str):
+    """Execute ``prog`` on a fresh runtime; returns the coprocessor."""
+    if scheduler == "serial":
+        cop = ArcaneCoprocessor(runtime=CacheRuntime(**prog["rt"]))
+    else:
+        cop = ArcaneCoprocessor(runtime=PipelinedRuntime(
+            **prog["rt"], **prog["pipe"]))
+    width = prog["width"]
+    eb = width.nbytes
+    dt = np_dtype(width)
+    data_rng = np.random.default_rng(prog["seed"] + 1)
+    addrs, dims = [], []
+    for rows, cols, origin in prog["pool"]:
+        if origin == "placed":
+            arr = data_rng.integers(-9, 9, (rows, cols)).astype(dt)
+            addrs.append(cop.place(arr, width))
+        else:
+            addrs.append(cop.malloc(rows * cols * eb))
+        dims.append((rows, cols))
+
+    def bind(reg, view):
+        buf, r0, c0, rows, cols = view
+        bc = dims[buf][1]
+        addr = addrs[buf] + (r0 * bc + c0) * eb
+        cop._xmr(width, reg, addr, bc, rows, cols)
+
+    for op in prog["ops"]:
+        for reg, view in enumerate(op["srcs"]):
+            bind(reg, view)
+        bind(3, op["dst"])
+        if op["kind"] == "leakyrelu":
+            cop._leakyrelu(width, 3, 0, alpha=op["alpha"])
+        elif op["kind"] == "maxpool":
+            cop._maxpool(width, 3, 0, op["stride"], op["win"])
+        elif op["kind"] == "gemm":
+            cop._gemm(width, 3, 0, 1, 2, alpha=op["alpha"], beta=op["beta"])
+        elif op["kind"] == "conv2d":
+            cop._conv2d(width, 3, 0, 1)
+        else:
+            cop._conv_layer(width, 3, 0, 1)
+    cop.barrier()
+    return cop
+
+
+# -------------------------------------------------------------- the oracle
+def check_program(seed: int):
+    prog = gen_program(seed)
+    cop_s = run_program(prog, "serial")
+    cop_p = run_program(prog, "pipelined")
+    rt = cop_p.rt
+
+    # bit-identity of the full memory image (LLC flushed: write-back cache)
+    cop_s.rt.cache.flush_all()
+    rt.cache.flush_all()
+    np.testing.assert_array_equal(cop_s.rt.memory.data, rt.memory.data,
+                                  err_msg=f"seed {seed}: memory diverged")
+
+    # no deadlock: queue drained, every kernel retired, AT empty
+    assert not rt.queue, f"seed {seed}: queue not drained"
+    assert rt.stats.kernels_run == len(prog["ops"]) \
+        == cop_s.rt.stats.kernels_run
+    assert rt.at.live_count() == 0
+    assert not rt.tracker.runnable()     # no dangling dependency state
+
+    # makespan bounds: >= every resource's busy time (single-server critical
+    # path), >= the decode serialization, <= the serial sum of phases
+    for r in rt._all_resources():
+        ivs = sorted(r.intervals, key=lambda iv: (iv.start, iv.end))
+        for a, b in zip(ivs, ivs[1:]):
+            assert a.end <= b.start, \
+                f"seed {seed}: {r.name} intervals overlap"
+        assert r.busy_cycles <= rt.sim_time, \
+            f"seed {seed}: {r.name} busier than the makespan"
+        if ivs:
+            assert ivs[-1].end <= rt.sim_time
+    assert rt.sim_time >= len(prog["ops"]) * rt.geometry.decode_cycles
+    assert rt.sim_time <= cop_s.rt.stats.total_cycles, \
+        f"seed {seed}: pipelined makespan exceeded the serial schedule"
+
+
+# ---------------------------------------------------------------- entries
+@pytest.mark.parametrize("batch", range(8))
+def test_differential_fuzz_seeded(batch):
+    """Seeded sweep: N_PROGRAMS random programs against the serial oracle
+    (8 parametrized batches so a failure pins a narrow seed range)."""
+    per = (N_PROGRAMS + 7) // 8
+    for seed in range(batch * per, min((batch + 1) * per, N_PROGRAMS)):
+        check_program(seed)
+
+
+def test_differential_fuzz_hypothesis():
+    """Hypothesis-driven wrapper over the same oracle: free shrinking to a
+    minimal failing seed when the dev extra is installed."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=10 ** 6, max_value=2 ** 32 - 1))
+    def prop(seed):
+        check_program(seed)
+
+    prop()
+
+
+def test_generator_covers_the_space():
+    """The drawn programs genuinely mix kernels, widths, knobs, and aliased
+    destinations — guards against the generator silently collapsing."""
+    kinds, widths, aliased_dst = set(), set(), 0
+    tilings, reuses, dataflows = set(), set(), set()
+    for seed in range(80):
+        prog = gen_program(seed)
+        widths.add(prog["width"])
+        tilings.add(prog["pipe"]["tiling"])
+        reuses.add(prog["pipe"]["reuse"])
+        dataflows.add(prog["pipe"]["dataflow"])
+        for op in prog["ops"]:
+            kinds.add(op["kind"])
+            if prog["pool"][op["dst"][0]][2] == "placed" \
+                    or op["dst"][1] or op["dst"][2]:
+                aliased_dst += 1
+    assert kinds == set(KERNELS)
+    assert len(widths) == 3
+    assert len(tilings) >= 3 and reuses == {True, False} \
+        and dataflows == {True, False}
+    assert aliased_dst > 5

@@ -1,0 +1,428 @@
+"""Column-tiled 2D dataflow + cross-instruction operand reuse (tentpole).
+
+Covers the TILED descriptor algebra, TileTrain gating, bit-identity of the
+tiled/reused schedules against the serial oracle, the strip-mined-GEMM reuse
+win (B re-fetch eliminated), the per-operand FULL lower bound under tiling,
+and the config/YAML/trace surfaces of the new knobs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core.dataflow import (ELEMENTWISE, FULL, FlowKind, OperandFlow,
+                                 TILED, windowed)
+from repro.core.regions import StridedRegion
+from repro.core.runtime import CacheRuntime
+from repro.sim import PipelinedRuntime, SimConfig, TileTrain, tile_entries
+
+
+def make_cop(scheduler, **kw):
+    kw.setdefault("n_vpus", 2)
+    kw.setdefault("vregs_per_vpu", 32)
+    kw.setdefault("vlen_bytes", 512)
+    if scheduler == "serial":
+        for k in ("tiling", "reuse", "row_chunk", "dataflow"):
+            kw.pop(k, None)
+        return ArcaneCoprocessor(runtime=CacheRuntime(**kw))
+    return ArcaneCoprocessor(runtime=PipelinedRuntime(**kw))
+
+
+# ----------------------------------------------------------- TILED algebra
+def test_tiled_combines_axis_policies():
+    b_flow = TILED(FULL, ELEMENTWISE)
+    assert b_flow.kind is FlowKind.FULL
+    assert b_flow.col_kind is FlowKind.ELEMENTWISE
+    conv = TILED(windowed(3, blocks=3), windowed(2))
+    assert conv.blocks == 3 and conv.window_rows == 3
+    assert conv.col_kind is FlowKind.WINDOWED and conv.window_cols == 2
+    # 1D flows are 2D flows with a FULL column axis
+    assert ELEMENTWISE.col_kind is FlowKind.FULL
+    with pytest.raises(ValueError, match="window_cols"):
+        OperandFlow(FlowKind.FULL, col_kind=FlowKind.ELEMENTWISE,
+                    window_cols=2)
+    with pytest.raises(ValueError, match="plain 1-axis"):
+        TILED(FULL, windowed(2, blocks=3))
+
+
+def test_cols_required_math():
+    f = TILED(FULL, ELEMENTWISE)
+    assert f.cols_required(0, 4, 16) == 4
+    assert f.cols_required(3, 4, 16) == 16
+    assert FULL.cols_required(0, 4, 16) == 16          # column axis FULL
+    w = TILED(ELEMENTWISE, windowed(3))
+    assert w.cols_required(0, 4, 16) == 7
+    assert w.cols_required(3, 4, 16) == 16
+
+
+def test_library_tile_policies():
+    from repro.core.isa import default_library
+    lib = default_library()
+    a, b, c = lib.lookup(0).dataflow(((4, 8), (8, 6), (4, 6)), {}, ElemWidth.W)
+    assert (a.kind, a.col_kind) == (FlowKind.ELEMENTWISE, FlowKind.FULL)
+    assert (b.kind, b.col_kind) == (FlowKind.FULL, FlowKind.ELEMENTWISE)
+    assert (c.kind, c.col_kind) == (FlowKind.ELEMENTWISE,
+                                    FlowKind.ELEMENTWISE)
+    (x, f) = lib.lookup(3).dataflow(((8, 8), (3, 4)), {}, ElemWidth.W)
+    assert x.col_kind is FlowKind.WINDOWED and x.window_cols == 4
+    assert f.col_kind is FlowKind.FULL
+    (cl, _) = lib.lookup(4).dataflow(((24, 8), (9, 3)), {}, ElemWidth.W)
+    assert cl.col_kind is FlowKind.WINDOWED and cl.window_cols == 5
+
+
+# ------------------------------------------------------- TileTrain gating
+def test_tile_train_2d_gate():
+    # One block, 2 bands x 2 col tiles; tiles land at distinct times.
+    tr = TileTrain(cum_rows=[[4, 8]], cum_cols=[8, 16],
+                   end_times=[[[10, 40], [20, 50]]])
+    assert tr.pace == 2 and tr.col_pace == 2
+    assert tr.piece_weights() == [4, 4] and tr.col_weights() == [8, 8]
+    ew2d = TILED(ELEMENTWISE, ELEMENTWISE)
+    # piece (0,0) needs rows<=4, cols<=8 -> tile (0,0) only
+    assert tr.gate(ew2d, 0, 2, 0, 2) == 10
+    # piece (0,1) needs all cols of band 0
+    assert tr.gate(ew2d, 0, 2, 1, 2) == 40
+    # piece (1,0) needs both bands' first tiles
+    assert tr.gate(ew2d, 1, 2, 0, 2) == 20
+    assert tr.gate(ew2d, 1, 2, 1, 2) == 50
+    # row-FULL/col-streamed (GEMM B): piece (0,0) needs whole col tile 0
+    bf = TILED(FULL, ELEMENTWISE)
+    assert tr.gate(bf, 0, 2, 0, 2) == 20
+    assert tr.gate(bf, 0, 2, 1, 2) == 50
+    # 1D call signature still works (single implicit col piece = everything)
+    assert tr.gate(ELEMENTWISE, 0, 2) == 40
+
+
+def test_tile_entries_orders():
+    # band-major: all col tiles of a band before the next band
+    assert tile_entries([[4, 4]], [8, 8]) == [
+        (0, 0, 0), (0, 0, 1), (0, 1, 0), (0, 1, 1)]
+    # col-major (row-FULL operands): whole col tile first
+    assert tile_entries([[4, 4]], [8, 8], col_major=True) == [
+        (0, 0, 0), (0, 1, 0), (0, 0, 1), (0, 1, 1)]
+    # blocks round-robin at band granularity
+    assert tile_entries([[2, 2], [2, 2]], [4]) == [
+        (0, 0, 0), (1, 0, 0), (0, 1, 0), (1, 1, 0)]
+
+
+# ----------------------------------------------------- region containment
+def test_region_contains_exact_cases():
+    dense = StridedRegion(addr=0, rows=8, row_bytes=32, stride_bytes=32)
+    assert dense.contains(StridedRegion(64, 2, 32, 32))      # sub-band
+    assert dense.contains(StridedRegion(10, 1, 5, 5))        # arbitrary run
+    assert not dense.contains(StridedRegion(0, 8, 32, 64))   # pokes past end
+    strided = StridedRegion(addr=0, rows=8, row_bytes=16, stride_bytes=64)
+    assert strided.contains(strided)
+    assert strided.contains(StridedRegion(128, 2, 16, 64))   # row sub-band
+    assert strided.contains(StridedRegion(4, 8, 8, 64))      # column tile
+    assert not strided.contains(StridedRegion(8, 8, 16, 64))  # spills to gap
+    assert not strided.contains(StridedRegion(0, 8, 16, 32))  # hits gaps
+    assert not strided.contains(StridedRegion(16, 1, 8, 8))  # inside a gap
+    # unequal strides decided row-by-row
+    assert strided.contains(StridedRegion(0, 4, 16, 128))
+    assert not strided.contains(StridedRegion(0, 4, 16, 96))
+
+
+def test_region_contains_oracle():
+    """Exhaustive byte-set oracle over a small parameter sweep."""
+    def byteset(r):
+        out = set()
+        for i in range(r.rows):
+            s = r.addr + i * r.stride_bytes
+            out.update(range(s, s + r.row_bytes))
+        return out
+
+    regions = [StridedRegion(a, rows, rb, sb)
+               for a in (0, 3, 7)
+               for rows in (1, 2, 3)
+               for rb in (2, 4)
+               for sb in (2, 4, 6, 8)]
+    for ra in regions:
+        sa = byteset(ra)
+        for rb_ in regions:
+            assert ra.contains(rb_) == (byteset(rb_) <= sa), (ra, rb_)
+
+
+# --------------------------------------------------- workloads + identity
+def strip_gemm(cop, strips=6, m=4, k=32, n=32, seed=3):
+    """Strip-mined GEMM: thin A strips against one shared B (DMA-bound, so
+    the repeated B fetch sits on the critical path)."""
+    rng = np.random.default_rng(seed)
+    B = rng.integers(-9, 9, (k, n), dtype=np.int32)
+    aB = cop.place(B, ElemWidth.W)
+    outs = []
+    for _ in range(strips):
+        A = rng.integers(-9, 9, (m, k), dtype=np.int32)
+        aA = cop.place(A, ElemWidth.W)
+        aD = cop.malloc(m * n * 4)
+        cop._xmr_w(0, aA, 0, m, k)
+        cop._xmr_w(1, aB, 0, k, n)
+        cop._xmr_w(2, aD, 0, m, n)
+        cop._gemm_w(2, 0, 1, 2, alpha=1.0, beta=0.0)
+        outs.append((aD, A, B, (m, n)))
+    cop.barrier()
+    return outs
+
+
+def check_strip_gemm(cop, outs):
+    for aD, A, B, shape in outs:
+        ref = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+        np.testing.assert_array_equal(
+            cop.gather(aD, *shape, ElemWidth.W), ref)
+
+
+MODES = [
+    {},                                        # PR-3 row trains
+    {"tiling": (4, 8)},                        # 2D tiles
+    {"tiling": (0, 8)},                        # col tiles, row_chunk bands
+    {"reuse": True},                           # reuse without tiling
+    {"tiling": (4, 8), "reuse": True},         # both
+]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_strip_gemm_bit_identical_and_bounded(mode):
+    cop_s = make_cop("serial")
+    outs_s = strip_gemm(cop_s)
+    check_strip_gemm(cop_s, outs_s)
+    cop_p = make_cop("pipelined", **mode)
+    outs_p = strip_gemm(cop_p)
+    check_strip_gemm(cop_p, outs_p)
+    cop_s.rt.cache.flush_all()      # write-back LLC: land host-dirty lines
+    cop_p.rt.cache.flush_all()
+    np.testing.assert_array_equal(cop_s.rt.memory.data,
+                                  cop_p.rt.memory.data)
+    assert cop_p.rt.sim_time <= cop_s.rt.stats.total_cycles
+
+
+from tests.test_dataflow import LIBRARY_KERNELS, _issue_kernel  # noqa: E402
+
+
+@pytest.mark.parametrize("kernel", LIBRARY_KERNELS)
+@pytest.mark.parametrize("mode", [{"tiling": (4, 8)},
+                                  {"tiling": (2, 4), "reuse": True}])
+def test_all_kernels_bit_identical_under_tiling(kernel, mode):
+    cop_s = make_cop("serial")
+    rng = np.random.default_rng(11)
+    aD, shape, ref = _issue_kernel(cop_s, kernel, rng)
+    cop_s.barrier()
+    np.testing.assert_array_equal(cop_s.gather(aD, *shape, ElemWidth.W), ref)
+    cop_p = make_cop("pipelined", **mode)
+    rng = np.random.default_rng(11)
+    aD, shape, ref = _issue_kernel(cop_p, kernel, rng)
+    cop_p.barrier()
+    np.testing.assert_array_equal(cop_p.gather(aD, *shape, ElemWidth.W), ref)
+    cop_s.rt.cache.flush_all()
+    cop_p.rt.cache.flush_all()
+    np.testing.assert_array_equal(cop_s.rt.memory.data, cop_p.rt.memory.data)
+    assert cop_p.rt.sim_time <= cop_s.rt.stats.total_cycles
+
+
+# ------------------------------------------------------------ reuse wins
+def test_strip_gemm_reuse_strictly_faster():
+    """Acceptance: reuse on eliminates the repeated B fetch — the makespan is
+    strictly below reuse off, outputs stay bit-identical, and the hits are
+    counted in PhaseStats."""
+    cop_off = make_cop("pipelined")
+    strip_gemm(cop_off)
+    cop_on = make_cop("pipelined", reuse=True)
+    outs = strip_gemm(cop_on)
+    check_strip_gemm(cop_on, outs)
+    cop_off.rt.cache.flush_all()
+    cop_on.rt.cache.flush_all()
+    np.testing.assert_array_equal(cop_off.rt.memory.data,
+                                  cop_on.rt.memory.data)
+    assert cop_on.rt.sim_time < cop_off.rt.sim_time
+    assert cop_on.rt.stats.reuse_hits > 0
+    assert cop_on.rt.stats.reused_dma_cycles > 0
+    assert cop_on.rt.report().reuse_hits == cop_on.rt.stats.reuse_hits
+    # the skipped transfers left the allocation phase
+    assert cop_on.rt.stats.allocation_cycles \
+        == cop_off.rt.stats.allocation_cycles \
+        - cop_on.rt.stats.reused_dma_cycles
+    # reuse skips are visible as instant markers on the port's operand lane
+    marks = [r for r in cop_on.rt.tracer.records if r.instant]
+    assert len(marks) == cop_on.rt.stats.reuse_hits
+    assert all(r.duration == 0 and "reuse[" in r.name for r in marks)
+
+
+def test_reuse_invalidated_by_overwrite():
+    """A host store over the shared operand's region must kill the modeled
+    copy: the next strip re-streams (no stale-hit), and outputs follow the
+    new bytes."""
+    cop = make_cop("pipelined", reuse=True)
+    rng = np.random.default_rng(5)
+    n = 16
+    B = rng.integers(-9, 9, (n, n), dtype=np.int32)
+    aB = cop.place(B, ElemWidth.W)
+
+    def strip(tag):
+        A = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aA = cop.place(A, ElemWidth.W)
+        aD = cop.malloc(n * n * 4)
+        cop._xmr_w(0, aA, 0, n, n)
+        cop._xmr_w(1, aB, 0, n, n)
+        cop._xmr_w(2, aD, 0, n, n)
+        cop._gemm_w(2, 0, 1, 2, alpha=1.0, beta=0.0)
+        return aD, A
+
+    run1 = [strip(i) for i in range(3)]
+    cop.barrier()
+    hits_before = cop.rt.stats.reuse_hits
+    B2 = rng.integers(-9, 9, (n, n), dtype=np.int32)
+    cop.store(aB, B2, ElemWidth.W)               # invalidates every copy
+    run2 = [strip(i) for i in range(2)]
+    cop.barrier()
+    for aD, A in run1:
+        ref = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+        np.testing.assert_array_equal(cop.gather(aD, n, n, ElemWidth.W), ref)
+    for aD, A in run2:
+        ref = (A.astype(np.int64) @ B2.astype(np.int64)).astype(np.int32)
+        np.testing.assert_array_equal(cop.gather(aD, n, n, ElemWidth.W), ref)
+    # run2's first strips on each VPU re-streamed B (no hit off a dead copy);
+    # the *data* correctness above is the real guard — reuse is timing-only,
+    # so a stale entry would show up as a wrong makespan, never wrong bytes.
+    first_dispatches = min(2, cop.rt.cache.n_vpus)
+    assert cop.rt.stats.reuse_hits - hits_before <= 2 - first_dispatches + 1
+
+
+def test_reuse_capacity_evicts_oldest():
+    rt = PipelinedRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                          reuse=True)
+    cap = 4 * 256
+    r1 = StridedRegion(0, 1, 600, 600)
+    r2 = StridedRegion(4096, 1, 600, 600)
+    rt._reuse_note(0, r1, 10)
+    rt._reuse_note(0, r2, 20)                    # 1200 B > cap: r1 falls out
+    assert rt._reuse_lookup(0, r1) is None
+    assert rt._reuse_lookup(0, r2) == 20
+    assert sum(e.region.nbytes for e in rt._reuse_sets[0]) <= cap
+
+
+# ------------------------------------------- FULL lower bound under tiles
+def test_tiled_gemm_respects_per_operand_lower_bound():
+    """PR-3 regression carried into the tile model: no GEMM compute piece
+    (i, j) may start before ALL of B's rows for column tile j have landed —
+    the tile model must never report a makespan below the per-operand bound."""
+    cop = make_cop("pipelined", tiling=(4, 8))
+    outs = strip_gemm(cop, strips=3)
+    check_strip_gemm(cop, outs)
+    recs = cop.rt.tracer.records
+    kernels = {dict(r.args)["kernel"] for r in recs
+               if r.phase == "compute"}
+    for kid in kernels:
+        b_dma = [r for r in recs if "dma-in" in r.name
+                 and dict(r.args).get("kernel") == kid
+                 and dict(r.args).get("operand") == 1]
+        comp = [r for r in recs if r.phase == "compute"
+                and dict(r.args).get("kernel") == kid]
+        assert b_dma and comp
+        n_tiles = max(dict(r.args)["tile"] for r in b_dma) + 1
+        assert n_tiles > 1, "B was not column-tiled"
+        for c in comp:
+            pj = dict(c.args)["tile"]
+            # compute tile (i, j) waits for B's column tiles 0..j in full
+            # (B's rows are FULL; its col tiles pace the compute columns 1:1)
+            need = [r for r in b_dma if dict(r.args)["tile"] <= pj]
+            assert c.start >= max(r.start + r.duration for r in need), \
+                f"k{kid} piece tile {pj} beat B's column tile"
+        # B streams column-tile-major: every chunk of tile 0 before any of 1
+        t0_end = max(r.start + r.duration for r in b_dma
+                     if dict(r.args)["tile"] == 0)
+        t1_start = min(r.start for r in b_dma if dict(r.args)["tile"] == 1)
+        assert t0_end <= t1_start
+
+
+def test_tiled_compute_starts_before_full_operand_lands():
+    """The win side: with column tiling the first GEMM piece starts once B's
+    FIRST column tile lands — strictly before B's whole train ends (the
+    untiled model's earliest start). gemm(A, B, A) keeps the accumulator off
+    the DMA port (repeated operand) so B's tail tiles are the last stream."""
+    cop = make_cop("pipelined", tiling=(4, 8))
+    rng = np.random.default_rng(3)
+    m, k = 4, 32
+    A = rng.integers(-9, 9, (m, k), dtype=np.int32)
+    B = rng.integers(-9, 9, (k, k), dtype=np.int32)
+    aA, aB = cop.place(A, ElemWidth.W), cop.place(B, ElemWidth.W)
+    aD = cop.malloc(m * k * 4)
+    cop._xmr_w(0, aA, 0, m, k)
+    cop._xmr_w(1, aB, 0, k, k)
+    cop._xmr_w(2, aD, 0, m, k)
+    cop._gemm_w(2, 0, 1, 0, alpha=1.0, beta=1.0)
+    cop.barrier()
+    ref = (A.astype(np.int64) @ B.astype(np.int64)
+           + A.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(cop.gather(aD, m, k, ElemWidth.W), ref)
+    recs = cop.rt.tracer.records
+    b_dma = [r for r in recs if "dma-in" in r.name
+             and dict(r.args).get("operand") == 1]
+    comp = [r for r in recs if r.phase == "compute"]
+    b_end = max(r.start + r.duration for r in b_dma)
+    assert len({dict(r.args)["tile"] for r in b_dma}) > 1
+    assert min(r.start for r in comp) < b_end
+
+
+# ---------------------------------------------------------- config knobs
+def test_tiling_requires_dataflow():
+    with pytest.raises(ValueError, match="dataflow"):
+        PipelinedRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                         dataflow=False, tiling=(4, 8))
+    # (0, 0) means both axes disabled — normalized to None, so it composes
+    # with dataflow=False exactly like the SimConfig.tiling property
+    rt = PipelinedRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                          dataflow=False, tiling=(0, 0))
+    assert rt.tiling is None
+    with pytest.raises(ValueError, match="dataflow"):
+        PipelinedRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                         dataflow=False, reuse=True)
+    with pytest.raises(ValueError, match="tiling"):
+        PipelinedRuntime(n_vpus=1, vregs_per_vpu=4, vlen_bytes=256,
+                         tiling=(-1, 4))
+
+
+def test_tiling_knob_threads_to_runtime():
+    cfg = SimConfig(n_vpus=2, vregs_per_vpu=8, vlen_bytes=256,
+                    memory_bytes=1 << 16, tile_rows=4, tile_cols=16,
+                    reuse=True)
+    rt = cfg.make_runtime("pipelined")
+    assert rt.tiling == (4, 16) and rt.reuse is True
+    assert SimConfig().tiling is None and SimConfig().reuse is False
+    assert SimConfig(reuse="on").reuse is True
+    assert SimConfig(reuse="off").reuse is False
+
+
+def test_tiling_yaml_knob(tmp_path):
+    pytest.importorskip("yaml")
+    from repro.sim import load_config
+    assert load_config("arcane-default").tiling is None
+    assert load_config("arcane-default").reuse is False
+    cfg8 = load_config("arcane-8vpu")
+    assert cfg8.tiling == (4, 32) and cfg8.reuse is True
+    (tmp_path / "c.yaml").write_text(
+        "extends: arcane-default\n"
+        "pipeline: {tiling: {rows: 2, cols: 8}, reuse: on}\n")
+    cfg = load_config(str(tmp_path / "c.yaml"))
+    assert cfg.tiling == (2, 8) and cfg.reuse is True
+    rt = cfg.make_runtime("pipelined")
+    assert rt.tiling == (2, 8) and rt.reuse is True
+
+
+def test_per_tile_trace_lanes_in_chrome_export():
+    cop = make_cop("pipelined", tiling=(4, 8))
+    outs = strip_gemm(cop, strips=1)
+    check_strip_gemm(cop, outs)
+    doc = cop.rt.tracer.to_chrome()
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    # B's per-column-tile lanes render as their own thread rows
+    assert any(".c0" in n for n in names)
+    assert any(".c1" in n for n in names)
+
+
+def test_fig4_benchmark_tile_reuse_path():
+    from benchmarks.fig4_speedup import arcane_cycles
+    base, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined")
+    tiled, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined",
+                             tiling=(4, 16), reuse=True)
+    assert base > 0 and tiled > 0
+    serial, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "serial")
+    assert tiled <= serial

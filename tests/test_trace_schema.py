@@ -1,0 +1,144 @@
+"""Structural validation of exported Chrome traces (satellite).
+
+For serial-equivalent and pipelined runs across the gating/tiling/reuse
+modes: every complete event is well-formed and lands on a named thread row,
+per-resource busy intervals never overlap, and the trace's per-phase cycle
+totals equal ``PhaseStats`` — including runs where reuse skips DMA-ins (the
+skipped cycles appear in neither side, only in the instant markers and the
+``reused_dma_cycles`` tally).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.sim import PipelinedRuntime
+from repro.sim.trace import PHASES, Tracer
+
+
+def make_cop(**kw):
+    kw.setdefault("n_vpus", 2)
+    kw.setdefault("vregs_per_vpu", 32)
+    kw.setdefault("vlen_bytes", 512)
+    return ArcaneCoprocessor(runtime=PipelinedRuntime(**kw))
+
+
+def mixed_workload(cop, strips=4, n=16):
+    """GEMM strips over a shared B + an elementwise/pool chain: exercises
+    DMA trains, consolidations, deferred drains, and (when on) reuse skips."""
+    rng = np.random.default_rng(7)
+    B = rng.integers(-9, 9, (n, n), dtype=np.int32)
+    aB = cop.place(B, ElemWidth.W)
+    for i in range(strips):
+        A = rng.integers(-9, 9, (n, n), dtype=np.int32)
+        aA = cop.place(A, ElemWidth.W)
+        aT = cop.malloc(n * n * 4)
+        aP = cop.malloc((n // 2) * (n // 2) * 4)
+        cop._xmr_w(0, aA, 0, n, n)
+        cop._xmr_w(1, aB, 0, n, n)
+        cop._xmr_w(2, aT, 0, n, n)
+        cop._gemm_w(2, 0, 1, 2, alpha=1.0, beta=0.0)
+        cop._xmr_w(4, aP, 0, n // 2, n // 2)
+        cop._maxpool(ElemWidth.W, 4, 2, 2, 2)
+    cop.barrier()
+    return cop
+
+
+MODES = [
+    {"row_chunk": 0},                          # serial-equivalent granularity
+    {},                                        # PR-3 row trains
+    {"dataflow": False},                       # legacy concatenated gating
+    {"tiling": (4, 8)},                        # 2D tile trains
+    {"tiling": (4, 8), "reuse": True},         # tiles + reuse skips
+    {"reuse": True},                           # reuse on row trains
+]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_chrome_export_schema(mode, tmp_path):
+    cop = mixed_workload(make_cop(**mode))
+    doc = cop.rt.tracer.to_chrome()
+    events = doc["traceEvents"]
+    named = {e["tid"]: e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    complete = [e for e in events if e["ph"] == "X"]
+    instants = [e for e in events if e["ph"] == "i"]
+    assert complete
+    for e in complete:
+        assert set(e) >= {"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                          "args"}
+        assert e["cat"] in PHASES
+        assert e["ts"] >= 0 and e["dur"] >= 1
+        assert e["tid"] in named
+    for e in instants:
+        assert e["s"] == "t" and e["tid"] in named and e["cat"] in PHASES
+    if mode.get("reuse"):
+        assert len(instants) == cop.rt.stats.reuse_hits > 0
+    # round-trips through the dump path
+    out = cop.rt.tracer.dump(str(tmp_path / "t.json"))
+    with open(out) as f:
+        assert json.load(f) == doc
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_per_resource_intervals_never_overlap(mode):
+    cop = mixed_workload(make_cop(**mode))
+    by_resource: dict = {}
+    for r in cop.rt.tracer.records:
+        by_resource.setdefault(r.resource, []).append(r)
+    assert len(by_resource) >= 3      # ecpu, lock, vpu ports at minimum
+    for name, recs in by_resource.items():
+        recs = sorted(recs, key=lambda r: (r.start, r.start + r.duration))
+        for a, b in zip(recs, recs[1:]):
+            assert a.start + a.duration <= b.start, \
+                f"{name}: {a.name} overlaps {b.name}"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_trace_phase_totals_equal_phase_stats(mode):
+    """The trace is a complete account of the modeled cycles: per-phase sums
+    equal PhaseStats for every scheduler mode. With reuse on, skipped DMA-ins
+    contribute to neither side — their cycles live only in
+    ``reused_dma_cycles`` — so the identity still holds."""
+    cop = mixed_workload(make_cop(**mode))
+    phase = cop.rt.tracer.phase_cycles()
+    s = cop.rt.stats
+    assert phase["allocation"] == s.allocation_cycles
+    assert phase["compute"] == s.compute_cycles
+    assert phase["writeback"] == s.writeback_cycles
+    # xmr decode slices never enter the event timeline
+    assert phase["preamble"] <= s.preamble_cycles
+    if mode.get("reuse"):
+        assert s.reuse_hits > 0 and s.reused_dma_cycles > 0
+        # an identical run without reuse pays exactly the skipped cycles more
+        base = {k: v for k, v in mode.items() if k != "reuse"}
+        cop_off = mixed_workload(make_cop(**base))
+        assert cop_off.rt.stats.allocation_cycles \
+            == s.allocation_cycles + s.reused_dma_cycles
+    else:
+        assert s.reuse_hits == 0 and s.reused_dma_cycles == 0
+
+
+def test_serial_run_keeps_stats_but_no_trace():
+    """The serial scheduler carries the same PhaseStats (shared steps) but
+    books no trace activities — PhaseStats is the single accounting source
+    both schedulers agree on."""
+    from repro.core.runtime import CacheRuntime
+    cop = ArcaneCoprocessor(runtime=CacheRuntime(
+        n_vpus=2, vregs_per_vpu=32, vlen_bytes=512))
+    mixed_workload(cop)
+    assert cop.rt.stats.total_cycles > 0
+    assert cop.rt.stats.kernels_run == 8
+    assert not hasattr(cop.rt, "tracer")
+    cop_p = mixed_workload(make_cop())
+    assert cop_p.rt.stats.kernels_run == cop.rt.stats.kernels_run
+
+
+def test_instant_emit_validation():
+    tr = Tracer()
+    with pytest.raises(ValueError, match="instant"):
+        tr.emit("x", "allocation", "r", 0, 5, instant=True)
+    rec = tr.emit("x", "allocation", "r", 3, 0, instant=True)
+    assert rec.instant and rec.duration == 0
+    assert tr.phase_cycles()["allocation"] == 0
