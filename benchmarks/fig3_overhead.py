@@ -16,13 +16,23 @@ from benchmarks.fig4_speedup import arcane_cycles
 
 def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
         scheduler="serial", row_chunk=None, dataflow=True, tiling=None,
-        reuse=False):
+        reuse=False, profile=False):
     rows = []
     for ln in lanes:
         for n in sizes:
-            total, shares = arcane_cycles(n, n, 3, ElemWidth.W, ln, scheduler,
-                                          row_chunk, dataflow, tiling, reuse)
-            rows.append({"size": n, "lanes": ln, "cycles": total, **shares})
+            total, shares, prof = arcane_cycles(
+                n, n, 3, ElemWidth.W, ln, scheduler, row_chunk, dataflow,
+                tiling, reuse, profile)
+            row = {"size": n, "lanes": ln, "cycles": total, **shares}
+            if prof is not None:
+                row["profile"] = prof
+                eps = prof.get("events_per_sec")
+                print(f"fig3_profile,{n}x{n} {ln}lane,"
+                      f"wall={prof['wall_seconds']:.3f}s,"
+                      f"ips={prof['instr_per_sec']:.0f},"
+                      f"aq={prof['alias_queries']}"
+                      + (f",eps={eps:.0f}" if eps else ""))
+            rows.append(row)
             if not quiet:
                 print(f"fig3,int32 3x3 {n}x{n} {ln}lane,{total},"
                       f"pre={shares['preamble']:.3f} "
@@ -74,13 +84,16 @@ def main(argv=None):
     p.add_argument("--reuse", choices=("on", "off"), default="off",
                    help="cross-instruction operand reuse (skip DMA-in of "
                         "regions already modeled resident and clean)")
+    p.add_argument("--profile", action="store_true",
+                   help="print simulator self-profiling per point (wall "
+                        "seconds, events processed, alias queries served)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
     rows = run(quiet=not args.verbose, scheduler=args.scheduler,
                row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
                tiling=tuple(args.tile) if args.tile else None,
-               reuse=args.reuse == "on")
+               reuse=args.reuse == "on", profile=args.profile)
     for k, v in validate(rows).items():
         val = f"{v:.3f}" if isinstance(v, float) else v
         print(f"fig3_validate,{k},{val}")

@@ -86,7 +86,9 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
                   row_chunk: int | None = None,
                   dataflow: bool = True,
                   tiling: tuple[int, int] | None = None,
-                  reuse: bool = False) -> tuple[int, dict]:
+                  reuse: bool = False,
+                  profile: bool = False
+                  ) -> tuple[int, dict, dict | None]:
     """Run the (strip-mined) xmk4 conv layer through the C-RT simulator;
     return total modeled cycles + phase split.
 
@@ -122,10 +124,28 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
     om, on = (h - k + 1) // 2, (w - k + 1) // 2
     aR = cop.malloc(max(om * on * width.nbytes, 4))
     cop.rt.stats.reset()          # measure the offload path only
+    import time as _time
+    wall0 = _time.perf_counter()
     tiled_conv_layer(cop, width, aX, h, w, aF, k, aR)
+    wall = _time.perf_counter() - wall0
     s = cop.rt.stats
     total = cop.rt.sim_time if scheduler == "pipelined" else s.total_cycles
-    return total, s.shares()
+    if not profile:
+        return total, s.shares(), None
+    # Simulator self-profiling (the --profile flag): wall-clock seconds the
+    # run burned, events the pipelined engine processed, and AliasIndex
+    # queries served across the scheduler stack.
+    prof = {"wall_seconds": wall,
+            "kernels_run": s.kernels_run,
+            "instr_per_sec": s.kernels_run / wall if wall else 0.0,
+            "alias_queries": cop.rt.alias_queries_served()}
+    if scheduler == "pipelined":
+        rep = cop.rt.report()
+        prof["sim_seconds"] = rep.sim_seconds
+        prof["events_processed"] = rep.events_processed
+        prof["events_per_sec"] = (rep.events_processed / wall
+                                  if wall else 0.0)
+    return total, s.shares(), prof
 
 
 def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
@@ -137,7 +157,7 @@ def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
 def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
         widths=(ElemWidth.B, ElemWidth.H, ElemWidth.W), quiet=False,
         scheduler="serial", row_chunk=None, dataflow=True, tiling=None,
-        reuse=False):
+        reuse=False, profile=False):
     rows = []
     for width in widths:
         for k in filters:
@@ -148,9 +168,9 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                 scalar = scalar_cpu_cycles(cost, width)
                 simd = packed_simd_cycles(cost, width)
                 for ln in lanes:
-                    arc, shares = arcane_cycles(n, n, k, width, ln, scheduler,
-                                                row_chunk, dataflow, tiling,
-                                                reuse)
+                    arc, shares, prof = arcane_cycles(
+                        n, n, k, width, ln, scheduler, row_chunk, dataflow,
+                        tiling, reuse, profile)
                     row = {
                         "width": width.suffix, "filter": k, "size": n,
                         "lanes": ln, "cycles": arc,
@@ -161,10 +181,19 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                     if scheduler == "pipelined":
                         row["tiling"] = list(tiling) if tiling else None
                         row["reuse"] = reuse
-                        serial_arc, _ = arcane_cycles(n, n, k, width, ln,
-                                                      "serial")
+                        serial_arc, _, _ = arcane_cycles(n, n, k, width, ln,
+                                                         "serial")
                         row["serial_cycles"] = serial_arc
                         row["concurrency_speedup"] = serial_arc / arc
+                    if prof is not None:
+                        row["profile"] = prof
+                        if not quiet:
+                            eps = prof.get("events_per_sec")
+                            print(f"fig4_profile,{width.suffix}{k} {n} "
+                                  f"{ln}lane,wall={prof['wall_seconds']:.3f}s,"
+                                  f"ips={prof['instr_per_sec']:.0f},"
+                                  f"aq={prof['alias_queries']}"
+                                  + (f",eps={eps:.0f}" if eps else ""))
                     rows.append(row)
                     if not quiet:
                         extra = (f" concurrency={row['concurrency_speedup']:.2f}x"
@@ -248,6 +277,10 @@ def main(argv=None):
     p.add_argument("--out-json", default=None, metavar="PATH",
                    help="write rows + concurrency summary as JSON "
                         "(the CI BENCH_pipeline.json artifact)")
+    p.add_argument("--profile", action="store_true",
+                   help="record simulator self-profiling per point (wall "
+                        "seconds, events processed, alias queries served) — "
+                        "printed and added to the --out-json rows")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
@@ -259,7 +292,7 @@ def main(argv=None):
                quiet=not args.verbose, scheduler=args.scheduler,
                row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
                tiling=tuple(args.tile) if args.tile else None,
-               reuse=args.reuse == "on")
+               reuse=args.reuse == "on", profile=args.profile)
     summary = None
     if args.scheduler == "pipelined":
         speedups = [r["concurrency_speedup"] for r in rows]
@@ -282,12 +315,31 @@ def main(argv=None):
         for k, v in res.items():
             val = f"{v:.1f}" if isinstance(v, float) else v
             print(f"fig4_validate,{k},{val}")
+    profile_summary = None
+    if args.profile:
+        profs = [r["profile"] for r in rows if "profile" in r]
+        wall = sum(p["wall_seconds"] for p in profs)
+        instr = sum(p["kernels_run"] for p in profs)
+        profile_summary = {
+            "points": len(profs),
+            "wall_seconds": wall,
+            "instructions": instr,
+            "instr_per_sec": instr / wall if wall else 0.0,
+            "alias_queries": sum(p["alias_queries"] for p in profs),
+            "events_processed": sum(p.get("events_processed", 0)
+                                    for p in profs),
+        }
+        print(f"fig4_profile,total,wall={wall:.2f}s,"
+              f"ips={profile_summary['instr_per_sec']:.0f},"
+              f"aq={profile_summary['alias_queries']},"
+              f"events={profile_summary['events_processed']}")
     if args.out_json:
         doc = {"benchmark": "fig4_speedup", "scheduler": args.scheduler,
                "row_chunk": args.row_chunk, "dataflow": args.dataflow,
                "tiling": list(args.tile) if args.tile else None,
                "reuse": args.reuse,
-               "rows": rows, "summary": summary, "validate": res}
+               "rows": rows, "summary": summary, "validate": res,
+               "profile_summary": profile_summary}
         with open(args.out_json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"fig4,wrote,{args.out_json}")

@@ -19,14 +19,19 @@ an operand (e.g. the untouched columns beside a conv strip) does not stall —
 the check is exact, not conservative.
 
 Entries are reference-counted per physical binding so that renamed matrices
-(same logical register, different physical tags) track independently.
+(same logical register, different physical tags) track independently. Live
+entries are mirrored into an :class:`~repro.core.alias_index.AliasIndex`
+keyed by slot, so the host-access checks and registration bookkeeping cost
+O(hits) rather than a scan of the whole (statically sized) table.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
 from typing import Iterator, Optional
 
+from repro.core.alias_index import AliasIndex
 from repro.core.isa import KernelError
 from repro.core.regions import StridedRegion
 
@@ -70,23 +75,31 @@ class AddressTable:
     def __init__(self, capacity: int = 64):
         self.capacity = capacity
         self._entries: list[Optional[ATEntry]] = [None] * capacity
+        # Live-entry lookup structures: (phys_id, kind) -> slot for the O(1)
+        # up-ref/release/mark paths, a min-heap of reusable slots (the lowest
+        # free slot wins, matching the original first-free scan), and the
+        # footprint index answering the host-access hazard checks by slot.
+        self._by_key: dict[tuple[int, RegionKind], int] = {}
+        self._free_heap: list[int] = list(range(capacity))
+        self._alias_index = AliasIndex()
 
     def __iter__(self) -> Iterator[ATEntry]:
         return (e for e in self._entries if e is not None and e.valid)
 
     def free_slots(self) -> int:
         """Slots available for new registrations (empty or invalidated)."""
-        return sum(1 for e in self._entries if e is None or not e.valid)
+        return self.capacity - len(self._by_key)
 
     def slots_needed(self, regions: list[tuple[int, "RegionKind"]]) -> int:
         """Fresh slots a batch of registrations would consume: repeated
         operands and regions already registered live just up-ref the
         existing ``(phys_id, kind)`` entry."""
-        have = {(e.phys_id, e.kind) for e in self}
-        return len(set(regions) - have)
+        return len(set(regions) - self._by_key.keys())
 
     def _free_slot(self) -> int:
-        for i, e in enumerate(self._entries):
+        while self._free_heap:
+            i = heapq.heappop(self._free_heap)
+            e = self._entries[i]
             if e is None or not e.valid:
                 return i
         # Preamble-level rejection (bridge answers 'kill'), not a crash: the
@@ -101,38 +114,45 @@ class AddressTable:
     def register(self, region: StridedRegion, kind: RegionKind,
                  phys_id: int) -> ATEntry:
         """Register (or up-ref) an operand region for a queued kernel."""
-        for e in self:
-            if e.phys_id == phys_id and e.kind == kind:
-                e.refcount += 1
-                e.status = RegionStatus.BUSY
-                return e
+        slot = self._by_key.get((phys_id, kind))
+        if slot is not None:
+            e = self._entries[slot]
+            e.refcount += 1
+            e.status = RegionStatus.BUSY
+            return e
         entry = ATEntry(region=region, kind=kind, phys_id=phys_id)
-        self._entries[self._free_slot()] = entry
+        slot = self._free_slot()
+        self._entries[slot] = entry
+        self._by_key[(phys_id, kind)] = slot
+        self._alias_index.insert(slot, region)
         return entry
 
     def mark_allocated(self, phys_id: int) -> None:
         """Source operand copied into VPU lines — WAR window closed."""
-        for e in self:
-            if e.phys_id == phys_id and e.kind == RegionKind.SRC:
-                e.status = RegionStatus.ALLOCATED
+        slot = self._by_key.get((phys_id, RegionKind.SRC))
+        if slot is not None:
+            self._entries[slot].status = RegionStatus.ALLOCATED
 
     def release(self, phys_id: int, kind: RegionKind) -> None:
         """Kernel finished with the region: down-ref; free at zero (permissions
         restored for the host, §IV-B3)."""
-        for e in self:
-            if e.phys_id == phys_id and e.kind == kind:
-                e.refcount -= 1
-                if e.refcount <= 0:
-                    e.valid = False
-                    e.status = RegionStatus.FREE
-                return
+        slot = self._by_key.get((phys_id, kind))
+        if slot is None:
+            return
+        e = self._entries[slot]
+        e.refcount -= 1
+        if e.refcount <= 0:
+            e.valid = False
+            e.status = RegionStatus.FREE
+            del self._by_key[(phys_id, kind)]
+            self._alias_index.remove(slot)
+            heapq.heappush(self._free_heap, slot)
 
     # ---------------------------------------------------------------- checks
     def blocks_store(self, start: int, end: int) -> Optional[ATEntry]:
         """Would a host store into [start, end) corrupt an in-flight kernel?"""
-        for e in self:
-            if not e.overlaps(start, end):
-                continue
+        for slot in self._alias_index.query_interval(start, end):
+            e = self._entries[slot]
             if e.kind == RegionKind.SRC and e.status == RegionStatus.BUSY:
                 return e  # WAR: operand not yet copied into the VPU
             if e.kind == RegionKind.DST:
@@ -141,10 +161,11 @@ class AddressTable:
 
     def blocks_load(self, start: int, end: int) -> Optional[ATEntry]:
         """Would a host load from [start, end) observe a stale result?"""
-        for e in self:
-            if e.overlaps(start, end) and e.kind == RegionKind.DST:
+        for slot in self._alias_index.query_interval(start, end):
+            e = self._entries[slot]
+            if e.kind == RegionKind.DST:
                 return e  # RAW: kernel result not written back yet
         return None
 
     def live_count(self) -> int:
-        return sum(1 for _ in self)
+        return len(self._by_key)

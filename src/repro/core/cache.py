@@ -102,6 +102,14 @@ class ArcaneCache:
         # The data array: one row per line; VPU v's vector register r is row
         # v * vregs_per_vpu + r — the memory *is* the register file.
         self.data = np.zeros((self.n_lines, vlen_bytes), dtype=np.uint8)
+        # tag -> line for O(1) lookup; at most one valid line per tag (fills
+        # only happen on misses, so duplicates cannot arise).
+        self._tag_to_line: dict[int, int] = {}
+        # Per-VPU busy/dirty line counters: scheduler policy inputs
+        # (fewest-dirty-lines, capacity checks) read these every dispatch —
+        # maintained incrementally instead of rescanning the line slice.
+        self._busy_per_vpu = [0] * n_vpus
+        self._dirty_per_vpu = [0] * n_vpus
         self._lru_counter = 0
         self.locked_by_ecpu = False
         self.stats = CacheStats()
@@ -123,15 +131,26 @@ class ArcaneCache:
         self.lines[idx].lru = self._lru_counter
 
     def lookup(self, addr: int) -> Optional[int]:
-        tag = self._align(addr)
-        for i, ln in enumerate(self.lines):
-            if ln.valid and ln.tag == tag:
-                return i
-        return None
+        return self._tag_to_line.get(self._align(addr))
+
+    def _invalidate_tag(self, idx: int) -> None:
+        ln = self.lines[idx]
+        if ln.valid and self._tag_to_line.get(ln.tag) == idx:
+            del self._tag_to_line[ln.tag]
 
     def dirty_line_count(self, vpu: int) -> int:
         """Scheduler policy input: prefer the VPU with fewest dirty lines."""
-        return sum(1 for i in self.vpu_lines(vpu) if self.lines[i].dirty)
+        return self._dirty_per_vpu[vpu]
+
+    def free_line_count(self, vpu: int) -> int:
+        """Lines of ``vpu`` not claimed by an in-flight kernel."""
+        return self.vregs_per_vpu - self._busy_per_vpu[vpu]
+
+    def _set_dirty(self, idx: int, val: bool) -> None:
+        ln = self.lines[idx]
+        if ln.dirty != val:
+            ln.dirty = val
+            self._dirty_per_vpu[idx // self.vregs_per_vpu] += 1 if val else -1
 
     # ------------------------------------------------------------------ lock
     def acquire_lock(self) -> bool:
@@ -146,13 +165,19 @@ class ArcaneCache:
         self.locked_by_ecpu = False
 
     # ------------------------------------------------------------- fill/evict
+    def _set_busy(self, idx: int, val: bool) -> None:
+        ln = self.lines[idx]
+        if ln.busy_computing != val:
+            ln.busy_computing = val
+            self._busy_per_vpu[idx // self.vregs_per_vpu] += 1 if val else -1
+
     def _writeback(self, idx: int) -> None:
         ln = self.lines[idx]
         if ln.valid and ln.dirty:
             end = min(ln.tag + self.vlen_bytes, self.memory.size)
             self.memory.write(ln.tag, self.data[idx, : end - ln.tag])
             self.stats.writebacks += 1
-        ln.dirty = False
+        self._set_dirty(idx, False)
 
     def _victim(self) -> int:
         best, best_lru = -1, None
@@ -172,13 +197,16 @@ class ArcaneCache:
         tag = self._align(addr)
         idx = self._victim()
         self._writeback(idx)
+        self._invalidate_tag(idx)
         ln = self.lines[idx]
         end = min(tag + self.vlen_bytes, self.memory.size)
         self.data[idx, : end - tag] = self.memory.read(tag, end - tag)
         if end - tag < self.vlen_bytes:
             self.data[idx, end - tag :] = 0
-        ln.valid, ln.dirty, ln.tag = True, False, tag
-        ln.is_src = ln.is_dst = ln.busy_computing = False
+        ln.valid, ln.tag = True, tag       # dirty already cleared by _writeback
+        self._tag_to_line[tag] = idx
+        self._set_busy(idx, False)
+        ln.is_src = ln.is_dst = False
         self.stats.fills += 1
         self._touch(idx)
         return idx
@@ -220,7 +248,7 @@ class ArcaneCache:
             off = a - self.lines[idx].tag
             take = min(self.vlen_bytes - off, buf.size - pos)
             self.data[idx, off : off + take] = buf[pos : pos + take]
-            self.lines[idx].dirty = True
+            self._set_dirty(idx, True)
             pos += take
 
     # ----------------------------------------------------------- kernel path
@@ -239,19 +267,22 @@ class ArcaneCache:
         chosen = avail[:n]
         for i in chosen:
             self._writeback(i)
+            self._invalidate_tag(i)
             ln = self.lines[i]
             ln.valid, ln.tag = False, -1
-            ln.busy_computing = True
+            self._set_busy(i, True)
             ln.is_src = ln.is_dst = False
             self._touch(i)
         return chosen
 
     def release_vregs(self, line_idxs: list[int]) -> None:
         for i in line_idxs:
+            self._invalidate_tag(i)
+            self._set_busy(i, False)
+            self._set_dirty(i, False)
             ln = self.lines[i]
-            ln.busy_computing = False
             ln.is_src = ln.is_dst = False
-            ln.valid, ln.dirty, ln.tag = False, False, -1
+            ln.valid, ln.tag = False, -1
 
     # ------------------------------------------------------------- DMA (2D)
     def dma_in_2d(
@@ -266,10 +297,32 @@ class ArcaneCache:
         requests and serves hits from the cache, §III-A4). Returns bytes moved.
         """
         total = rows * row_bytes
-        buf = np.empty(total, dtype=np.uint8)
-        for r in range(rows):
-            a = addr + r * stride_bytes
-            buf[r * row_bytes : (r + 1) * row_bytes] = self._snooped_read(a, row_bytes)
+        end = addr + (rows - 1) * stride_bytes + row_bytes
+        if rows > 1 and stride_bytes >= row_bytes:
+            # Bulk path: one strided numpy copy straight from main memory,
+            # then re-read (snoop) only the rows a *dirty* non-busy cache
+            # line covers — a clean valid line holds exactly the memory
+            # bytes (lines become clean only by copying from/to memory), so
+            # serving it from memory is bit-identical.
+            if addr < 0 or end > self.memory.size:
+                raise IndexError(
+                    f"memory read [{addr}, {end}) out of bounds")
+            view = np.lib.stride_tricks.as_strided(
+                self.memory.data[addr:end], shape=(rows, row_bytes),
+                strides=(stride_bytes, 1))
+            buf2d = np.ascontiguousarray(view)
+            snoop = self._snoop_rows(addr, rows, row_bytes, stride_bytes,
+                                     end, dirty_only=True)
+            if snoop:
+                self._snoop_read_rows(addr, snoop, row_bytes, stride_bytes,
+                                      buf2d)
+            buf = buf2d.reshape(-1)
+        else:
+            buf = np.empty(total, dtype=np.uint8)
+            for r in range(rows):
+                a = addr + r * stride_bytes
+                buf[r * row_bytes : (r + 1) * row_bytes] = \
+                    self._snooped_read(a, row_bytes)
         self._scatter_to_lines(line_idxs, buf)
         return total
 
@@ -285,10 +338,113 @@ class ArcaneCache:
         """
         total = rows * row_bytes
         buf = self._gather_from_lines(line_idxs, total)
-        for r in range(rows):
-            a = addr + r * stride_bytes
-            self._snooped_write(a, buf[r * row_bytes : (r + 1) * row_bytes])
+        end = addr + (rows - 1) * stride_bytes + row_bytes
+        if rows > 1 and stride_bytes >= row_bytes:
+            # Bulk path (see dma_in_2d): one strided numpy scatter to memory,
+            # then route the rows a valid cache line covers through the snoop
+            # path so those lines hold the newest data (the bulk write left
+            # the same bytes in memory, which the dirty line shadows — the
+            # write-back later lands identical data, so no observer can tell
+            # this apart from the pure row-by-row path).
+            if addr < 0 or end > self.memory.size:
+                raise IndexError(
+                    f"memory write [{addr}, {end}) out of bounds")
+            view = np.lib.stride_tricks.as_strided(
+                self.memory.data[addr:end], shape=(rows, row_bytes),
+                strides=(stride_bytes, 1))
+            buf2d = buf.reshape(rows, row_bytes)
+            view[:] = buf2d
+            snoop = self._snoop_rows(addr, rows, row_bytes, stride_bytes,
+                                     end, dirty_only=False)
+            if snoop:
+                self._snoop_write_rows(addr, snoop, row_bytes, stride_bytes,
+                                       buf2d)
+        else:
+            for r in range(rows):
+                a = addr + r * stride_bytes
+                self._snooped_write(a, buf[r * row_bytes:(r + 1) * row_bytes])
         return total
+
+    def _snoop_rows(self, addr: int, rows: int, row_bytes: int,
+                    stride_bytes: int, end: int,
+                    dirty_only: bool) -> list[int]:
+        """Ascending rows of the 2D transfer that touch a valid, non-busy
+        cache line (those must route through the snoop path; the rest may
+        move in bulk). Reads pass ``dirty_only=True``: a clean line mirrors
+        memory, so only dirty lines can serve different bytes. One dict
+        probe per aligned block of the bounding span, then pure arithmetic
+        to map blocks back to row ranges."""
+        get = self._tag_to_line.get
+        lines = self.lines
+        vlen = self.vlen_bytes
+        out: list[int] = []
+        last = -1              # tags ascend, so row ranges ascend: merge by
+        for tag in range(addr - addr % vlen, end, vlen):   # tracking the max
+            idx = get(tag)
+            if idx is None or lines[idx].busy_computing \
+                    or (dirty_only and not lines[idx].dirty):
+                continue
+            # Rows r with [addr + r*stride, +row_bytes) ∩ [tag, tag+vlen) ≠ ∅
+            r0 = max(last + 1,
+                     -(-(tag - addr - row_bytes + 1) // stride_bytes))
+            r1 = min(rows - 1, (tag + vlen - 1 - addr) // stride_bytes)
+            if r1 >= r0:
+                out.extend(range(r0, r1 + 1))
+                last = r1
+        return out
+
+    def _classify_snoop_rows(self, addr: int, snoop: list[int],
+                             row_bytes: int, stride_bytes: int):
+        """Split snoop rows into a vectorizable set (row inside one valid,
+        non-busy line) and a slow remainder (line-crossing / partly
+        uncached rows, served row-by-row)."""
+        get = self._tag_to_line.get
+        lines = self.lines
+        vlen = self.vlen_bytes
+        fancy_rows, fancy_idx, fancy_off, slow = [], [], [], []
+        for r in snoop:
+            a = addr + r * stride_bytes
+            off = a % vlen
+            if off + row_bytes <= vlen:
+                idx = get(a - off)
+                if idx is not None and not lines[idx].busy_computing:
+                    fancy_rows.append(r)
+                    fancy_idx.append(idx)
+                    fancy_off.append(off)
+                    continue
+            slow.append(r)
+        return fancy_rows, fancy_idx, fancy_off, slow
+
+    def _snoop_read_rows(self, addr: int, snoop: list[int], row_bytes: int,
+                         stride_bytes: int, buf2d: np.ndarray) -> None:
+        """Overwrite ``buf2d``'s snoop rows with the cached bytes — one
+        fancy-indexed gather for the single-line rows."""
+        fancy_rows, fancy_idx, fancy_off, slow = self._classify_snoop_rows(
+            addr, snoop, row_bytes, stride_bytes)
+        if fancy_rows:
+            cols = (np.asarray(fancy_off)[:, None]
+                    + np.arange(row_bytes)[None, :])
+            buf2d[np.asarray(fancy_rows)] = \
+                self.data[np.asarray(fancy_idx)[:, None], cols]
+        for r in slow:
+            buf2d[r] = self._snooped_read(addr + r * stride_bytes, row_bytes)
+
+    def _snoop_write_rows(self, addr: int, snoop: list[int], row_bytes: int,
+                          stride_bytes: int, buf2d: np.ndarray) -> None:
+        """Write ``buf2d``'s snoop rows into the covering cache lines — one
+        fancy-indexed scatter for the single-line rows (non-overlapping:
+        stride >= row_bytes on this path)."""
+        fancy_rows, fancy_idx, fancy_off, slow = self._classify_snoop_rows(
+            addr, snoop, row_bytes, stride_bytes)
+        if fancy_rows:
+            cols = (np.asarray(fancy_off)[:, None]
+                    + np.arange(row_bytes)[None, :])
+            self.data[np.asarray(fancy_idx)[:, None], cols] = \
+                buf2d[np.asarray(fancy_rows)]
+            for idx in set(fancy_idx):
+                self._set_dirty(idx, True)
+        for r in slow:
+            self._snooped_write(addr + r * stride_bytes, buf2d[r])
 
     def _snooped_read(self, addr: int, n: int) -> np.ndarray:
         out = np.empty(n, dtype=np.uint8)
@@ -315,7 +471,7 @@ class ArcaneCache:
             take = min(self.vlen_bytes - off, n - pos)
             if idx is not None and not self.lines[idx].busy_computing:
                 self.data[idx, off : off + take] = buf[pos : pos + take]
-                self.lines[idx].dirty = True
+                self._set_dirty(idx, True)
             else:
                 self.memory.write(a, buf[pos : pos + take])
             pos += take
@@ -348,4 +504,5 @@ class ArcaneCache:
             if ln.busy_computing:
                 raise LineBusy("cannot flush while kernels are in flight")
             self._writeback(i)
+            self._invalidate_tag(i)
             ln.valid, ln.tag = False, -1

@@ -44,11 +44,13 @@ class ElemWidth(enum.IntEnum):
 
     @property
     def nbytes(self) -> int:
-        return {ElemWidth.W: 4, ElemWidth.H: 2, ElemWidth.B: 1}[self]
+        # Tuple lookup by enum value — this sits in per-row hot loops, where
+        # building a dict (and hashing enum members) per call showed up.
+        return (4, 2, 1)[int(self)]
 
     @property
     def suffix(self) -> str:
-        return {ElemWidth.W: "w", ElemWidth.H: "h", ElemWidth.B: "b"}[self]
+        return ("w", "h", "b")[int(self)]
 
     @classmethod
     def from_suffix(cls, s: str) -> "ElemWidth":

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+from repro.core.alias_index import AliasIndex
 from repro.core.matrix import MatrixBinding
 
 
@@ -64,6 +65,10 @@ class DependencyTracker:
         self._bindings: dict[int, MatrixBinding] = {}
         self._refs: dict[int, int] = {}        # phys_id -> pending kernels using it
         self._pinned: set[int] = set()         # runtime-held (cache-resident) ids
+        # Footprints written by *pending* kernels, keyed by phys_id: the
+        # admission alias sweep queries this instead of scanning every live
+        # writer record (O(hits) admission instead of O(live) per kernel).
+        self._alias_index = AliasIndex()
         self._next_kernel_id = 0
         self._completed_count = 0
 
@@ -94,13 +99,18 @@ class DependencyTracker:
             if r in self._pending:
                 deps.add(r)
         # Memory aliasing between distinct physical bindings (exact 2D
-        # footprint intersection). The sweep is bounded: completed writers
-        # whose bindings no pending kernel references are pruned.
-        for other_pid, writer in self._writer_of.items():
-            if writer not in self._pending or other_pid == destination.phys_id:
+        # footprint intersection): query the pending-writer footprint index
+        # with the destination and every source instead of sweeping all live
+        # writer records — the index holds exactly the regions a pending
+        # kernel will write.
+        aliased: set[int] = set(self._alias_index.query(destination.region))
+        for s in sources:
+            aliased.update(self._alias_index.query(s.region))
+        for other_pid in aliased:
+            if other_pid == destination.phys_id:
                 continue
-            other = self._bindings[other_pid]
-            if other.overlaps(destination) or any(s.overlaps(other) for s in sources):
+            writer = self._writer_of.get(other_pid)
+            if writer is not None and writer in self._pending:
                 deps.add(writer)
 
         rec = KernelDeps(
@@ -111,6 +121,7 @@ class DependencyTracker:
         )
         self._pending[kid] = rec
         self._writer_of[destination.phys_id] = kid
+        self._alias_index.insert(destination.phys_id, destination.region)
         for s in sources:
             self._readers_of.setdefault(s.phys_id, set()).add(kid)
         for pid in {*rec.sources, rec.destination}:
@@ -132,12 +143,24 @@ class DependencyTracker:
         # are admitted once and only leave via complete().
         return all(d not in self._pending for d in rec.depends_on)
 
+    def unmet_deps(self, kernel_id: int) -> tuple[int, ...]:
+        """Still-pending dependencies of ``kernel_id`` — the kernels whose
+        completion a wakeup-driven scheduler must wait on before re-examining
+        this one (empty ⇔ :meth:`ready`)."""
+        rec = self._pending[kernel_id]
+        return tuple(d for d in rec.depends_on if d in self._pending)
+
     def runnable(self) -> list[int]:
         return [k for k in self._pending if self.ready(k)]
 
     def complete(self, kernel_id: int) -> None:
         rec = self._pending.pop(kernel_id)
         self._completed_count += 1
+        # The written footprint leaves the pending-writer index unless a
+        # later pending kernel re-wrote the same physical binding (WAW
+        # without renaming keeps the newer writer's entry live).
+        if self._writer_of.get(rec.destination) == kernel_id:
+            self._alias_index.discard(rec.destination)
         for pid in {*rec.sources, rec.destination}:
             readers = self._readers_of.get(pid)
             if readers is not None:

@@ -29,6 +29,7 @@ is ever enumerated byte by byte.
 from __future__ import annotations
 
 import dataclasses
+
 import math
 
 
@@ -45,6 +46,10 @@ class StridedRegion:
     rows: int
     row_bytes: int
     stride_bytes: int
+    #: One past the last byte touched — precomputed because every index
+    #: insert and overlap test reads it (derived, hence excluded from
+    #: repr/eq).
+    end: int = dataclasses.field(init=False, repr=False, compare=False)
 
     def __post_init__(self):
         if self.rows <= 0:
@@ -55,17 +60,20 @@ class StridedRegion:
             raise ValueError(
                 f"stride_bytes must be positive for multi-row regions, "
                 f"got {self.stride_bytes}")
+        object.__setattr__(
+            self, "end",
+            self.addr + (self.rows - 1) * max(self.stride_bytes, 0)
+            + self.row_bytes)
+        # Plain-int identity tuple for the memoized pairwise decisions below
+        # (tuple-of-ints hashing is C-speed; the generated dataclass
+        # __hash__/__eq__ dominated the hot confirmation loops).
+        object.__setattr__(self, "_key", (self.addr, self.rows,
+                                          self.row_bytes, self.stride_bytes))
 
     # ------------------------------------------------------------- geometry
     @property
     def start(self) -> int:
         return self.addr
-
-    @property
-    def end(self) -> int:
-        """One past the last byte touched."""
-        return self.addr + (self.rows - 1) * max(self.stride_bytes, 0) \
-            + self.row_bytes
 
     @property
     def nbytes(self) -> int:
@@ -166,6 +174,60 @@ class StridedRegion:
             if i >= self.rows or off + other.row_bytes > self.row_bytes:
                 return False
         return True
+
+#: Bound on each level of a pairwise memo; when a level fills it is cleared
+#: wholesale — the steady-state working set of a sweep is far smaller.
+_PAIR_CACHE_LIMIT = 1 << 14
+
+#: Top-level memo dicts, registered so ``clear_pair_memos`` can reach them.
+_PAIR_MEMO_TABLES: list = []
+
+
+def _pair_memo(decide, doc: str):
+    """Build a memoized pairwise region decision.
+
+    Two-level dicts keyed by the regions' plain int tuples (two
+    allocation-free probes instead of hashing a composite key). Sound
+    because regions are frozen and ``decide`` is pure. Steady-state
+    strip-mined programs ask the same pairwise questions every iteration —
+    hazard admission, WAR gating, reuse invalidation all revisit the same
+    handful of strip footprints — so the hot-path callers (the alias
+    index's exact confirmations) go through these bounded memos."""
+    memo: dict = {}
+    _PAIR_MEMO_TABLES.append(memo)
+
+    def cached(a: StridedRegion, b: StridedRegion) -> bool:
+        d = memo.get(a._key)
+        if d is None:
+            if len(memo) >= _PAIR_CACHE_LIMIT:
+                memo.clear()
+            d = memo[a._key] = {}
+        v = d.get(b._key)
+        if v is None:
+            if len(d) >= _PAIR_CACHE_LIMIT:
+                d.clear()
+            v = d[b._key] = decide(a, b)
+        return v
+
+    cached.__doc__ = doc
+    return cached
+
+
+overlaps_cached = _pair_memo(
+    StridedRegion.overlaps,
+    "Memoized :meth:`StridedRegion.overlaps` (see ``_pair_memo``).")
+contains_cached = _pair_memo(
+    StridedRegion.contains,
+    "Memoized :meth:`StridedRegion.contains` (see ``_pair_memo``).")
+
+
+def clear_pair_memos() -> None:
+    """Drop all memoized pairwise answers (results are unaffected — the
+    memos are pure). Benchmarks call this between timed runs so no run
+    inherits another's warm cache."""
+    for t in _PAIR_MEMO_TABLES:
+        t.clear()
+
 
 def _ceil_div(a: int, b: int) -> int:
     return -((-a) // b)

@@ -21,11 +21,13 @@ feeds the Fig. 3 reproduction benchmark directly.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from typing import Optional
 
 from repro.core.address_table import AddressTable, RegionKind
+from repro.core.alias_index import AliasIndex
 from repro.core.cache import ArcaneCache, MainMemory
 from repro.core.dataflow import resolve as resolve_dataflow
 from repro.core.encoding import ElemWidth, Offload, NUM_MATRIX_REGS
@@ -134,6 +136,14 @@ class CacheRuntime:
         self.queue_capacity = queue_capacity
         self.queue: deque[QueuedKernel] = deque()
         self.resident: dict[int, ResidentMatrix] = {}   # phys_id -> residency
+        # Footprints of resident matrices, keyed by phys_id, plus a claim
+        # sequence number per residency: the dirty-alias flush sweeps query
+        # the index for overlap candidates (O(hits), not O(residents)) and
+        # replay them in claim order — the same order the plain dict scan
+        # used, so flush-ordering behaviour is unchanged.
+        self._resident_index = AliasIndex()
+        self._resident_seq: dict[int, int] = {}
+        self._claim_counter = itertools.count()
         self.stats = PhaseStats()
         # When set (by a scheduler wanting per-port timing), every
         # consolidation DMA appends (vpu, cycles) here — the transfer runs on
@@ -197,9 +207,12 @@ class CacheRuntime:
         # count the genuinely fresh slots. The drain first retires the queue,
         # then lands deferred write-backs — each release frees an AT entry —
         # and only a table that stays full after that raises.
-        self._relieve_at_pressure(self.at.slots_needed(
-            [(s.phys_id, RegionKind.SRC) for s in srcs]
-            + [(dst.phys_id, RegionKind.DST)]))
+        at_regions = ([(s.phys_id, RegionKind.SRC) for s in srcs]
+                      + [(dst.phys_id, RegionKind.DST)])
+        if self.at.free_slots() < len(at_regions):
+            # Only compute the exact fresh-slot count (set algebra) when the
+            # free count could actually be short of the worst case.
+            self._relieve_at_pressure(self.at.slots_needed(at_regions))
         deps = self.tracker.admit(srcs, dst)
         for s in srcs:
             self.at.register(s.region, RegionKind.SRC, s.phys_id)
@@ -228,8 +241,7 @@ class CacheRuntime:
         """Fewest-dirty-lines policy (§IV-B2) among VPUs with capacity."""
         best, best_key = -1, None
         for v in range(self.cache.n_vpus):
-            free = sum(1 for i in self.cache.vpu_lines(v)
-                       if not self.cache.lines[i].busy_computing)
+            free = self.cache.free_line_count(v)
             if free < needed_lines:
                 continue
             key = (self.cache.dirty_line_count(v), -free)
@@ -358,6 +370,8 @@ class CacheRuntime:
         res = ResidentMatrix(phys_id=b.phys_id, vpu=vpu.index, line_idxs=idxs,
                              rows=b.rows, cols=b.cols, width=b.width)
         self.resident[b.phys_id] = res
+        self._resident_index.insert(b.phys_id, b.region)
+        self._resident_seq[b.phys_id] = next(self._claim_counter)
         # Residency pins the tracker's binding + write-order stamp: deferred
         # results need both after their writer completes (bounded-state prune).
         self.tracker.pin(b.phys_id)
@@ -424,12 +438,11 @@ class CacheRuntime:
         nbytes = self.cache.dma_out_2d(
             res.vpu, res.line_idxs, b.addr, b.rows, b.row_bytes, b.stride_bytes)
         res.dirty = False
-        for pid in list(self.resident):
+        for pid in self._resident_index.query(b.region):
             r = self.resident.get(pid)
             if r is None or r.dirty or pid == b.phys_id:
                 continue
-            if self._binding_of(pid).overlaps(b):
-                self._evict_resident(pid)
+            self._evict_resident(pid)
         cycles = self.geometry.dma_cycles(nbytes, b.rows)
         if self._wb_segments is not None:
             self._wb_segments.append((res.vpu, cycles))
@@ -453,16 +466,15 @@ class CacheRuntime:
         """Dirty residents (≠ ``b``) overlapping ``b``, as sorted
         ``(writer_id, phys_id, binding)`` — admission (writer) order."""
         out = []
-        for phys_id, res in self.resident.items():
+        for phys_id in self._resident_index.query(b.region):
+            res = self.resident[phys_id]
             if phys_id == b.phys_id or not res.dirty:
                 continue
             w = self.tracker.writer_of(phys_id)
             w = w if w is not None else -1
             if newer_than is not None and w <= newer_than:
                 continue
-            other = self._binding_of(phys_id)
-            if other.overlaps(b):
-                out.append((w, phys_id, other))
+            out.append((w, phys_id, self._binding_of(phys_id)))
         return sorted(out)
 
     def _land_aliased(self, items) -> int:
@@ -507,23 +519,29 @@ class CacheRuntime:
         if my_writer is None:
             return 0
         cycles = 0
-        for phys_id in list(self.resident):
+        # Snapshot the overlap candidates up-front (consolidations below
+        # mutate the index) and replay them in residency claim order — the
+        # iteration order of the pre-index dict scan.
+        hits = [pid for pid in self._resident_index.query(b.region)
+                if pid != b.phys_id]
+        hits.sort(key=self._resident_seq.__getitem__)
+        for phys_id in hits:
             res = self.resident.get(phys_id)
-            if res is None or phys_id == b.phys_id or not res.dirty:
+            if res is None or not res.dirty:
                 continue
             w = self.tracker.writer_of(phys_id)
             if w is None or w >= my_writer:
                 continue
-            other = self._binding_of(phys_id)
-            if not other.overlaps(b):
-                continue
-            cycles += self._consolidate_resident(other, res)
+            cycles += self._consolidate_resident(self._binding_of(phys_id),
+                                                 res)
             self.at.release(phys_id, RegionKind.DST)
         return cycles
 
     def _evict_resident(self, phys_id: int) -> None:
         res = self.resident.pop(phys_id, None)
         if res is not None:
+            self._resident_index.discard(phys_id)
+            self._resident_seq.pop(phys_id, None)
             self.cache.release_vregs(res.line_idxs)
             self.tracker.unpin(phys_id)
 
@@ -583,6 +601,13 @@ class CacheRuntime:
         if self.queue:
             raise RuntimeError("kernel queue not drained — dependency deadlock?")
         self._drain_deferred_residents()
+
+    def alias_queries_served(self) -> int:
+        """AliasIndex queries answered across the scheduler stack (profiling:
+        the ``--profile`` benchmark flag and PipelineReport surface this)."""
+        return (self.at._alias_index.queries
+                + self.tracker._alias_index.queries
+                + self._resident_index.queries)
 
     def _binding_of(self, phys_id: int) -> MatrixBinding:
         for b in self.matrix_map.live_bindings():

@@ -23,6 +23,8 @@ import heapq
 import itertools
 from typing import Any, Iterator, Optional
 
+import numpy as np
+
 from repro.core.dataflow import OperandFlow
 
 
@@ -112,6 +114,15 @@ def split_proportional(total: int, weights: list[int]) -> list[int]:
     s = sum(weights)
     if s <= 0:
         raise ValueError(f"weights must sum to a positive value, got {weights}")
+    if len(weights) >= 32 and 0 <= total * s < 2 ** 62:
+        # Vectorized path for long tile trains; int64 is exact here (the
+        # largest intermediate is total * s, guarded above), so the parts are
+        # bit-identical to the scalar loop below.
+        w = np.asarray(weights, dtype=np.int64)
+        if (w < 0).any():
+            raise ValueError(f"negative weight {int(w.min())}")
+        x = (total * np.cumsum(w)) // s
+        return np.diff(x, prepend=0).tolist()
     out, acc, cum = [], 0, 0
     for w in weights:
         if w < 0:
@@ -187,10 +198,21 @@ class TileTrain:
 
     def __post_init__(self):
         # Prefix max over the (band, tile) grid per block: pmax[b][i][t] is
-        # the latest completion among tiles (<=i, <=t) — one O(grid) pass
-        # makes every gate query O(log bands + log tiles).
+        # the latest completion among tiles (<=i, <=t). Large grids build it
+        # vectorized — two np.maximum.accumulate passes per block (exact
+        # int64 arithmetic) — small grids keep the scalar loop, which beats
+        # numpy's per-call overhead below ~64 cells. Either path yields the
+        # same nested lists; gate queries bisect tiny cumulative lists, where
+        # plain indexing beats numpy scalar access.
         self._pmax = []
         for grid in self.end_times:
+            if len(grid) * len(grid[0]) >= 64:
+                self._pmax.append(
+                    np.maximum.accumulate(
+                        np.maximum.accumulate(
+                            np.asarray(grid, dtype=np.int64),
+                            axis=0), axis=1).tolist())
+                continue
             pm: list[list[int]] = []
             for i, row in enumerate(grid):
                 cur = []

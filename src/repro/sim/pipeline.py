@@ -24,13 +24,16 @@ mirrored into a :class:`~repro.sim.trace.Tracer` for Chrome trace export.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
+import itertools
+import time
 from typing import Optional
 
 from repro.core.address_table import RegionKind
+from repro.core.alias_index import AliasIndex
 from repro.core.dataflow import FULL, FlowKind
-from repro.core.regions import StridedRegion
+from repro.core.regions import StridedRegion, contains_cached
 from repro.core.runtime import CacheRuntime, QueuedKernel
 from repro.sim.events import (EventQueue, Resource, TileTrain, row_chunks,
                               split_proportional, tile_entries)
@@ -39,7 +42,12 @@ from repro.sim.trace import Tracer
 
 @dataclasses.dataclass(frozen=True)
 class PipelineReport:
-    """Summary of one pipelined run: makespan vs the serial sum-of-phases."""
+    """Summary of one pipelined run: makespan vs the serial sum-of-phases.
+
+    ``sim_seconds`` / ``events_processed`` / ``alias_queries`` profile the
+    *simulator itself* (wall-clock spent inside the event loops, events
+    popped, AliasIndex queries served) — the axes ``bench_scheduler.py``
+    tracks and the ``--profile`` benchmark flag surfaces."""
 
     makespan: int                   # modeled end-to-end cycles (overlapped)
     serial_cycles: int              # sum of per-phase cycles (no overlap)
@@ -47,6 +55,9 @@ class PipelineReport:
     resource_busy: dict[str, int]   # resource name -> busy cycles
     utilization: dict[str, float]   # resource name -> busy / makespan
     reuse_hits: int = 0             # operand DMA trains skipped by reuse
+    sim_seconds: float = 0.0        # wall-clock inside the scheduler loops
+    events_processed: int = 0       # events popped off the EventQueue
+    alias_queries: int = 0          # AliasIndex queries served (whole stack)
 
     @property
     def concurrency_speedup(self) -> float:
@@ -107,12 +118,22 @@ class PipelinedRuntime(CacheRuntime):
 
     Both ``tiling`` and ``reuse`` require ``dataflow`` gating (the legacy
     concatenated-stream model has no per-operand structure to tile or skip).
+
+    ``wakeup`` selects the dispatch engine. ``True`` (default): wakeup-driven
+    — each blocked kernel registers what it waits on (unmet dependencies, the
+    earlier-queued WAR readers aliasing its destination, VPU capacity) and is
+    re-examined only when a completion/dispatch wakes it. ``False``: the
+    legacy full-pending-list rescan after every event. Both engines examine
+    kernels in the same queue order under the same pass discipline, so the
+    schedule — makespans, traces, memory images — is bit-identical; only the
+    simulator's own wall-clock differs (``bench_scheduler.py`` measures the
+    gap, and the differential tests assert the equality).
     """
 
     def __init__(self, *args, tracer: Optional[Tracer] = None,
                  row_chunk: int = 8, dataflow: bool = True,
                  tiling: Optional[tuple[int, int]] = None,
-                 reuse: bool = False, **kwargs):
+                 reuse: bool = False, wakeup: bool = True, **kwargs):
         super().__init__(*args, **kwargs)
         if row_chunk < 0:
             raise ValueError(f"row_chunk must be >= 0, got {row_chunk}")
@@ -130,6 +151,7 @@ class PipelinedRuntime(CacheRuntime):
             raise ValueError(
                 "tiling/reuse require dataflow gating (dataflow=True); the "
                 "legacy concatenated-stream model has no per-operand trains")
+        self.wakeup = bool(wakeup)
         self.tracer = tracer or Tracer()
         self.sim_time = 0
         self.res_ecpu = Resource("ecpu")
@@ -139,12 +161,32 @@ class PipelinedRuntime(CacheRuntime):
         self.res_dma = [Resource(f"vpu{v}.dma")
                         for v in range(self.cache.n_vpus)]
         self._ready_at: dict[int, int] = {}     # kernel_id -> decode done time
-        self._pending_pipe: list[QueuedKernel] = []
-        # Cross-instruction reuse: per-VPU FIFO of modeled clean copies,
-        # bounded by the register-file capacity (oldest copies reclaimed
-        # first — the model's stand-in for line reclamation).
-        self._reuse_sets: list[collections.deque[ReuseEntry]] = [
-            collections.deque() for _ in range(self.cache.n_vpus)]
+        # Dispatch state: pending kernels by id (ascending == queue order),
+        # per-phys pending-reader counts (the _needed_later question), the
+        # pending-source footprint index (the WAR dispatch guard), and the
+        # wakeup bookkeeping — which kernels to (re)examine, who waits on
+        # which completion/dispatch, who waits on VPU capacity.
+        self._pending_map: dict[int, QueuedKernel] = {}
+        self._pending_src_count: dict[int, int] = {}
+        self._war_index = AliasIndex()
+        self._wake: set[int] = set()
+        self._dep_waiters: dict[int, set[int]] = {}
+        self._war_waiters: dict[int, set[int]] = {}
+        self._cap_blocked: set[int] = set()
+        # Simulator self-profiling (PipelineReport / --profile).
+        self.events_processed = 0
+        self._wall_seconds = 0.0
+        # Cross-instruction reuse: per-VPU FIFO of modeled clean copies
+        # (insertion-ordered dicts keyed by a global sequence number), bounded
+        # by the register-file capacity (oldest copies reclaimed first — the
+        # model's stand-in for line reclamation). The footprint index keyed by
+        # (vpu, seq) answers both the containment lookups and the
+        # invalidation sweeps in O(hits).
+        self._reuse_entries: list[dict[int, ReuseEntry]] = [
+            {} for _ in range(self.cache.n_vpus)]
+        self._reuse_bytes = [0] * self.cache.n_vpus
+        self._reuse_index = AliasIndex()
+        self._reuse_seq = itertools.count()
         self._reuse_cap = self.cache.vregs_per_vpu * self.cache.vlen_bytes
 
     # ----------------------------------------------------------- public api
@@ -161,7 +203,14 @@ class PipelinedRuntime(CacheRuntime):
             utilization={n: (b / self.sim_time if self.sim_time else 0.0)
                          for n, b in busy.items()},
             reuse_hits=self.stats.reuse_hits,
+            sim_seconds=self._wall_seconds,
+            events_processed=self.events_processed,
+            alias_queries=self.alias_queries_served(),
         )
+
+    def alias_queries_served(self) -> int:
+        return (super().alias_queries_served()
+                + self._war_index.queries + self._reuse_index.queries)
 
     # ----------------------------------------------------- operand reuse set
     def _reuse_lookup(self, v: int, region: StridedRegion) -> Optional[int]:
@@ -169,45 +218,67 @@ class PipelinedRuntime(CacheRuntime):
         landed, or None when the operand must stream."""
         if not self.reuse:
             return None
-        for e in self._reuse_sets[v]:
-            if e.region.contains(region):
+        # Index keys sort by (vpu, seq): the first containment hit for VPU v
+        # is the oldest (FIFO-first) entry — the copy the pre-index deque
+        # scan would have returned.
+        for vv, seq in self._reuse_index.query(region):
+            if vv != v:
+                continue
+            e = self._reuse_entries[v][seq]
+            if contains_cached(e.region, region):
                 return e.ready_at
         return None
+
+    def _reuse_drop(self, v: int, seq: int) -> None:
+        e = self._reuse_entries[v].pop(seq)
+        self._reuse_index.remove((v, seq))
+        self._reuse_bytes[v] -= e.region.nbytes
 
     def _reuse_note(self, v: int, region: StridedRegion, ready_at: int) -> None:
         """Record a freshly-streamed clean copy on VPU ``v``."""
         if not self.reuse:
             return
-        s = self._reuse_sets[v]
-        for e in list(s):
-            if e.region == region:
-                s.remove(e)
-        s.append(ReuseEntry(region=region, ready_at=ready_at))
-        while sum(e.region.nbytes for e in s) > self._reuse_cap:
-            s.popleft()
+        for vv, seq in self._reuse_index.query(region):
+            if vv == v and self._reuse_entries[v][seq].region == region:
+                self._reuse_drop(v, seq)
+        seq = next(self._reuse_seq)
+        self._reuse_entries[v][seq] = ReuseEntry(region=region,
+                                                 ready_at=ready_at)
+        self._reuse_index.insert((v, seq), region)
+        self._reuse_bytes[v] += region.nbytes
+        while self._reuse_bytes[v] > self._reuse_cap:
+            self._reuse_drop(v, next(iter(self._reuse_entries[v])))
 
     def _note_memory_write(self, region: StridedRegion) -> None:
         """Main memory changed under ``region`` (consolidation landing or a
-        host store): every modeled copy overlapping it is stale."""
-        for s in self._reuse_sets:
-            for e in list(s):
-                if e.region.overlaps(region):
-                    s.remove(e)
+        host store): every modeled copy overlapping it is stale. The index
+        query pins down exactly the overlapped entries — nothing else is
+        evicted, and no FIFO is scanned."""
+        for vv, seq in self._reuse_index.query(region):
+            self._reuse_drop(vv, seq)
 
     # ------------------------------------------------------------ scheduler
     def run_pending(self) -> None:
         """Drain the kernel queue with the event-driven pipelined schedule."""
         if not self.queue:
             return
+        wall0 = time.perf_counter()
         pending = list(self.queue)
         self.queue.clear()
-        self._pending_pipe = pending
+        for qk in pending:
+            kid = qk.deps.kernel_id
+            self._pending_map[kid] = qk
+            for si, s in enumerate(qk.src_bindings):
+                self._pending_src_count[s.phys_id] = \
+                    self._pending_src_count.get(s.phys_id, 0) + 1
+                self._war_index.insert((kid, si), s.region)
         eq = EventQueue()
         t = self.sim_time
 
         # Decode timeline: the eCPU ISR serialises preambles, but kernel k may
         # dispatch right after its own decode — later decodes overlap with
-        # earlier kernels' allocation/compute.
+        # earlier kernels' allocation/compute. Each decode-completion event
+        # wakes exactly its own kernel.
         for qk in pending:
             kid = qk.deps.kernel_id
             iv = self.res_ecpu.acquire(t, self.geometry.decode_cycles,
@@ -215,24 +286,29 @@ class PipelinedRuntime(CacheRuntime):
             self._ready_at[kid] = iv.end
             self.tracer.emit(f"{qk.spec.name} k{kid} decode", "preamble",
                              "ecpu", iv.start, iv.duration, kernel=kid)
-            eq.push(iv.end, "dispatch")
+            eq.push(iv.end, "dispatch", kid)
 
+        self._wake = set(self._pending_map)
         inflight: dict[int, tuple] = {}
         while True:
-            self._dispatch_ready(t, pending, inflight, eq)
+            self._dispatch_sweep(t, inflight, eq)
             if not eq:
                 break
             ev = eq.pop()
             t = ev.time
-            if ev.kind == "compute_done":
+            self.events_processed += 1
+            if ev.kind == "dispatch":
+                # Decode finished: this kernel becomes examinable.
+                self._wake.add(ev.payload)
+            elif ev.kind == "compute_done":
                 self._handle_compute_done(ev.payload, t, inflight, eq)
             elif ev.kind == "wb_done":
                 # A port that just finished a write-back immediately takes
                 # the next least-booked-port drain instead of leaving it for
-                # the final barrier flush.
+                # the final barrier flush. Drains evict residents, so
+                # capacity-blocked kernels get another look.
                 self._drain_idle_dma(t, inflight, eq)
-            # "dispatch" events only advance time; the dispatch sweep at the
-            # top of the loop does the work.
+                self._wake_capacity_blocked()
 
         end = max([t, self.sim_time]
                   + [r.free_at for r in self._all_resources()])
@@ -242,48 +318,122 @@ class PipelinedRuntime(CacheRuntime):
         # serially to the makespan — nothing overlaps a starved schedule.
         still = []
         fallback_before = self.stats.total_cycles
-        for qk in pending:
+        for qk in list(self._pending_map.values()):
             if self.tracker.ready(qk.deps.kernel_id):
                 self._run_one(qk)
             else:
                 still.append(qk)
         end += self.stats.total_cycles - fallback_before
         self.sim_time = end
-        self._pending_pipe = []
+        self._pending_map.clear()
+        self._pending_src_count.clear()
+        self._war_index.clear()
+        self._wake.clear()
+        self._dep_waiters.clear()
+        self._war_waiters.clear()
+        self._cap_blocked.clear()
         self.queue.extend(still)
+        self._wall_seconds += time.perf_counter() - wall0
 
-    def _dispatch_ready(self, t: int, pending: list[QueuedKernel],
-                        inflight: dict, eq: EventQueue) -> None:
-        progress = True
-        while progress:
+    def _dispatch_sweep(self, t: int, inflight: dict, eq: EventQueue) -> None:
+        """Dispatch every kernel that can go at time ``t``.
+
+        Kernels are examined in queue (ascending-id) order under the same
+        pass discipline as the legacy full rescan: a pass walks ids upward
+        (a heap, so mid-pass wakes ahead of the cursor join the same pass in
+        order), kernels woken *behind* the cursor defer to the next pass,
+        and passes repeat until one dispatches nothing. With ``wakeup`` the
+        examined set is only the woken kernels — blocked kernels re-enter
+        via their registered waker — which is schedule-equivalent because a
+        kernel none of whose wake conditions fired would fail its checks
+        with exactly the same answers as last time. With ``wakeup=False``
+        every pass (re)examines the whole pending set, reproducing the
+        legacy rescan-to-fixpoint engine."""
+        while True:
+            if not self.wakeup:
+                self._wake.update(self._pending_map)
+            if not self._wake:
+                return
             progress = False
-            i = 0
-            while i < len(pending):
-                qk = pending[i]
-                kid = qk.deps.kernel_id
-                if (self._ready_at[kid] <= t and self.tracker.ready(kid)
-                        and not self._war_blocked(qk, pending[:i])):
-                    v = self._choose_vpu_pipelined(qk, t)
-                    if v is not None:
-                        pending.pop(i)
-                        self._dispatch(qk, v, t, inflight, eq)
-                        progress = True
-                        continue
-                i += 1
+            cursor = -1
+            deferred: set[int] = set()
+            heap = sorted(self._wake)
+            self._wake.clear()
+            while heap:
+                cand = heapq.heappop(heap)
+                if cand <= cursor:
+                    continue                   # duplicate wake this pass
+                cursor = cand
+                qk = self._pending_map.get(cand)
+                if qk is None:
+                    continue                   # already dispatched
+                if self._try_dispatch(cand, qk, t, inflight, eq):
+                    progress = True
+                    if self._wake:             # wakes from this dispatch
+                        for k in self._wake:
+                            if k > cursor:
+                                heapq.heappush(heap, k)
+                            else:
+                                deferred.add(k)
+                        self._wake.clear()
+            self._wake |= deferred
+            if not progress:
+                return
 
-    @staticmethod
-    def _war_blocked(qk: QueuedKernel, earlier: list[QueuedKernel]) -> bool:
+    def _try_dispatch(self, kid: int, qk: QueuedKernel, t: int,
+                      inflight: dict, eq: EventQueue) -> bool:
+        """Examine one pending kernel; dispatch it or register its waker."""
+        if self._ready_at[kid] > t:
+            return False         # its own decode event wakes it
+        unmet = self.tracker.unmet_deps(kid)
+        if unmet:
+            if self.wakeup:
+                for d in unmet:
+                    self._dep_waiters.setdefault(d, set()).add(kid)
+            return False
+        blockers = self._war_blockers(qk, kid)
+        if blockers:
+            if self.wakeup:
+                for b in blockers:
+                    self._war_waiters.setdefault(b, set()).add(kid)
+            return False
+        v = self._choose_vpu_pipelined(qk, t)
+        if v is None:
+            if self.wakeup:
+                self._cap_blocked.add(kid)
+            return False
+        del self._pending_map[kid]
+        for si, s in enumerate(qk.src_bindings):
+            self._pending_src_count[s.phys_id] -= 1
+            self._war_index.remove((kid, si))
+        self._dispatch(qk, v, t, inflight, eq)
+        # This dispatch unblocks: later kernels WAR-gated on this reader, and
+        # (because allocation can consolidate/evict residents on any VPU)
+        # possibly every capacity-blocked kernel.
+        waiters = self._war_waiters.pop(kid, None)
+        if waiters:
+            self._wake |= waiters
+        self._wake_capacity_blocked()
+        return True
+
+    def _war_blockers(self, qk: QueuedKernel, kid: int) -> set[int]:
         """In-order WAR-aliasing guard: ``qk`` must not overwrite a memory
         region an earlier-queued, still-pending kernel reads (that kernel
         copies its sources in at dispatch; program order then guarantees it
-        observes the pre-``qk`` data, exactly like the serial loop)."""
-        d = qk.dst_binding
-        return any(s.overlaps(d) for e in earlier for s in e.src_bindings)
+        observes the pre-``qk`` data, exactly like the serial loop). Returns
+        the blocking kernel ids (empty = free to go); the pending-source
+        footprint index makes this O(hits), not O(pending × operands)."""
+        return {k for k, _si in
+                self._war_index.query(qk.dst_binding.region) if k < kid}
+
+    def _wake_capacity_blocked(self) -> None:
+        if self._cap_blocked:
+            self._wake |= self._cap_blocked
+            self._cap_blocked.clear()
 
     # -------------------------------------------------------- VPU selection
     def _free_lines(self, v: int) -> int:
-        return sum(1 for i in self.cache.vpu_lines(v)
-                   if not self.cache.lines[i].busy_computing)
+        return self.cache.free_line_count(v)
 
     def _capacity_ok(self, qk: QueuedKernel, v: int) -> bool:
         need = 0
@@ -578,6 +728,12 @@ class PipelinedRuntime(CacheRuntime):
                                   f"{qk.spec.name} k{kid} writeback", eq,
                                   kernel=kid)
         self._drain_idle_dma(t, inflight, eq)
+        # This completion satisfies dependency edges out of ``kid``, and the
+        # retire/drain may have evicted residents (capacity changed).
+        waiters = self._dep_waiters.pop(kid, None)
+        if waiters:
+            self._wake |= waiters
+        self._wake_capacity_blocked()
 
     def _drain_idle_dma(self, t: int, inflight: dict, eq: EventQueue) -> None:
         """Opportunistically write back deferred results whose consumers are
@@ -623,15 +779,16 @@ class PipelinedRuntime(CacheRuntime):
 
     # -------------------------------------------------------------- pending
     def _needed_later(self, phys_id: int) -> bool:
-        if super()._needed_later(phys_id):
+        if self._pending_src_count.get(phys_id, 0) > 0:
             return True
-        return any(phys_id in qk.deps.sources for qk in self._pending_pipe)
+        return super()._needed_later(phys_id)
 
     # -------------------------------------------------------------- barrier
     def _drain_deferred_residents(self, need_slots: Optional[int] = None) -> None:
         """Timed flush of deferred results (all for barrier, just enough AT
         slots for capacity-pressure relief): each consolidation books on the
         owning VPU's DMA port, so the flushes overlap across ports."""
+        wall0 = time.perf_counter()
         t = self.sim_time
         for phys_id in list(self.resident):
             if need_slots is not None and self.at.free_slots() >= need_slots:
@@ -658,6 +815,7 @@ class PipelinedRuntime(CacheRuntime):
                 self.at.release(phys_id, RegionKind.DST)
         self.sim_time = max([self.sim_time]
                             + [r.free_at for r in self._all_resources()])
+        self._wall_seconds += time.perf_counter() - wall0
 
     def barrier(self) -> None:
         """Drain the queue, then flush deferred results with timed DMA."""

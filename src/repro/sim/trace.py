@@ -43,16 +43,24 @@ class TraceRecord:
 
 
 class Tracer:
-    """Accumulates trace records; exports Chrome trace_event JSON."""
+    """Accumulates trace records; exports Chrome trace_event JSON.
 
-    def __init__(self, process_name: str = "repro.sim"):
+    ``enabled=False`` turns the tracer into a sink: ``emit`` returns
+    immediately and no records accumulate. Long benchmark sweeps use this —
+    record capture is pure overhead (time and memory) when nobody exports
+    the trace — while every default construction keeps full capture."""
+
+    def __init__(self, process_name: str = "repro.sim", enabled: bool = True):
         self.process_name = process_name
+        self.enabled = enabled
         self.records: list[TraceRecord] = []
         self._resources: list[str] = []   # insertion order -> tid
 
     def emit(self, name: str, phase: str, resource: str, start: int,
              duration: int, lane: Optional[str] = None, instant: bool = False,
-             **args: Any) -> TraceRecord:
+             **args: Any) -> Optional[TraceRecord]:
+        if not self.enabled:
+            return None
         if phase not in PHASES:
             raise ValueError(f"unknown phase {phase!r}, expected one of {PHASES}")
         if instant and duration:

@@ -1,0 +1,172 @@
+"""AliasIndex oracle tests: the bucketed index must agree with brute force.
+
+The index is a pure accelerator over exact ``StridedRegion.overlaps`` — any
+divergence from an exhaustive pairwise scan is a correctness bug, not a
+performance artifact. The oracle here is ``AliasIndex.brute_query`` (an
+uncached full scan); the tests drive random and adversarial
+insert/remove/query sequences and demand identical answers, including under
+the ``brute_force_queries`` switch the benchmark baseline uses.
+"""
+import numpy as np
+import pytest
+
+from repro.core.alias_index import AliasIndex, brute_force_queries
+from repro.core.regions import StridedRegion, contains_cached, overlaps_cached
+
+
+def _rand_region(rng) -> StridedRegion:
+    addr = int(rng.integers(0, 1 << 20))
+    rows = int(rng.integers(1, 12))
+    row_bytes = int(rng.integers(1, 300))
+    stride = row_bytes + int(rng.integers(0, 200)) if rows > 1 else 0
+    if rows == 1:
+        stride = row_bytes
+    return StridedRegion(addr=addr, rows=rows, row_bytes=row_bytes,
+                         stride_bytes=stride)
+
+
+def test_query_matches_brute_force_exhaustive():
+    """Dense battery of adversarial shapes: interleaved strips, contained
+    runs, giant coarse spans, adjacent-but-disjoint intervals."""
+    idx = AliasIndex(bucket_bits=6, coarse_limit=4)   # tiny buckets: exercise
+    shapes = [                                        # multi-bucket + coarse
+        StridedRegion(0, 1, 64, 64),
+        StridedRegion(0, 8, 16, 64),                  # strip 0
+        StridedRegion(16, 8, 16, 64),                 # interleaved strip 1
+        StridedRegion(32, 8, 16, 64),                 # interleaved strip 2
+        StridedRegion(64, 1, 1, 1),
+        StridedRegion(0, 4, 512, 513),                # coarse (spans >4*64B)
+        StridedRegion(10_000, 3, 33, 100),
+        StridedRegion(9_000, 2, 2_000, 2_100),        # coarse, overlaps above
+        StridedRegion(1 << 18, 1, 1 << 14, 1 << 14),  # far away, wide
+    ]
+    for k, r in enumerate(shapes):
+        idx.insert(k, r)
+    probes = shapes + [
+        StridedRegion(48, 8, 16, 64),                 # 4th interleaved strip
+        StridedRegion(63, 1, 1, 1),
+        StridedRegion(65, 1, 1, 1),
+        StridedRegion(0, 1, 1 << 19, 1 << 19),        # coarse-span probe
+        StridedRegion(5_000_000, 2, 64, 128),         # hits nothing
+    ]
+    for probe in probes:
+        assert idx.query(probe) == idx.brute_query(probe)
+        with brute_force_queries():
+            assert idx.query(probe) == idx.brute_query(probe)
+    # Interval queries reduce to single-row regions.
+    for start, end in [(0, 1), (15, 17), (63, 64), (0, 1 << 20), (5, 5)]:
+        want = (idx.brute_query(StridedRegion(start, 1, end - start,
+                                              end - start))
+                if end > start else [])
+        assert idx.query_interval(start, end) == want
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_insert_remove_query_sequences(seed):
+    """Seeded random operation tapes: the index and a shadow dict must agree
+    through arbitrary insert/replace/remove churn."""
+    rng = np.random.default_rng(seed)
+    idx = AliasIndex(bucket_bits=int(rng.integers(4, 14)),
+                     coarse_limit=int(rng.integers(1, 64)))
+    shadow: dict[int, StridedRegion] = {}
+    for _ in range(120):
+        op = rng.random()
+        if op < 0.45 or not shadow:
+            k = int(rng.integers(0, 40))
+            r = _rand_region(rng)
+            idx.insert(k, r)           # replaces silently, like the callers
+            shadow[k] = r
+        elif op < 0.65:
+            k = list(shadow)[int(rng.integers(0, len(shadow)))]
+            idx.remove(k)
+            del shadow[k]
+        else:
+            probe = _rand_region(rng)
+            got = idx.query(probe)
+            want = sorted(k for k, r in shadow.items()
+                          if r.overlaps(probe))
+            assert got == want, f"seed {seed}: {probe}"
+    assert len(idx) == len(shadow)
+    for k, r in shadow.items():
+        assert k in idx and idx.region(k) == r
+
+
+def test_remove_is_strict_discard_is_not():
+    idx = AliasIndex()
+    idx.insert("a", StridedRegion(0, 1, 8, 8))
+    idx.remove("a")
+    with pytest.raises(KeyError):
+        idx.remove("a")
+    idx.discard("a")                   # tolerant
+    assert len(idx) == 0
+
+
+def test_insert_replaces_previous_region():
+    idx = AliasIndex(bucket_bits=4, coarse_limit=2)
+    r1 = StridedRegion(0, 1, 8, 8)
+    r2 = StridedRegion(1 << 12, 1, 8, 8)
+    idx.insert(7, r1)
+    idx.insert(7, r2)                  # same key, elsewhere
+    assert idx.query(r1) == []
+    assert idx.query(r2) == [7]
+    assert len(idx) == 1
+
+
+def test_counters_track_queries():
+    idx = AliasIndex()
+    idx.insert(0, StridedRegion(0, 1, 8, 8))
+    before = idx.queries
+    idx.query(StridedRegion(0, 1, 4, 4))
+    idx.query_interval(100, 90)        # empty interval still counts a query
+    assert idx.queries == before + 2
+
+
+def test_memoized_region_decisions_match_direct():
+    """The pairwise memo helpers must agree with the uncached methods over a
+    random sample (they feed every hot confirmation loop)."""
+    rng = np.random.default_rng(123)
+    regions = [_rand_region(rng) for _ in range(60)]
+    for a in regions[:20]:
+        for b in regions:
+            assert overlaps_cached(a, b) == a.overlaps(b)
+            assert contains_cached(a, b) == a.contains(b)
+
+
+def test_hypothesis_property_sequences():
+    """Hypothesis tape over insert/remove/query with shrinking."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    region_st = st.builds(
+        lambda addr, rows, rb, pad: StridedRegion(
+            addr=addr, rows=rows, row_bytes=rb,
+            stride_bytes=(rb + pad) if rows > 1 else rb),
+        st.integers(0, 1 << 16), st.integers(1, 8),
+        st.integers(1, 128), st.integers(0, 128))
+    op_st = st.one_of(
+        st.tuples(st.just("ins"), st.integers(0, 15), region_st),
+        st.tuples(st.just("del"), st.integers(0, 15), region_st),
+        st.tuples(st.just("qry"), st.integers(0, 15), region_st))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(op_st, max_size=60),
+           st.integers(4, 13), st.integers(1, 32))
+    def prop(ops, bits, coarse):
+        idx = AliasIndex(bucket_bits=bits, coarse_limit=coarse)
+        shadow: dict[int, StridedRegion] = {}
+        for kind, key, region in ops:
+            if kind == "ins":
+                idx.insert(key, region)
+                shadow[key] = region
+            elif kind == "del":
+                idx.discard(key)
+                shadow.pop(key, None)
+            else:
+                assert idx.query(region) == sorted(
+                    k for k, r in shadow.items() if r.overlaps(region))
+        # Every tracked region starts below 2^21, so a whole-space interval
+        # probe must return exactly the live key set.
+        assert idx.query(StridedRegion(0, 1, 1 << 21, 1 << 21)) \
+            == sorted(shadow)
+
+    prop()

@@ -130,7 +130,43 @@ def gen_program(seed: int) -> dict:
                "queue_capacity": int(rng.choice((2, 4, 16)))},
         "pipe": {"row_chunk": int(rng.choice((0, 1, 3, 8))),
                  "dataflow": dataflow, "tiling": tiling,
-                 "reuse": bool(dataflow and rng.random() < 0.5)},
+                 "reuse": bool(dataflow and rng.random() < 0.5),
+                 # Both dispatch engines (wakeup-driven and legacy rescan)
+                 # must produce the same schedule — fuzz them equally.
+                 "wakeup": bool(rng.random() < 0.5)},
+    }
+
+
+def gen_chain_program(seed: int, n_ops: int = 64) -> dict:
+    """A long RAW dependency chain: op i reads op i-1's strided result.
+
+    ≥64 instructions — the long-program regime that was too slow to fuzz
+    before the indexed wakeup scheduler made the stack fast (PR 5)."""
+    rng = np.random.default_rng(seed)
+    width = (ElemWidth.B, ElemWidth.H, ElemWidth.W)[int(rng.integers(3))]
+    rows, cols = int(rng.integers(6, 10)), int(rng.integers(6, 10))
+    pool: list = [(rows, cols, "placed")]
+    ops = []
+    prev = 0
+    for _ in range(n_ops):
+        pool.append((rows + 1, cols + 2, "dst"))     # oversized: strided dst
+        dst = len(pool) - 1
+        ops.append({"kind": "leakyrelu",
+                    "srcs": [(prev, 0, 0, rows, cols)],
+                    "dst": (dst, 0, 0, rows, cols),
+                    "alpha": float(rng.integers(-8, 9)) / 4})
+        prev = dst
+    return {
+        "seed": seed, "width": width, "pool": pool, "ops": ops,
+        "rt": {"n_vpus": int(rng.choice((2, 4))),
+               "vregs_per_vpu": 32,
+               "vlen_bytes": int(rng.choice((256, 512))),
+               "queue_capacity": int(rng.choice((16, 64)))},
+        "pipe": {"row_chunk": int(rng.choice((0, 3, 8))),
+                 "dataflow": True,
+                 "tiling": (None, (2, 4))[int(rng.integers(2))],
+                 "reuse": bool(rng.random() < 0.5),
+                 "wakeup": bool(rng.random() < 0.5)},
     }
 
 
@@ -179,8 +215,8 @@ def run_program(prog: dict, scheduler: str):
 
 
 # -------------------------------------------------------------- the oracle
-def check_program(seed: int):
-    prog = gen_program(seed)
+def check_program(seed: int, gen=gen_program):
+    prog = gen(seed)
     cop_s = run_program(prog, "serial")
     cop_p = run_program(prog, "pipelined")
     rt = cop_p.rt
@@ -224,6 +260,14 @@ def test_differential_fuzz_seeded(batch):
         check_program(seed)
 
 
+def test_differential_long_chain():
+    """≥64-instruction RAW chains against the serial oracle — the scenario
+    the pre-index scheduler was too slow to fuzz routinely. Covers both
+    dispatch engines (the generator draws `wakeup` at random)."""
+    for seed in range(4):
+        check_program(seed, gen=lambda s: gen_chain_program(s, 64 + 8 * s))
+
+
 def test_differential_fuzz_hypothesis():
     """Hypothesis-driven wrapper over the same oracle: free shrinking to a
     minimal failing seed when the dev extra is installed."""
@@ -242,13 +286,14 @@ def test_generator_covers_the_space():
     """The drawn programs genuinely mix kernels, widths, knobs, and aliased
     destinations — guards against the generator silently collapsing."""
     kinds, widths, aliased_dst = set(), set(), 0
-    tilings, reuses, dataflows = set(), set(), set()
+    tilings, reuses, dataflows, wakeups = set(), set(), set(), set()
     for seed in range(80):
         prog = gen_program(seed)
         widths.add(prog["width"])
         tilings.add(prog["pipe"]["tiling"])
         reuses.add(prog["pipe"]["reuse"])
         dataflows.add(prog["pipe"]["dataflow"])
+        wakeups.add(prog["pipe"]["wakeup"])
         for op in prog["ops"]:
             kinds.add(op["kind"])
             if prog["pool"][op["dst"][0]][2] == "placed" \
@@ -257,5 +302,5 @@ def test_generator_covers_the_space():
     assert kinds == set(KERNELS)
     assert len(widths) == 3
     assert len(tilings) >= 3 and reuses == {True, False} \
-        and dataflows == {True, False}
+        and dataflows == {True, False} and wakeups == {True, False}
     assert aliased_dst > 5

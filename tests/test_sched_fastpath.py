@@ -1,0 +1,192 @@
+"""Fast-path equivalence: indexed/wakeup scheduler vs its slow references.
+
+PR 5 made the scheduler stack fast three ways — alias queries through the
+bucketed index, wakeup-driven dispatch instead of full-pending rescans, and
+bulk DMA snooping — all of which must be *pure* wall-clock changes. These
+tests pin that down:
+
+* the wakeup engine, the legacy rescan engine, and brute-force alias queries
+  produce byte-identical memory images and identical makespans;
+* reuse-set invalidation through the index evicts exactly the overlapped
+  entries (the ``_note_memory_write`` regression the old full-FIFO scan
+  masked);
+* the bulk/snoop DMA paths agree with pure row-by-row snooping in the
+  presence of dirty, clean, and busy cache lines;
+* ``PipelineReport`` carries the new simulator-profiling fields.
+"""
+import numpy as np
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core.alias_index import brute_force_queries
+from repro.core.cache import ArcaneCache, MainMemory
+from repro.core.regions import StridedRegion
+from repro.sim import PipelinedRuntime
+
+
+def _strip_program(**kw):
+    """Strip-mined leakyrelu over interleaved column strips + a RAW chain."""
+    rt = PipelinedRuntime(n_vpus=4, queue_capacity=32, **kw)
+    cop = ArcaneCoprocessor(runtime=rt)
+    w = ElemWidth.W
+    rng = np.random.default_rng(7)
+    a = cop.place(rng.integers(-5, 5, (32, 64)).astype(np.int32), w)
+    out = cop.malloc(32 * 64 * 4)
+    chain = cop.malloc(16 * 16 * 4)
+    cop._xmr(w, 0, a, 64, 16, 16)
+    cop._xmr(w, 3, chain, 16, 16, 16)
+    cop._leakyrelu(w, 3, 0, alpha=0.5)
+    for i in range(24):
+        c0 = (i % 8) * 8
+        cop._xmr(w, 0, a + c0 * 4, 64, 32, 8)
+        cop._xmr(w, 3, out + c0 * 4, 64, 32, 8)
+        cop._leakyrelu(w, 3, 0, alpha=0.5)
+        cop._xmr(w, 0, chain, 16, 16, 16)
+        cop._xmr(w, 3, chain, 16, 16, 16)
+        cop._leakyrelu(w, 3, 0, alpha=-0.25)
+    cop.barrier()
+    cop.rt.cache.flush_all()
+    return rt.sim_time, bytes(cop.rt.memory.data.tobytes())
+
+
+def test_wakeup_rescan_and_brute_are_schedule_identical():
+    """The three engines must agree on makespan AND the memory image, in
+    every pipeline mode combination."""
+    for mode in ({}, {"dataflow": False}, {"tiling": (4, 8)},
+                 {"tiling": (2, 4), "reuse": True}, {"reuse": True}):
+        fast = _strip_program(**mode)
+        rescan = _strip_program(wakeup=False, **mode)
+        with brute_force_queries():
+            brute = _strip_program(wakeup=False, **mode)
+        assert fast == rescan == brute, f"diverged in mode {mode}"
+
+
+def test_reuse_invalidation_evicts_exactly_overlapped_entries():
+    """Regression for the PR-5 satellite: a memory write must evict exactly
+    the modeled copies it overlaps — across *all* VPUs — and nothing else.
+    (The pre-index code scanned every VPU's whole FIFO; the index must reach
+    the same set.)"""
+    rt = PipelinedRuntime(n_vpus=2, vregs_per_vpu=8, vlen_bytes=1024,
+                          reuse=True)
+    strips = [StridedRegion(addr=i * 32, rows=8, row_bytes=32,
+                            stride_bytes=256) for i in range(4)]
+    far = StridedRegion(addr=1 << 16, rows=4, row_bytes=64, stride_bytes=64)
+    for v in (0, 1):
+        for i, r in enumerate(strips):
+            rt._reuse_note(v, r, ready_at=10 * i)
+        rt._reuse_note(v, far, ready_at=99)
+    # A write landing on strip 1's bytes only (one row segment of strip 1).
+    rt._note_memory_write(StridedRegion(addr=32, rows=1, row_bytes=8,
+                                        stride_bytes=8))
+    for v in (0, 1):
+        assert rt._reuse_lookup(v, strips[1]) is None, "overlapped copy kept"
+        for i in (0, 2, 3):
+            assert rt._reuse_lookup(v, strips[i]) == 10 * i, \
+                f"non-overlapped strip {i} wrongly evicted"
+        assert rt._reuse_lookup(v, far) == 99
+    # Byte accounting must survive the surgical eviction.
+    for v in (0, 1):
+        assert rt._reuse_bytes[v] == sum(
+            e.region.nbytes for e in rt._reuse_entries[v].values())
+
+
+def test_reuse_invalidation_whole_matrix_write_clears_all_strips():
+    rt = PipelinedRuntime(n_vpus=1, vregs_per_vpu=8, reuse=True)
+    strips = [StridedRegion(addr=i * 32, rows=8, row_bytes=32,
+                            stride_bytes=256) for i in range(4)]
+    for i, r in enumerate(strips):
+        rt._reuse_note(0, r, ready_at=i)
+    rt._note_memory_write(StridedRegion(addr=0, rows=1, row_bytes=2048,
+                                        stride_bytes=2048))
+    assert all(rt._reuse_lookup(0, r) is None for r in strips)
+    assert rt._reuse_bytes[0] == 0 and not rt._reuse_entries[0]
+
+
+def test_dma_bulk_paths_match_row_by_row_snooping():
+    """dma_in_2d / dma_out_2d take a bulk numpy path when they can; the
+    result must be indistinguishable from pure per-row snooping with dirty,
+    clean, and busy lines scattered over the footprint."""
+    def build():
+        mem = MainMemory(1 << 16)
+        rng = np.random.default_rng(11)
+        mem.data[:] = rng.integers(0, 255, mem.size, dtype=np.uint8)
+        c = ArcaneCache(mem, n_vpus=2, vregs_per_vpu=4, vlen_bytes=256)
+        # Dirty lines over part of the source region (host writes), one
+        # clean line (host read), and leave the rest uncached.
+        c.host_write(0, rng.integers(0, 255, 300, dtype=np.uint8))  # dirty
+        c.host_read(1024, 10)                                       # clean
+        return c
+
+    def reference_in(c, addr, rows, rb, sb):
+        buf = np.empty(rows * rb, dtype=np.uint8)
+        for r in range(rows):
+            buf[r * rb:(r + 1) * rb] = c._snooped_read(addr + r * sb, rb)
+        return buf
+
+    addr, rows, rb, sb = 16, 8, 96, 192
+    c1, c2 = build(), build()
+    idxs1 = c1.claim_vregs(0, 3)
+    got = c1.dma_in_2d(0, idxs1, addr, rows, rb, sb)
+    want = reference_in(c2, addr, rows, rb, sb)
+    assert got == rows * rb
+    np.testing.assert_array_equal(
+        c1._gather_from_lines(idxs1, rows * rb), want)
+
+    # Write-back: bulk + snoop patch must leave cache+memory observationally
+    # identical to the pure loop (flush both and compare full memory).
+    c1, c2 = build(), build()
+    i1, i2 = c1.claim_vregs(0, 3), c2.claim_vregs(0, 3)
+    payload = np.random.default_rng(5).integers(
+        0, 255, rows * rb, dtype=np.uint8)
+    c1._scatter_to_lines(i1, payload)
+    c2._scatter_to_lines(i2, payload)
+    c1.dma_out_2d(0, i1, addr, rows, rb, sb)
+    for r in range(rows):                      # reference: pure row loop
+        c2._snooped_write(addr + r * sb, payload[r * rb:(r + 1) * rb])
+    c1.release_vregs(i1)
+    c2.release_vregs(i2)
+    c1.flush_all()
+    c2.flush_all()
+    np.testing.assert_array_equal(c1.memory.data, c2.memory.data)
+
+
+def test_report_carries_profiling_fields():
+    rt = PipelinedRuntime(n_vpus=2, queue_capacity=8)
+    cop = ArcaneCoprocessor(runtime=rt)
+    w = ElemWidth.W
+    a = cop.place(np.arange(64, dtype=np.int32).reshape(8, 8), w)
+    out = cop.malloc(8 * 8 * 4)
+    cop._xmr(w, 0, a, 8, 8, 8)
+    cop._xmr(w, 3, out, 8, 8, 8)
+    cop._leakyrelu(w, 3, 0, alpha=0.5)
+    cop.barrier()
+    rep = rt.report()
+    assert rep.events_processed > 0
+    assert rep.sim_seconds > 0.0
+    assert rep.alias_queries > 0
+    assert rep.alias_queries == rt.alias_queries_served()
+
+
+def test_free_and_dirty_line_counters_stay_consistent():
+    """The incremental per-VPU busy/dirty counters must track the flags."""
+    mem = MainMemory(1 << 16)
+    c = ArcaneCache(mem, n_vpus=2, vregs_per_vpu=4, vlen_bytes=256)
+    rng = np.random.default_rng(3)
+
+    def check():
+        for v in range(2):
+            assert c.free_line_count(v) == sum(
+                1 for i in c.vpu_lines(v) if not c.lines[i].busy_computing)
+            assert c.dirty_line_count(v) == sum(
+                1 for i in c.vpu_lines(v) if c.lines[i].dirty)
+
+    check()
+    c.host_write(0, rng.integers(0, 255, 600, dtype=np.uint8))
+    check()
+    idxs = c.claim_vregs(0, 2)
+    check()
+    c.dma_out_2d(0, idxs, 128, 2, 100, 256)
+    check()
+    c.release_vregs(idxs)
+    check()
+    c.flush_all()
+    check()

@@ -295,7 +295,10 @@ def test_reuse_capacity_evicts_oldest():
     rt._reuse_note(0, r2, 20)                    # 1200 B > cap: r1 falls out
     assert rt._reuse_lookup(0, r1) is None
     assert rt._reuse_lookup(0, r2) == 20
-    assert sum(e.region.nbytes for e in rt._reuse_sets[0]) <= cap
+    assert sum(e.region.nbytes
+               for e in rt._reuse_entries[0].values()) <= cap
+    assert rt._reuse_bytes[0] == sum(e.region.nbytes
+                                     for e in rt._reuse_entries[0].values())
 
 
 # ------------------------------------------- FULL lower bound under tiles
@@ -420,9 +423,9 @@ def test_per_tile_trace_lanes_in_chrome_export():
 
 def test_fig4_benchmark_tile_reuse_path():
     from benchmarks.fig4_speedup import arcane_cycles
-    base, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined")
-    tiled, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined",
+    base, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined")
+    tiled, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined",
                              tiling=(4, 16), reuse=True)
     assert base > 0 and tiled > 0
-    serial, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "serial")
+    serial, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "serial")
     assert tiled <= serial
