@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import argparse
 import hashlib
-import json
 import sys
 import time
 
@@ -54,9 +53,11 @@ from repro.sim.trace import Tracer
 
 
 def _runtime(fast: bool, **kw) -> PipelinedRuntime:
-    # Tracing off in both modes: the benchmark measures the scheduler, and
-    # nobody exports these traces (capture would dominate small scenarios).
+    # Tracing and metrics off in both modes: the benchmark measures the
+    # scheduler, and nobody exports these traces or reads these reports
+    # (capture would dominate small scenarios and shift the i/s floor).
     kw.setdefault("tracer", Tracer(enabled=False))
+    kw.setdefault("metrics", False)
     if not fast:
         kw["wakeup"] = False
     return PipelinedRuntime(**kw)
@@ -246,18 +247,21 @@ def main(argv=None):
         if args.floor is not None and fast["instr_per_sec"] < args.floor:
             failed_floor.append((name, fast["instr_per_sec"]))
 
-    doc = {
-        "benchmark": "bench_scheduler",
-        "n": n,
-        "repeat": args.repeat,
-        "rows": rows,
-        "speedup_vs_baseline": speedups or None,
-        "floor": args.floor,
-        "floor_ok": not failed_floor,
-    }
     if args.out_json:
-        with open(args.out_json, "w") as f:
-            json.dump(doc, f, indent=2)
+        # Same trick as fig4_speedup: make `common` importable whether this
+        # runs as a script (CI: `python benchmarks/bench_scheduler.py`) or as
+        # the `benchmarks.bench_scheduler` module.
+        sys.path.insert(0, __file__.rsplit("/", 1)[0])
+        from common import bench_doc, write_bench_json
+        doc = bench_doc(
+            "bench_scheduler",
+            config={"scenarios": list(args.scenarios), "n": n,
+                    "repeat": args.repeat, "baseline": args.baseline,
+                    "floor": args.floor},
+            rows=rows,
+            summary={"speedup_vs_baseline": speedups or None,
+                     "floor_ok": not failed_floor})
+        write_bench_json(args.out_json, doc)
         print(f"bench_sched,wrote,{args.out_json}")
     if failed_floor:
         for name, ips in failed_floor:

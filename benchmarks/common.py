@@ -1,14 +1,84 @@
-"""Shared benchmark helpers: wall-clock timing + CSV emission."""
+"""Shared benchmark helpers: wall-clock timing, CSV emission, and the
+versioned BENCH JSON envelope every driver's ``--out-json`` writes."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Any, Callable, Optional
 
-import jax
+#: Version of the shared BENCH_*.json envelope. Bump when the envelope's
+#: required keys change shape (the metrics report embedded under
+#: ``metrics_report`` carries its own schema_version).
+BENCH_SCHEMA_VERSION = 1
+
+
+class BenchSchemaError(ValueError):
+    """A BENCH JSON document does not satisfy the shared envelope."""
+
+
+def bench_doc(benchmark: str, *, config: dict, rows: list,
+              summary: Optional[dict] = None,
+              metrics_report: Optional[dict] = None,
+              **extra: Any) -> dict:
+    """Build (and validate) one BENCH document in the shared envelope:
+    ``schema_version`` + ``benchmark`` + the run ``config`` + per-point
+    ``rows`` + an optional ``summary`` and embedded metrics report. Extra
+    benchmark-specific keys ride along at the top level."""
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "config": config,
+        "rows": rows,
+        "summary": summary,
+        "metrics_report": metrics_report,
+        **extra,
+    }
+    validate_bench_doc(doc)
+    return doc
+
+
+def validate_bench_doc(doc: Any) -> dict:
+    """Validate the shared envelope; returns ``doc`` or raises
+    :class:`BenchSchemaError` naming the offending key."""
+    if not isinstance(doc, dict):
+        raise BenchSchemaError(f"BENCH doc must be a mapping, got {type(doc)}")
+    ver = doc.get("schema_version")
+    if ver != BENCH_SCHEMA_VERSION:
+        raise BenchSchemaError(
+            f"schema_version must be {BENCH_SCHEMA_VERSION}, got {ver!r}")
+    name = doc.get("benchmark")
+    if not isinstance(name, str) or not name:
+        raise BenchSchemaError(f"benchmark must be a non-empty str, got {name!r}")
+    if not isinstance(doc.get("config"), dict):
+        raise BenchSchemaError("config must be a mapping")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or any(not isinstance(r, dict) for r in rows):
+        raise BenchSchemaError("rows must be a list of mappings")
+    for key in ("summary", "metrics_report"):
+        if key in doc and doc[key] is not None and not isinstance(doc[key], dict):
+            raise BenchSchemaError(f"{key} must be a mapping or null")
+    mrep = doc.get("metrics_report")
+    if mrep is not None and "schema_version" not in mrep:
+        raise BenchSchemaError("metrics_report missing its schema_version")
+    return doc
+
+
+def write_bench_json(path: str, doc: dict) -> str:
+    """Validate ``doc`` and write it to ``path`` (creating parent dirs)."""
+    validate_bench_doc(doc)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time (µs) of a jax callable (block_until_ready)."""
+    import jax    # deferred: scheduler benchmarks import this module jax-free
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []

@@ -11,7 +11,8 @@ compute / writeback cycle shares. Paper anchors:
 from __future__ import annotations
 
 from repro.core.encoding import ElemWidth
-from benchmarks.fig4_speedup import arcane_cycles
+from benchmarks.fig4_speedup import (arcane_cycles, metrics_report_point,
+                                     print_metrics_report)
 
 
 def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
@@ -20,7 +21,7 @@ def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,
     rows = []
     for ln in lanes:
         for n in sizes:
-            total, shares, prof = arcane_cycles(
+            total, shares, prof, _ = arcane_cycles(
                 n, n, 3, ElemWidth.W, ln, scheduler, row_chunk, dataflow,
                 tiling, reuse, profile)
             row = {"size": n, "lanes": ln, "cycles": total, **shares}
@@ -84,25 +85,70 @@ def main(argv=None):
     p.add_argument("--reuse", choices=("on", "off"), default="off",
                    help="cross-instruction operand reuse (skip DMA-in of "
                         "regions already modeled resident and clean)")
+    p.add_argument("--sizes", type=int, nargs="+",
+                   default=(16, 32, 64, 128, 256),
+                   help="square input sizes to sweep")
+    p.add_argument("--lanes", type=int, nargs="+", default=(2, 4, 8),
+                   help="VPU lane counts to sweep")
     p.add_argument("--profile", action="store_true",
                    help="print simulator self-profiling per point (wall "
                         "seconds, events processed, alias queries served)")
+    p.add_argument("--report", action="store_true",
+                   help="after the sweep, re-run the largest point with the "
+                        "metrics layer and print the per-kernel stall "
+                        "attribution + critical-path breakdown (embedded in "
+                        "--out-json as metrics_report)")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write rows + validation as JSON in the shared "
+                        "BENCH envelope (benchmarks.common)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
-    rows = run(quiet=not args.verbose, scheduler=args.scheduler,
+    rows = run(sizes=tuple(args.sizes), lanes=tuple(args.lanes),
+               quiet=not args.verbose, scheduler=args.scheduler,
                row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
                tiling=tuple(args.tile) if args.tile else None,
                reuse=args.reuse == "on", profile=args.profile)
-    for k, v in validate(rows).items():
-        val = f"{v:.3f}" if isinstance(v, float) else v
-        print(f"fig3_validate,{k},{val}")
+    # The paper anchors need the 16/256-size, 4-lane points; skip validation
+    # on restricted sweeps (e.g. the CI small-shape metrics run).
+    res = None
+    if {16, 256} <= set(args.sizes) and 4 in args.lanes:
+        res = validate(rows)
+        for k, v in res.items():
+            val = f"{v:.3f}" if isinstance(v, float) else v
+            print(f"fig3_validate,{k},{val}")
     if args.scheduler == "pipelined":
-        serial_rows = run(quiet=True, scheduler="serial")
+        serial_rows = run(sizes=tuple(args.sizes), lanes=tuple(args.lanes),
+                          quiet=True, scheduler="serial")
         for r, sr in zip(rows, serial_rows):
             assert (r["size"], r["lanes"]) == (sr["size"], sr["lanes"])
             print(f"fig3_pipelined,{r['size']}x{r['size']} {r['lanes']}lane,"
                   f"concurrency={sr['cycles'] / r['cycles']:.2f}x")
+    mrep = None
+    if args.report:
+        # Largest sweep point: fig3 always runs the int32 3x3 layer.
+        size, ln = max(args.sizes), max(args.lanes)
+        total, mrep = metrics_report_point(
+            size, 3, ElemWidth.W, ln, args.scheduler,
+            row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
+            tiling=tuple(args.tile) if args.tile else None,
+            reuse=args.reuse == "on")
+        print(f"fig3_report,point,w 3x3 {size}x{size} {ln}lane "
+              f"{args.scheduler}")
+        print_metrics_report(mrep, total, prefix="fig3_report",
+                             scheduler=args.scheduler)
+    if args.out_json:
+        from benchmarks.common import bench_doc, write_bench_json
+        doc = bench_doc(
+            "fig3_overhead",
+            config={"scheduler": args.scheduler, "row_chunk": args.row_chunk,
+                    "dataflow": args.dataflow,
+                    "tiling": list(args.tile) if args.tile else None,
+                    "reuse": args.reuse, "sizes": list(args.sizes),
+                    "lanes": list(args.lanes)},
+            rows=rows, summary=None, metrics_report=mrep, validate=res)
+        write_bench_json(args.out_json, doc)
+        print(f"fig3,wrote,{args.out_json}")
     return rows
 
 

@@ -87,8 +87,9 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
                   dataflow: bool = True,
                   tiling: tuple[int, int] | None = None,
                   reuse: bool = False,
-                  profile: bool = False
-                  ) -> tuple[int, dict, dict | None]:
+                  profile: bool = False,
+                  metrics_report: bool = False
+                  ) -> tuple[int, dict, dict | None, dict | None]:
     """Run the (strip-mined) xmk4 conv layer through the C-RT simulator;
     return total modeled cycles + phase split.
 
@@ -130,8 +131,9 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
     wall = _time.perf_counter() - wall0
     s = cop.rt.stats
     total = cop.rt.sim_time if scheduler == "pipelined" else s.total_cycles
+    mrep = cop.rt.metrics_report() if metrics_report else None
     if not profile:
-        return total, s.shares(), None
+        return total, s.shares(), None, mrep
     # Simulator self-profiling (the --profile flag): wall-clock seconds the
     # run burned, events the pipelined engine processed, and AliasIndex
     # queries served across the scheduler stack.
@@ -145,7 +147,7 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
         prof["events_processed"] = rep.events_processed
         prof["events_per_sec"] = (rep.events_processed / wall
                                   if wall else 0.0)
-    return total, s.shares(), prof
+    return total, s.shares(), prof, mrep
 
 
 def conv_cost(h: int, w: int, k: int, width: ElemWidth) -> KernelCost:
@@ -168,7 +170,7 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                 scalar = scalar_cpu_cycles(cost, width)
                 simd = packed_simd_cycles(cost, width)
                 for ln in lanes:
-                    arc, shares, prof = arcane_cycles(
+                    arc, shares, prof, _ = arcane_cycles(
                         n, n, k, width, ln, scheduler, row_chunk, dataflow,
                         tiling, reuse, profile)
                     row = {
@@ -181,8 +183,8 @@ def run(sizes=(16, 32, 64, 128, 256), filters=(3, 5, 7), lanes=(2, 4, 8),
                     if scheduler == "pipelined":
                         row["tiling"] = list(tiling) if tiling else None
                         row["reuse"] = reuse
-                        serial_arc, _, _ = arcane_cycles(n, n, k, width, ln,
-                                                         "serial")
+                        serial_arc, _, _, _ = arcane_cycles(n, n, k, width,
+                                                            ln, "serial")
                         row["serial_cycles"] = serial_arc
                         row["concurrency_speedup"] = serial_arc / arc
                     if prof is not None:
@@ -237,9 +239,50 @@ def validate(rows) -> dict:
     return res
 
 
+def metrics_report_point(size: int, k: int, width: ElemWidth, lanes: int,
+                         scheduler: str, row_chunk=None, dataflow=True,
+                         tiling=None, reuse=False) -> tuple[int, dict]:
+    """Re-run one sweep point with the metrics layer and return
+    ``(total_cycles, metrics_report)`` — the ``--report`` payload shared by
+    the fig3/fig4 drivers."""
+    total, _, _, mrep = arcane_cycles(size, size, k, width, lanes, scheduler,
+                                      row_chunk, dataflow, tiling, reuse,
+                                      metrics_report=True)
+    return total, mrep
+
+
+def print_metrics_report(mrep: dict, total: int, prefix: str = "fig4_report",
+                         scheduler: str = "pipelined") -> None:
+    """Emit the stall-attribution + critical-path breakdown as CSV-ish lines
+    (same style as the other fig outputs). For pipelined runs, asserts the
+    critical path's segments tile the makespan exactly."""
+    print(f"{prefix},conservation_ok,{mrep['conservation_ok']}")
+    assert mrep["conservation_ok"], "stall-cycle conservation violated"
+    for name, agg in sorted(mrep["kernels"].items()):
+        stalls = ",".join(f"{b}={c}" for b, c in agg["stalls"].items() if c)
+        print(f"{prefix},stall,{name},count={agg['count']},"
+              f"busy={agg['busy']},latency={agg['latency']}"
+              + ("," + stalls if stalls else ""))
+    cp = mrep.get("critical_path")
+    if cp is None:
+        print(f"{prefix},critical_path,none (serial scheduler has no "
+              f"event timeline)")
+        return
+    print(f"{prefix},critical_path,total={cp['total']},"
+          f"makespan={cp['makespan']},cp_cycles={cp['cp_cycles']},"
+          f"idle={cp['idle_cycles']}")
+    assert cp["covers_makespan"] and cp["total"] == total, \
+        f"critical path total {cp['total']} != makespan {total}"
+    for res, d in list(cp["by_resource"].items())[:6]:
+        print(f"{prefix},cp_resource,{res},{d['cycles']},"
+              f"{100 * d['fraction']:.1f}%")
+    for seg in cp["top_segments"][:3]:
+        print(f"{prefix},cp_segment,{seg['resource']},{seg['phase']},"
+              f"{seg['name']},{seg['cycles']}")
+
+
 def main(argv=None):
     import argparse
-    import json
     p = argparse.ArgumentParser(description="Fig. 4 reproduction benchmark")
     p.add_argument("--scheduler", choices=("serial", "pipelined"),
                    default="serial",
@@ -281,6 +324,11 @@ def main(argv=None):
                    help="record simulator self-profiling per point (wall "
                         "seconds, events processed, alias queries served) — "
                         "printed and added to the --out-json rows")
+    p.add_argument("--report", action="store_true",
+                   help="after the sweep, re-run the largest point with the "
+                        "metrics layer and print the per-kernel stall "
+                        "attribution + critical-path breakdown (embedded in "
+                        "--out-json as metrics_report)")
     p.add_argument("--verbose", action="store_true",
                    help="print per-point rows in addition to the summary")
     args = p.parse_args(argv)
@@ -311,10 +359,16 @@ def main(argv=None):
             "pipelined makespan exceeded the serial schedule"
         res = None
     else:
-        res = validate(rows)
-        for k, v in res.items():
-            val = f"{v:.1f}" if isinstance(v, float) else v
-            print(f"fig4_validate,{k},{val}")
+        # Paper anchors need the full-size corners; skip validation on
+        # restricted sweeps (e.g. a small-shape --report run).
+        res = None
+        if ({16, 256} <= set(args.sizes) and {3, 7} <= set(args.filters)
+                and {2, 4, 8} <= set(args.lanes)
+                and {"b", "w"} <= set(args.widths)):
+            res = validate(rows)
+            for k, v in res.items():
+                val = f"{v:.1f}" if isinstance(v, float) else v
+                print(f"fig4_validate,{k},{val}")
     profile_summary = None
     if args.profile:
         profs = [r["profile"] for r in rows if "profile" in r]
@@ -333,15 +387,36 @@ def main(argv=None):
               f"ips={profile_summary['instr_per_sec']:.0f},"
               f"aq={profile_summary['alias_queries']},"
               f"events={profile_summary['events_processed']}")
+    mrep = None
+    if args.report:
+        # Largest point of the sweep: max size × max filter × max lanes on
+        # the first width — the configuration whose makespan the breakdown
+        # explains.
+        size, k, ln = max(args.sizes), max(args.filters), max(args.lanes)
+        wsuf = args.widths[0]
+        total, mrep = metrics_report_point(
+            size, k, width_of[wsuf], ln, args.scheduler,
+            row_chunk=args.row_chunk, dataflow=args.dataflow == "on",
+            tiling=tuple(args.tile) if args.tile else None,
+            reuse=args.reuse == "on")
+        print(f"fig4_report,point,{wsuf} {k}x{k} {size}x{size} {ln}lane "
+              f"{args.scheduler}")
+        print_metrics_report(mrep, total, scheduler=args.scheduler)
     if args.out_json:
-        doc = {"benchmark": "fig4_speedup", "scheduler": args.scheduler,
-               "row_chunk": args.row_chunk, "dataflow": args.dataflow,
-               "tiling": list(args.tile) if args.tile else None,
-               "reuse": args.reuse,
-               "rows": rows, "summary": summary, "validate": res,
-               "profile_summary": profile_summary}
-        with open(args.out_json, "w") as f:
-            json.dump(doc, f, indent=2)
+        import sys
+        sys.path.insert(0, __file__.rsplit("/", 1)[0])
+        from common import bench_doc, write_bench_json
+        doc = bench_doc(
+            "fig4_speedup",
+            config={"scheduler": args.scheduler, "row_chunk": args.row_chunk,
+                    "dataflow": args.dataflow,
+                    "tiling": list(args.tile) if args.tile else None,
+                    "reuse": args.reuse, "sizes": list(args.sizes),
+                    "filters": list(args.filters), "lanes": list(args.lanes),
+                    "widths": list(args.widths)},
+            rows=rows, summary=summary, metrics_report=mrep,
+            validate=res, profile_summary=profile_summary)
+        write_bench_json(args.out_json, doc)
         print(f"fig4,wrote,{args.out_json}")
     return rows, res
 

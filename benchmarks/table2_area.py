@@ -34,7 +34,7 @@ def peak_gops(lanes: int) -> float:
 def run(quiet: bool = False):
     rows = []
     for lanes in (2, 4, 8):
-        total, shares, _ = arcane_cycles(256, 256, 3, ElemWidth.B, lanes)
+        total, shares, _, _ = arcane_cycles(256, 256, 3, ElemWidth.B, lanes)
         cost = conv_cost(256, 256, 3, ElemWidth.B)
         eff = (cost.ops / (total / CLOCK_HZ)) / 1e9
         ctrl = shares["preamble"]

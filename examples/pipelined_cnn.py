@@ -93,8 +93,40 @@ def main(argv=None):
                      reverse=True)[:4]
     print("busiest resources: " + "  ".join(
         f"{name}={util:.0%}" for util, name in busiest))
+
+    # Where did the cycles go? Per-kernel stall attribution (every latency
+    # cycle binned into one wait cause; busy + stalls == latency) and the
+    # critical path that explains the makespan end to end.
+    mrep = cop_p.rt.metrics_report()
+    if not mrep["enabled"]:
+        print("(metrics disabled by this config — no stall/critical-path "
+              "breakdown)")
+    else:
+        assert mrep["conservation_ok"], "stall-cycle conservation violated"
+        print("\nper-kernel stall breakdown (cycles):")
+        for name, agg in sorted(mrep["kernels"].items()):
+            stalls = "  ".join(f"{b}={c}"
+                               for b, c in agg["stalls"].items() if c)
+            print(f"  {name:<12} x{agg['count']}  busy={agg['busy']}  "
+                  f"latency={agg['latency']}  {stalls}")
+        cp = mrep["critical_path"]
+        assert cp["covers_makespan"] and cp["total"] == rep.makespan
+        print(f"\ncritical path ({cp['cp_cycles']} busy + {cp['idle_cycles']} "
+              f"idle = {cp['total']} cycles, the whole makespan):")
+        for res, d in list(cp["by_resource"].items())[:3]:
+            print(f"  {res:<16} {d['cycles']:>8} cycles  "
+                  f"({d['fraction']:.0%} of makespan)")
+        print("top-3 critical-path segments:")
+        for seg in cp["top_segments"][:3]:
+            print(f"  [{seg['start']:>7}, {seg['end']:>7})  "
+                  f"{seg['resource']:<16} {seg['phase']:<10} {seg['name']}  "
+                  f"({seg['cycles']} cycles)")
+
     path = cop_p.rt.tracer.dump(args.trace)
-    print(f"serial == pipelined results ✓   chrome trace -> {path}")
+    print(f"\nserial == pipelined results ✓   chrome trace -> {path}")
+    print("(the trace now carries counter tracks — AT free slots, per-VPU "
+          "occupancy — and flow arrows from DMA tiles to the compute pieces "
+          "they gate)")
 
 
 if __name__ == "__main__":

@@ -120,7 +120,12 @@ class CacheRuntime:
         library: Optional[KernelLibrary] = None,
         num_matrix_regs: int = NUM_MATRIX_REGS,
         geometry: Optional[VPUGeometry] = None,
+        metrics: bool = True,
     ):
+        # Function-level import: repro.sim.metrics is dependency-free, but a
+        # module-level import would trigger repro.sim.__init__ → pipeline →
+        # this module while it is still initialising.
+        from repro.sim.metrics import SchedulerMetrics
         self.memory = memory or MainMemory(16 << 20)
         self.cache = ArcaneCache(self.memory, n_vpus=n_vpus,
                                  vregs_per_vpu=vregs_per_vpu,
@@ -145,6 +150,9 @@ class CacheRuntime:
         self._resident_seq: dict[int, int] = {}
         self._claim_counter = itertools.count()
         self.stats = PhaseStats()
+        # Unified metrics layer (purely observational — never consulted by
+        # any scheduling decision, so metrics on/off cannot change schedules).
+        self.metrics = SchedulerMetrics(enabled=metrics)
         # When set (by a scheduler wanting per-port timing), every
         # consolidation DMA appends (vpu, cycles) here — the transfer runs on
         # the port of the VPU *holding* the resident, not the dispatch VPU.
@@ -221,6 +229,7 @@ class CacheRuntime:
                                        src_bindings=tuple(srcs), dst_binding=dst))
         self.stats.preamble_cycles += self.geometry.decode_cycles
         self.stats.preamble_s += time.perf_counter() - t0
+        self.metrics.inc("kernels.decoded")
 
     @staticmethod
     def _xmr_stride(ops) -> int:
@@ -283,10 +292,17 @@ class CacheRuntime:
 
         # --------------------------------------------------- writeback phase
         t2 = time.perf_counter()
-        self.stats.writeback_cycles += self._retire_step(qk, alloc.src_res,
-                                                         alloc.dst_res)
+        retire_wb = self._retire_step(qk, alloc.src_res, alloc.dst_res)
+        self.stats.writeback_cycles += retire_wb
         self.stats.writeback_s += time.perf_counter() - t2
         self.stats.kernels_run += 1
+        # Serial stall synthesis: phases run back-to-back, so the window is
+        # exactly the phase totals (conserved by construction).
+        self.metrics.kernel_serial(
+            qk.deps.kernel_id, qk.spec.name, busy=cycles,
+            bins={"cache_lock": self.geometry.schedule_cycles,
+                  "dma_wait": alloc.dma_cycles,
+                  "drain": alloc.wb_cycles + retire_wb})
 
     # ------------------------------------------------- shared scheduler steps
     # The serial scheduler above and repro.sim.pipeline.PipelinedRuntime both
@@ -608,6 +624,16 @@ class CacheRuntime:
         return (self.at._alias_index.queries
                 + self.tracker._alias_index.queries
                 + self._resident_index.queries)
+
+    def metrics_report(self) -> dict:
+        """The unified metrics report (see :mod:`repro.sim.metrics`). The
+        serial scheduler books no event timeline, so the report carries the
+        typed instruments and per-kernel stall synthesis but no critical
+        path."""
+        return self.metrics.report(
+            makespan=self.stats.total_cycles,
+            extra={"kernels_run": self.stats.kernels_run,
+                   "alias_queries": self.alias_queries_served()})
 
     def _binding_of(self, phys_id: int) -> MatrixBinding:
         for b in self.matrix_map.live_bindings():

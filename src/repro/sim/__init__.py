@@ -5,6 +5,8 @@ Layout:
   * :mod:`repro.sim.pipeline` — :class:`PipelinedRuntime` (overlapped phases)
   * :mod:`repro.sim.config`   — YAML configs with ``extends`` composition
   * :mod:`repro.sim.trace`    — Chrome ``trace_event`` export
+  * :mod:`repro.sim.metrics`  — stall attribution, critical path, typed
+    counters/gauges/histograms (the unified metrics layer)
 
 The serial :class:`repro.core.runtime.CacheRuntime` and the pipelined
 scheduler share the same decode/allocate/compute/retire steps, so their
@@ -15,8 +17,14 @@ from repro.sim.config import (ConfigError, SimConfig, builtin_config_path,
 from repro.sim.events import (ChunkTrain, Event, EventQueue, Interval,
                               Resource, TileTrain, interleave_blocks,
                               row_chunks, split_proportional, tile_entries)
+from repro.sim.metrics import (METRICS_SCHEMA_VERSION, STALL_BINS, Activity,
+                               ActivityLog, Counter, CPSegment, Gauge,
+                               Histogram, KernelStall, MetricsError,
+                               MetricsRegistry, SchedulerMetrics, StallTable,
+                               summarize_critical_path)
 from repro.sim.pipeline import PipelinedRuntime, PipelineReport, ReuseEntry
-from repro.sim.trace import PHASES, TraceRecord, Tracer
+from repro.sim.trace import (PHASES, CounterRecord, FlowRecord, TraceRecord,
+                             Tracer)
 
 __all__ = [
     "ConfigError", "SimConfig", "builtin_config_path", "deep_merge",
@@ -24,4 +32,8 @@ __all__ = [
     "Interval", "Resource", "TileTrain", "interleave_blocks", "row_chunks",
     "split_proportional", "tile_entries", "PipelinedRuntime",
     "PipelineReport", "ReuseEntry", "PHASES", "TraceRecord", "Tracer",
+    "CounterRecord", "FlowRecord", "METRICS_SCHEMA_VERSION", "STALL_BINS",
+    "Activity", "ActivityLog", "Counter", "CPSegment", "Gauge", "Histogram",
+    "KernelStall", "MetricsError", "MetricsRegistry", "SchedulerMetrics",
+    "StallTable", "summarize_critical_path",
 ]

@@ -37,6 +37,7 @@ _SECTIONS = {
     "ecpu": ("decode_cycles", "schedule_cycles", "issue_cycles_per_vins"),
     "pipeline": ("row_chunk", "dataflow", "tiling", "reuse"),
     "memory": ("bytes",),
+    "metrics": ("enabled",),
 }
 
 
@@ -62,11 +63,12 @@ class SimConfig:
     tile_rows: int = 0
     tile_cols: int = 0
     reuse: bool = False
+    metrics: bool = True
     memory_bytes: int = 16 << 20
     description: str = ""
 
     def __post_init__(self):
-        for knob in ("dataflow", "reuse"):
+        for knob in ("dataflow", "reuse", "metrics"):
             raw = getattr(self, knob)
             if isinstance(raw, str):
                 # YAML spells the knobs on/off; quoted strings normalise too.
@@ -74,8 +76,10 @@ class SimConfig:
                        "off": False, "false": False, "no": False,
                        }.get(raw.lower())
                 if val is None:
+                    section = "metrics.enabled" if knob == "metrics" \
+                        else f"pipeline.{knob}"
                     raise ConfigError(
-                        f"pipeline.{knob} must be on/off, got {raw!r}")
+                        f"{section} must be on/off, got {raw!r}")
                 object.__setattr__(self, knob, val)
         for f in ("n_vpus", "vregs_per_vpu", "vlen_bytes", "queue_capacity",
                   "lanes", "dma_bytes_per_cycle", "memory_bytes"):
@@ -134,6 +138,7 @@ class SimConfig:
             vlen_bytes=self.vlen_bytes,
             queue_capacity=self.queue_capacity,
             geometry=self.geometry(),
+            metrics=self.metrics,
         )
         if scheduler == "serial":
             return CacheRuntime(**kwargs)
@@ -167,6 +172,8 @@ class SimConfig:
                     kwargs.update(cls._parse_tiling(v))
                 elif (section, k) == ("memory", "bytes"):
                     kwargs["memory_bytes"] = v
+                elif (section, k) == ("metrics", "enabled"):
+                    kwargs["metrics"] = v
                 else:
                     kwargs[k] = v
         if raw:

@@ -258,6 +258,32 @@ class TileTrain:
             t = max(t, pm[jr][jc])
         return t
 
+    def gate_source(self, flow: OperandFlow, piece: int, n_pieces: int,
+                    col_piece: int = 0, n_col_pieces: int = 1
+                    ) -> tuple[int, Optional[tuple[int, int, int]]]:
+        """Like :meth:`gate`, but also name the binding tile.
+
+        Returns ``(gate_cycle, (block, band, tile))`` — the last-landing tile
+        inside the required rectangle (the tile whose completion the compute
+        piece actually waits for; earliest-indexed on ties). Observability
+        helper for flow-event emission: an O(rectangle) scan rather than an
+        O(1) prefix-max lookup, so the scheduler's timing path never calls it.
+        """
+        need_c = flow.cols_required(col_piece, n_col_pieces, self.cum_cols[-1])
+        jc = bisect.bisect_left(self.cum_cols, need_c)
+        best_t = 0
+        best_src: Optional[tuple[int, int, int]] = None
+        for b, (cum, grid) in enumerate(zip(self.cum_rows, self.end_times)):
+            need_r = flow.rows_required(piece, n_pieces, cum[-1])
+            jr = bisect.bisect_left(cum, need_r)
+            for i in range(jr + 1):
+                row = grid[i]
+                for t in range(jc + 1):
+                    if row[t] > best_t or best_src is None:
+                        best_t = row[t]
+                        best_src = (b, i, t)
+        return best_t, best_src
+
 
 def ChunkTrain(cum_rows: list[list[int]],
                end_times: list[list[int]]) -> TileTrain:

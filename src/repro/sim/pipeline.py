@@ -212,6 +212,35 @@ class PipelinedRuntime(CacheRuntime):
         return (super().alias_queries_served()
                 + self._war_index.queries + self._reuse_index.queries)
 
+    def metrics_report(self) -> dict:
+        """Unified metrics report over the pipelined event timeline: typed
+        instruments, per-kernel stall attribution, and the critical-path
+        breakdown of the makespan (see :mod:`repro.sim.metrics`)."""
+        return self.metrics.report(
+            makespan=self.sim_time,
+            extra={"kernels_run": self.stats.kernels_run,
+                   "events_processed": self.events_processed,
+                   "alias_queries": self.alias_queries_served(),
+                   "reuse_hits": self.stats.reuse_hits,
+                   "serial_cycles": self.stats.total_cycles,
+                   "sim_seconds": self._wall_seconds})
+
+    def _emit_counters(self, t: int) -> None:
+        """Sample the Chrome counter tracks (per-VPU line occupancy, AT free
+        slots, reuse-FIFO bytes) at cycle ``t`` — dispatches, completions and
+        drains are the points where any of them can change."""
+        if not self.tracer.enabled:
+            return
+        self.tracer.counter("at.free_slots", t, free=self.at.free_slots())
+        for v in range(self.cache.n_vpus):
+            self.tracer.counter(
+                f"vpu{v}.lines", t,
+                used=self.cache.vregs_per_vpu - self.cache.free_line_count(v))
+        if self.reuse:
+            for v in range(self.cache.n_vpus):
+                self.tracer.counter(f"vpu{v}.reuse_bytes", t,
+                                    bytes=self._reuse_bytes[v])
+
     # ----------------------------------------------------- operand reuse set
     def _reuse_lookup(self, v: int, region: StridedRegion) -> Optional[int]:
         """Cycle at which a containing clean copy on VPU ``v`` is fully
@@ -286,6 +315,9 @@ class PipelinedRuntime(CacheRuntime):
             self._ready_at[kid] = iv.end
             self.tracer.emit(f"{qk.spec.name} k{kid} decode", "preamble",
                              "ecpu", iv.start, iv.duration, kernel=kid)
+            self.metrics.kernel_decoded(kid, iv.end, qk.spec.name)
+            self.metrics.activity(f"{qk.spec.name} k{kid} decode", "preamble",
+                                  "ecpu", iv.start, iv.end, kernel=kid)
             eq.push(iv.end, "dispatch", kid)
 
         self._wake = set(self._pending_map)
@@ -308,6 +340,7 @@ class PipelinedRuntime(CacheRuntime):
                 # the final barrier flush. Drains evict residents, so
                 # capacity-blocked kernels get another look.
                 self._drain_idle_dma(t, inflight, eq)
+                self._emit_counters(t)
                 self._wake_capacity_blocked()
 
         end = max([t, self.sim_time]
@@ -320,6 +353,7 @@ class PipelinedRuntime(CacheRuntime):
         fallback_before = self.stats.total_cycles
         for qk in list(self._pending_map.values()):
             if self.tracker.ready(qk.deps.kernel_id):
+                self.metrics.inc("kernels.fallback")
                 self._run_one(qk)
             else:
                 still.append(qk)
@@ -387,18 +421,21 @@ class PipelinedRuntime(CacheRuntime):
             return False         # its own decode event wakes it
         unmet = self.tracker.unmet_deps(kid)
         if unmet:
+            self.metrics.kernel_blocked(kid, t, "raw_dep")
             if self.wakeup:
                 for d in unmet:
                     self._dep_waiters.setdefault(d, set()).add(kid)
             return False
         blockers = self._war_blockers(qk, kid)
         if blockers:
+            self.metrics.kernel_blocked(kid, t, "war_guard")
             if self.wakeup:
                 for b in blockers:
                     self._war_waiters.setdefault(b, set()).add(kid)
             return False
         v = self._choose_vpu_pipelined(qk, t)
         if v is None:
+            self.metrics.kernel_blocked(kid, t, "capacity")
             if self.wakeup:
                 self._cap_blocked.add(kid)
             return False
@@ -514,6 +551,9 @@ class PipelinedRuntime(CacheRuntime):
         self.tracer.emit(f"{qk.spec.name} k{kid} claim", "allocation",
                          "cache.lock", lock_iv.start, lock_iv.duration,
                          kernel=kid, vpu=v)
+        self.metrics.activity(f"{qk.spec.name} k{kid} claim", "allocation",
+                              "cache.lock", lock_iv.start, lock_iv.end,
+                              kernel=kid, vpu=v)
         # Consolidation write-backs of older deferred results happen before
         # this kernel's operands stream in, each on the DMA port of the VPU
         # *holding* the resident (not necessarily the dispatch VPU); they are
@@ -528,6 +568,10 @@ class PipelinedRuntime(CacheRuntime):
             self.tracer.emit(f"{qk.spec.name} k{kid} consolidate", "writeback",
                              f"vpu{wv}.dma", wb_iv.start, wb_iv.duration,
                              kernel=kid, vpu=wv)
+            self.metrics.activity(f"{qk.spec.name} k{kid} consolidate",
+                                  "writeback", f"vpu{wv}.dma", wb_iv.start,
+                                  wb_iv.end, kernel=kid, vpu=wv)
+            self.metrics.inc("wb.consolidations")
 
         # Tile-train DMA-in (intra-instruction pipelining): each source
         # operand streams as its OWN train of (row-band × column-tile)
@@ -560,6 +604,12 @@ class PipelinedRuntime(CacheRuntime):
         eff_flows = list(flows) if flows is not None else None
         dma_ivs = []
         chunk_rows: list[int] = []
+        # Trace rows + spans of the booked DMA tiles, for flow-arrow emission
+        # (phys_id -> (block, band, tile) -> (row, start, end)); the parallel
+        # flat list serves the legacy chunk-indexed gating model.
+        tile_slices: dict[int, dict[tuple[int, int, int],
+                                    tuple[str, int, int]]] = {}
+        flat_slices: list[tuple[str, int, int]] = []
         ci = 0
         for si, rows, cycles in segs:
             flow = flows[si] if flows is not None else None
@@ -595,6 +645,7 @@ class PipelinedRuntime(CacheRuntime):
                          for _, bi, ti in entries])
             nb, nt = len(band_parts), len(col_parts)
             ends = [[[0] * nt for _ in range(nb)] for _ in range(blocks)]
+            op_slices = tile_slices.setdefault(binding.phys_id, {})
             for (blk, bi, ti), cyc in zip(entries, cyc_parts):
                 iv = self.res_dma[v].acquire(
                     dma_start, cyc, label=f"k{kid} dma-in[op{si}.{ci}]")
@@ -608,6 +659,14 @@ class PipelinedRuntime(CacheRuntime):
                                  iv.duration, lane=lane, kernel=kid,
                                  vpu=v, chunk=ci, operand=si, band=bi,
                                  tile=ti)
+                self.metrics.activity(
+                    f"{qk.spec.name} k{kid} dma-in[op{si}.{ci}]",
+                    "allocation", f"vpu{v}.dma", iv.start, iv.end,
+                    kernel=kid, vpu=v)
+                self.metrics.inc("dma.tiles")
+                op_slices[(blk, bi, ti)] = (f"vpu{v}.dma/{lane}",
+                                            iv.start, iv.end)
+                flat_slices.append((f"vpu{v}.dma/{lane}", iv.start, iv.end))
                 ci += 1
             cum_r = []
             acc = 0
@@ -637,16 +696,17 @@ class PipelinedRuntime(CacheRuntime):
         # reuse copies gate at their modeled landing time). Legacy (dataflow
         # off): piece i is gated on chunk i of the concatenated stream. With
         # no DMA at all, compute is one piece.
+        piece_spans: list[tuple[int, int, int]] = []   # (gate, start, end)
         if flows is not None and (dma_ivs or reuse_gates):
-            constraints = [(trains[s.phys_id], eff_flows[si])
+            constraints = [(trains[s.phys_id], eff_flows[si], s.phys_id)
                            for si, s in enumerate(qk.src_bindings)
                            if s.phys_id in trains]
-            pacing = [tr for tr, fl in constraints
+            pacing = [tr for tr, fl, _ in constraints
                       if fl.kind is not FlowKind.FULL]
             n_pieces = max((tr.pace for tr in pacing), default=1)
             weights = next((tr.piece_weights() for tr in pacing
                             if tr.pace == n_pieces), [1] * n_pieces)
-            col_pacing = [tr for tr, fl in constraints
+            col_pacing = [tr for tr, fl, _ in constraints
                           if fl.col_kind is not FlowKind.FULL
                           and tr.col_pace > 1]
             n_cols = max((tr.col_pace for tr in col_pacing), default=1)
@@ -659,7 +719,7 @@ class PipelinedRuntime(CacheRuntime):
                 for pj, cyc in enumerate(split_proportional(bc, col_weights)):
                     ready = max([base_gate]
                                 + [tr.gate(fl, pi, n_pieces, pj, n_cols)
-                                   for tr, fl in constraints])
+                                   for tr, fl, _ in constraints])
                     tag = f"{pi},{pj}" if n_cols > 1 else f"{pi}"
                     dp_iv = self.res_dp[v].acquire(
                         ready, cyc, label=f"k{kid} {qk.spec.name}[{tag}]")
@@ -668,6 +728,15 @@ class PipelinedRuntime(CacheRuntime):
                                      dp_iv.start, dp_iv.duration, kernel=kid,
                                      vpu=v, chunk=pi * n_cols + pj, band=pi,
                                      tile=pj)
+                    self.metrics.activity(f"{qk.spec.name} k{kid}[{tag}]",
+                                          "compute", f"vpu{v}.datapath",
+                                          dp_iv.start, dp_iv.end,
+                                          kernel=kid, vpu=v)
+                    piece_spans.append((ready, dp_iv.start, dp_iv.end))
+                    if self.tracer.enabled and ready > base_gate:
+                        self._emit_gate_flow(qk, kid, v, constraints,
+                                             tile_slices, pi, n_pieces, pj,
+                                             n_cols, tag, dp_iv, base_gate)
         elif dma_ivs:
             pieces = split_proportional(compute_cycles, chunk_rows)
             dp_iv = None
@@ -678,18 +747,54 @@ class PipelinedRuntime(CacheRuntime):
                 self.tracer.emit(f"{qk.spec.name} k{kid}[{pi}]", "compute",
                                  f"vpu{v}.datapath", dp_iv.start,
                                  dp_iv.duration, kernel=kid, vpu=v, chunk=pi)
+                self.metrics.activity(f"{qk.spec.name} k{kid}[{pi}]",
+                                      "compute", f"vpu{v}.datapath",
+                                      dp_iv.start, dp_iv.end,
+                                      kernel=kid, vpu=v)
+                piece_spans.append((dma_iv.end, dp_iv.start, dp_iv.end))
+                if self.tracer.enabled:
+                    row, s0, e0 = flat_slices[pi]
+                    self.tracer.flow(f"{qk.spec.name} k{kid} gate[{pi}]",
+                                     "compute", row, max(s0, e0 - 1),
+                                     f"vpu{v}.datapath", dp_iv.start)
         else:
             dp_iv = self.res_dp[v].acquire(lock_iv.end, compute_cycles,
                                            label=f"k{kid} {qk.spec.name}")
             self.tracer.emit(f"{qk.spec.name} k{kid}", "compute",
                              f"vpu{v}.datapath", dp_iv.start, dp_iv.duration,
                              kernel=kid, vpu=v)
+            self.metrics.activity(f"{qk.spec.name} k{kid}", "compute",
+                                  f"vpu{v}.datapath", dp_iv.start, dp_iv.end,
+                                  kernel=kid, vpu=v)
+            piece_spans.append((lock_iv.end, dp_iv.start, dp_iv.end))
 
+        self.metrics.kernel_dispatched(kid, t, v, lock_iv.end, dma_start,
+                                       piece_spans)
         if self.reuse:
             for region, landed in streamed:
                 self._reuse_note(v, region, landed)
         inflight[kid] = (qk, v, alloc.src_res, alloc.dst_res)
+        self._emit_counters(t)
         eq.push(dp_iv.end, "compute_done", kid)
+
+    def _emit_gate_flow(self, qk, kid: int, v: int, constraints, tile_slices,
+                        pi: int, n_pieces: int, pj: int, n_cols: int,
+                        tag: str, dp_iv, base_gate: int) -> None:
+        """Flow arrow from the DMA tile that binds compute piece ``(pi, pj)``
+        to the piece's datapath slice. Observability only — ``gate_source``
+        re-derives the argmax of the gate rectangle; timing is untouched."""
+        best_gate, best_slice = base_gate, None
+        for tr, fl, pid in constraints:
+            g, src = tr.gate_source(fl, pi, n_pieces, pj, n_cols)
+            if g > best_gate and src is not None:
+                sl = tile_slices.get(pid, {}).get(src)
+                if sl is not None:
+                    best_gate, best_slice = g, sl
+        if best_slice is not None:
+            row, s0, e0 = best_slice
+            self.tracer.flow(f"{qk.spec.name} k{kid} gate[{tag}]", "compute",
+                             row, max(s0, e0 - 1),
+                             f"vpu{v}.datapath", dp_iv.start)
 
     def _book_writebacks(self, segments: list, fallback: tuple[int, int],
                          t: int, label: str, eq: Optional[EventQueue],
@@ -704,6 +809,10 @@ class PipelinedRuntime(CacheRuntime):
             iv = self.res_dma[wv].acquire(t, cyc, label=label)
             self.tracer.emit(label, "writeback", f"vpu{wv}.dma",
                              iv.start, iv.duration, vpu=wv, **args)
+            self.metrics.activity(label, "writeback", f"vpu{wv}.dma",
+                                  iv.start, iv.end,
+                                  kernel=args.get("kernel"), vpu=wv)
+            self.metrics.inc("wb.bookings")
             if eq is not None:
                 eq.push(iv.end, "wb_done")
 
@@ -720,6 +829,7 @@ class PipelinedRuntime(CacheRuntime):
     def _handle_compute_done(self, kid: int, t: int, inflight: dict,
                              eq: EventQueue) -> None:
         qk, v, src_res, dst_res = inflight.pop(kid)
+        self.metrics.kernel_retired(kid, t)
         wb, segs = self._retire_timed(qk, src_res, dst_res)
         self.stats.writeback_cycles += wb
         self.stats.kernels_run += 1
@@ -728,6 +838,7 @@ class PipelinedRuntime(CacheRuntime):
                                   f"{qk.spec.name} k{kid} writeback", eq,
                                   kernel=kid)
         self._drain_idle_dma(t, inflight, eq)
+        self._emit_counters(t)
         # This completion satisfies dependency edges out of ``kid``, and the
         # retire/drain may have evicted residents (capacity changed).
         waiters = self._dep_waiters.pop(kid, None)

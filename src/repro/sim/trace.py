@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Any, Optional
 
 #: Canonical phase categories — match PhaseStats / Fig. 3 axes.
@@ -42,6 +43,34 @@ class TraceRecord:
         return f"{self.resource}/{self.lane}" if self.lane else self.resource
 
 
+@dataclasses.dataclass(frozen=True)
+class CounterRecord:
+    """A Chrome counter sample (``"ph": "C"``): one or more named series
+    sampled at a cycle timestamp — per-VPU occupancy, AT free slots,
+    reuse-FIFO bytes. Counters live on their own tracks and contribute
+    nothing to busy/phase accounting."""
+
+    name: str              # counter track name, e.g. "at.free_slots"
+    ts: int                # cycles
+    series: tuple          # sorted (series_name, value) pairs
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowRecord:
+    """A Chrome flow arrow (``"ph": "s"`` → ``"ph": "f"``) linking a DMA
+    tile slice to the compute piece it gates. Row names must refer to rows
+    that carry at least one TraceRecord (the arrow endpoints bind to the
+    enclosing slices on those rows)."""
+
+    name: str
+    phase: str
+    fid: int               # flow id — unique per tracer
+    src_row: str
+    src_ts: int
+    dst_row: str
+    dst_ts: int
+
+
 class Tracer:
     """Accumulates trace records; exports Chrome trace_event JSON.
 
@@ -54,6 +83,8 @@ class Tracer:
         self.process_name = process_name
         self.enabled = enabled
         self.records: list[TraceRecord] = []
+        self.counters: list[CounterRecord] = []
+        self.flows: list[FlowRecord] = []
         self._resources: list[str] = []   # insertion order -> tid
 
     def emit(self, name: str, phase: str, resource: str, start: int,
@@ -75,8 +106,36 @@ class Tracer:
             self._resources.append(resource)
         return rec
 
+    def counter(self, name: str, ts: int, **series: Any) -> Optional[CounterRecord]:
+        """Sample one or more counter series at ``ts`` (a ``"ph": "C"``
+        event in the export — its own track in Perfetto)."""
+        if not self.enabled:
+            return None
+        if not series:
+            raise ValueError("counter sample needs at least one series")
+        rec = CounterRecord(name=name, ts=int(ts),
+                            series=tuple(sorted(series.items())))
+        self.counters.append(rec)
+        return rec
+
+    def flow(self, name: str, phase: str, src_row: str, src_ts: int,
+             dst_row: str, dst_ts: int) -> Optional[FlowRecord]:
+        """Link the slice enclosing ``(src_row, src_ts)`` to the slice
+        enclosing ``(dst_row, dst_ts)`` with a flow arrow."""
+        if not self.enabled:
+            return None
+        if phase not in PHASES:
+            raise ValueError(f"unknown phase {phase!r}, expected one of {PHASES}")
+        rec = FlowRecord(name=name, phase=phase, fid=len(self.flows),
+                         src_row=src_row, src_ts=int(src_ts),
+                         dst_row=dst_row, dst_ts=int(dst_ts))
+        self.flows.append(rec)
+        return rec
+
     def clear(self) -> None:
         self.records.clear()
+        self.counters.clear()
+        self.flows.clear()
         self._resources.clear()
 
     # ------------------------------------------------------------- exporters
@@ -94,15 +153,16 @@ class Tracer:
             tid_of[r] = len(tid_of)
             for lane in lanes_of[r]:
                 tid_of[f"{r}/{lane}"] = len(tid_of)
-        events: list[dict] = [{
+        meta: list[dict] = [{
             "name": "process_name", "ph": "M", "pid": 0, "tid": 0,
             "args": {"name": self.process_name},
         }]
         for r, tid in tid_of.items():
-            events.append({"name": "thread_name", "ph": "M", "pid": 0,
-                           "tid": tid, "args": {"name": r}})
-            events.append({"name": "thread_sort_index", "ph": "M", "pid": 0,
-                           "tid": tid, "args": {"sort_index": tid}})
+            meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+                         "tid": tid, "args": {"name": r}})
+            meta.append({"name": "thread_sort_index", "ph": "M", "pid": 0,
+                         "tid": tid, "args": {"sort_index": tid}})
+        events: list[dict] = []
         for rec in self.records:
             if rec.instant:
                 events.append({
@@ -126,11 +186,48 @@ class Tracer:
                 "tid": tid_of[rec.row],
                 "args": dict(rec.args),
             })
-        return {"traceEvents": events, "displayTimeUnit": "ms",
+        for cr in self.counters:
+            events.append({
+                "name": cr.name,
+                "cat": "counter",
+                "ph": "C",
+                "ts": cr.ts,
+                "pid": 0,
+                "tid": 0,
+                "args": dict(cr.series),
+            })
+        for fl in self.flows:
+            # Flow endpoints bind to the enclosing slice on the named row;
+            # rows referenced here always carry at least one complete event.
+            for ph, row, ts in (("s", fl.src_row, fl.src_ts),
+                                ("f", fl.dst_row, fl.dst_ts)):
+                ev = {
+                    "name": fl.name,
+                    "cat": fl.phase,
+                    "ph": ph,
+                    "id": fl.fid,
+                    "ts": ts,
+                    "pid": 0,
+                    "tid": tid_of.get(row, 0),
+                }
+                if ph == "f":
+                    ev["bp"] = "e"        # bind to the enclosing slice
+                events.append(ev)
+        # Deterministic order so trace files diff cleanly across runs:
+        # metadata first (by tid, names before sort indices), then events by
+        # (ts, tid, phase-kind, name, flow id).
+        ph_rank = {"C": 0, "X": 1, "i": 2, "s": 3, "f": 4}
+        events.sort(key=lambda e: (e["ts"], e["tid"], ph_rank[e["ph"]],
+                                   e["name"], e.get("id", -1)))
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
                 "otherData": {"source": "repro.sim.PipelinedRuntime"}}
 
     def dump(self, path: str) -> str:
-        """Write the Chrome trace JSON to ``path``; returns the path."""
+        """Write the Chrome trace JSON to ``path`` (creating parent
+        directories as needed); returns the path."""
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         with open(path, "w") as f:
             json.dump(self.to_chrome(), f, indent=None, separators=(",", ":"))
         return path

@@ -170,13 +170,8 @@ def gen_chain_program(seed: int, n_ops: int = 64) -> dict:
     }
 
 
-def run_program(prog: dict, scheduler: str):
-    """Execute ``prog`` on a fresh runtime; returns the coprocessor."""
-    if scheduler == "serial":
-        cop = ArcaneCoprocessor(runtime=CacheRuntime(**prog["rt"]))
-    else:
-        cop = ArcaneCoprocessor(runtime=PipelinedRuntime(
-            **prog["rt"], **prog["pipe"]))
+def _replay(prog: dict, cop) -> None:
+    """Issue ``prog``'s instruction stream on an existing coprocessor."""
     width = prog["width"]
     eb = width.nbytes
     dt = np_dtype(width)
@@ -211,6 +206,16 @@ def run_program(prog: dict, scheduler: str):
         else:
             cop._conv_layer(width, 3, 0, 1)
     cop.barrier()
+
+
+def run_program(prog: dict, scheduler: str):
+    """Execute ``prog`` on a fresh runtime; returns the coprocessor."""
+    if scheduler == "serial":
+        cop = ArcaneCoprocessor(runtime=CacheRuntime(**prog["rt"]))
+    else:
+        cop = ArcaneCoprocessor(runtime=PipelinedRuntime(
+            **prog["rt"], **prog["pipe"]))
+    _replay(prog, cop)
     return cop
 
 
@@ -280,6 +285,38 @@ def test_differential_fuzz_hypothesis():
         check_program(seed)
 
     prop()
+
+
+def test_differential_metrics_identity():
+    """Metrics collection is purely observational: for random programs the
+    metrics-off schedule is bit-identical to the metrics-on one — same
+    makespan, same per-resource intervals, same flushed memory image — and
+    the metrics-on run satisfies stall-cycle conservation."""
+    for seed in range(12):
+        prog = gen_program(seed)
+        cops = {}
+        for metrics in (True, False):
+            cops[metrics] = cop = ArcaneCoprocessor(
+                runtime=PipelinedRuntime(**prog["rt"], **prog["pipe"],
+                                         metrics=metrics))
+            _replay(prog, cop)
+        on, off = cops[True].rt, cops[False].rt
+        assert on.sim_time == off.sim_time, f"seed {seed}: makespan diverged"
+        for r_on, r_off in zip(on._all_resources(), off._all_resources()):
+            assert [(iv.start, iv.end) for iv in r_on.intervals] == \
+                [(iv.start, iv.end) for iv in r_off.intervals], \
+                f"seed {seed}: {r_on.name} schedule diverged"
+        cops[True].rt.cache.flush_all()
+        cops[False].rt.cache.flush_all()
+        np.testing.assert_array_equal(
+            on.memory.data, off.memory.data,
+            err_msg=f"seed {seed}: memory diverged under metrics")
+        rep = on.metrics_report()
+        assert rep["conservation_ok"], f"seed {seed}: conservation violated"
+        cp = rep.get("critical_path")
+        if cp is not None:
+            assert cp["covers_makespan"] and cp["total"] == on.sim_time, \
+                f"seed {seed}: critical path does not tile the makespan"
 
 
 def test_generator_covers_the_space():

@@ -1,0 +1,275 @@
+"""Unified metrics layer: stall attribution, conservation, critical path.
+
+Covers the observability tentpole's three invariants:
+
+  * **conservation** — for every retired kernel, ``busy + Σ stall_bins ==
+    dispatch-to-retire latency`` (``KernelStall.conserved``), across all five
+    library kernels and serial / pipelined / tiled / reuse scheduler modes;
+  * **critical-path bounds** — the extracted path's segments tile
+    ``[0, makespan]`` exactly (``total == makespan``), busy cp cycles never
+    exceed the makespan, and a pure RAW chain yields an idle-free path;
+  * **observational purity** — a metrics-on run books the exact same
+    schedule (makespan, resource intervals, memory image) as metrics-off.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core.runtime import CacheRuntime
+from repro.sim import PipelinedRuntime
+from repro.sim.metrics import (STALL_BINS, ActivityLog, Counter, Gauge,
+                               Histogram, MetricsError, MetricsRegistry,
+                               SchedulerMetrics, StallTable,
+                               summarize_critical_path)
+
+# ------------------------------------------------------------- workloads
+GEOM = {"n_vpus": 2, "vregs_per_vpu": 32, "vlen_bytes": 512}
+
+#: scheduler modes of the conservation sweep (ISSUE: serial / pipelined /
+#: tiled / reuse)
+MODES = [
+    ("serial", None),
+    ("pipelined", {}),
+    ("pipelined", {"tiling": (4, 8)}),
+    ("pipelined", {"tiling": (4, 8), "reuse": True}),
+]
+
+
+def make_cop(mode, pipe, **extra):
+    if mode == "serial":
+        return ArcaneCoprocessor(runtime=CacheRuntime(**GEOM, **extra))
+    return ArcaneCoprocessor(
+        runtime=PipelinedRuntime(**GEOM, **(pipe or {}), **extra))
+
+
+def five_kernel_workload(cop, n=12):
+    """One of each library kernel (leakyrelu / maxpool / gemm / conv2d /
+    conv_layer) with shared operands — RAW edges plus reuse opportunities."""
+    rng = np.random.default_rng(11)
+    w = ElemWidth.W
+    A = rng.integers(-9, 9, (n, n), dtype=np.int32)
+    B = rng.integers(-9, 9, (n, n), dtype=np.int32)
+    F = rng.integers(-3, 3, (3 * 3, 3), dtype=np.int32)
+    aA, aB, aF = cop.place(A, w), cop.place(B, w), cop.place(F, w)
+    aG = cop.malloc(n * n * 4)
+    aL = cop.malloc(n * n * 4)
+    aP = cop.malloc((n // 2) * (n // 2) * 4)
+    aC = cop.malloc((n - 2) * (n - 2) * 4)
+    h = n // 3
+    om, on = (h - 3 + 1) // 2, (n - 3 + 1) // 2
+    aY = cop.malloc(max(om * on * 4, 4))
+    cop._xmr_w(0, aA, 0, n, n)
+    cop._xmr_w(1, aB, 0, n, n)
+    cop._xmr_w(2, aG, 0, n, n)
+    cop._gemm_w(2, 0, 1, 2, alpha=1.0, beta=0.0)          # G = A @ B
+    cop._xmr_w(0, aG, 0, n, n)
+    cop._xmr_w(3, aL, 0, n, n)
+    cop._leakyrelu(w, 3, 0, alpha=0.5)                    # L = relu(G): RAW
+    cop._xmr_w(0, aL, 0, n, n)
+    cop._xmr_w(4, aP, 0, n // 2, n // 2)
+    cop._maxpool(w, 4, 0, 2, 2)                           # P = pool(L): RAW
+    cop._xmr_w(0, aA, 0, n, n)
+    cop._xmr_w(1, aF, 0, 3, 3)
+    cop._xmr_w(3, aC, 0, n - 2, n - 2)
+    cop._conv2d(w, 3, 0, 1)                               # C = A * f (reuse A)
+    cop._xmr(w, 0, aA, n, 3 * h, n)
+    cop._xmr_w(1, aF, 0, 9, 3)
+    cop._xmr(w, 3, aY, on, om, on)
+    cop._conv_layer(w, 3, 0, 1)                           # fused layer
+    cop.barrier()
+    return cop
+
+
+def raw_chain_workload(cop, links=6, n=8):
+    """Pure RAW chain: kernel i reads kernel i-1's destination."""
+    rng = np.random.default_rng(3)
+    w = ElemWidth.W
+    prev = cop.place(rng.integers(-9, 9, (n, n), dtype=np.int32), w)
+    for _ in range(links):
+        dst = cop.malloc(n * n * 4)
+        cop._xmr_w(0, prev, 0, n, n)
+        cop._xmr_w(3, dst, 0, n, n)
+        cop._leakyrelu(w, 3, 0, alpha=0.25)
+        prev = dst
+    cop.barrier()
+    return cop
+
+
+# ------------------------------------------------------ registry unit tests
+def test_registry_types_and_mismatch():
+    reg = MetricsRegistry()
+    c = reg.counter("a.count", "help")
+    assert reg.counter("a.count") is c           # create-or-get
+    c.inc(); c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("a.level")
+    g.set(7); g.inc(); g.dec(3)
+    assert g.value == 5
+    h = reg.histogram("a.lat")
+    for v in (0, 1, 2, 3, 900):
+        h.observe(v)
+    assert h.count == 5 and h.sum == 906 and h.min == 0 and h.max == 900
+    assert h.buckets[0] == 1 and h.buckets[1] == 1 and h.buckets[2] == 2
+    with pytest.raises(ValueError):
+        h.observe(-2)
+    for wrong in (reg.gauge, reg.histogram):
+        with pytest.raises(MetricsError):
+            wrong("a.count")
+    d = reg.to_dict()
+    assert d["counters"]["a.count"]["value"] == 4
+    assert d["gauges"]["a.level"]["value"] == 5
+    assert d["histograms"]["a.lat"]["mean"] == pytest.approx(906 / 5)
+
+
+def test_stall_table_attribution_and_conservation():
+    tab = StallTable()
+    tab.decoded(0, ready=100, name="k")
+    tab.blocked(0, 100, "raw_dep")       # examined right at ready
+    tab.blocked(0, 160, "capacity")      # 60 cycles were raw_dep
+    # dispatched at 200: 40 cycles capacity; then lock to 220, drain to 230,
+    # piece gated at 250, runs [260, 300) (10 datapath-busy cycles)
+    tab.dispatched(0, 200, vpu=1, lock_end=220, dma_start=230,
+                   pieces=[(250, 260, 300)])
+    rec = tab.retired(0, 300)
+    assert rec.bins["raw_dep"] == 60 and rec.bins["capacity"] == 40
+    assert rec.bins["cache_lock"] == 20 and rec.bins["drain"] == 10
+    assert rec.bins["dma_wait"] == 20 and rec.bins["datapath_busy"] == 10
+    assert rec.busy == 40 and rec.conserved() and rec.latency == 200
+
+
+def test_stall_table_violation_raises():
+    tab = StallTable()
+    tab.decoded(1, ready=0, name="k")
+    tab.dispatched(1, 0, vpu=0, lock_end=0, dma_start=0, pieces=[(0, 0, 10)])
+    with pytest.raises(MetricsError, match="conservation"):
+        tab.retired(1, 999)              # 989 unattributed cycles
+
+
+def test_critical_path_tiles_handcrafted_graph():
+    log = ActivityLog()
+    log.add("decode", "preamble", "ecpu", 0, 100, kernel=0)
+    log.add("dma", "allocation", "vpu0.dma", 100, 180, kernel=0, vpu=0)
+    log.add("compute", "compute", "vpu0.datapath", 180, 400, kernel=0, vpu=0)
+    # a shorter parallel activity that must NOT be on the path
+    log.add("other", "compute", "vpu1.datapath", 100, 150, kernel=1, vpu=1)
+    segs = log.critical_path(end_time=400)
+    assert [s.resource for s in segs] == \
+        ["vpu0.datapath", "vpu0.dma", "ecpu"][::-1] or \
+        [s.resource for s in segs] == ["ecpu", "vpu0.dma", "vpu0.datapath"]
+    summ = summarize_critical_path(segs, makespan=400)
+    assert summ["covers_makespan"] and summ["total"] == 400
+    assert summ["idle_cycles"] == 0
+    assert summ["by_phase"]["compute"]["cycles"] == 220
+
+
+def test_critical_path_bridges_idle_gaps():
+    log = ActivityLog()
+    log.add("a", "compute", "r", 0, 50)
+    log.add("b", "compute", "r", 80, 120)       # nothing ends at 80
+    summ = summarize_critical_path(log.critical_path(end_time=120), 120)
+    assert summ["covers_makespan"] and summ["idle_cycles"] == 30
+
+
+def test_empty_log_reports_none():
+    m = SchedulerMetrics(enabled=True)
+    rep = m.report(makespan=0)
+    assert rep["critical_path"] is None and rep["conservation_ok"]
+
+
+# --------------------------------------------- conservation across the stack
+@pytest.mark.parametrize("mode,pipe", MODES)
+def test_conservation_five_kernels(mode, pipe):
+    cop = five_kernel_workload(make_cop(mode, pipe))
+    rep = cop.rt.metrics_report()
+    assert rep["enabled"] and rep["conservation_ok"]
+    assert set(rep["kernels"]) == {"gemm", "leakyrelu", "maxpool", "conv2d",
+                                   "conv_layer"}
+    assert len(rep["per_kernel"]) == cop.rt.stats.kernels_run == 5
+    for rec in rep["per_kernel"]:
+        assert rec["busy"] > 0
+        assert rec["busy"] + sum(rec["stalls"].values()) == rec["latency"] \
+            or rec["fallback"]
+        assert set(rec["stalls"]) == set(STALL_BINS)
+    assert rep["counters"]["kernels.retired"]["value"] == 5
+
+
+@pytest.mark.parametrize("mode,pipe", MODES[1:])
+def test_critical_path_bounds(mode, pipe):
+    cop = five_kernel_workload(make_cop(mode, pipe))
+    rep = cop.rt.metrics_report()
+    cp = rep["critical_path"]
+    makespan = cop.rt.sim_time
+    assert cp["makespan"] == makespan
+    assert cp["cp_cycles"] <= makespan                 # cp lower-bounds it
+    assert cp["covers_makespan"] and cp["total"] == makespan
+    # segments tile [0, makespan] contiguously
+    segs = cp["segments"]
+    assert segs[0]["start"] == 0 and segs[-1]["end"] == makespan
+    for a, b in zip(segs, segs[1:]):
+        assert a["end"] == b["start"]
+    assert sum(s["cycles"] for s in segs) == makespan
+    fr = sum(d["fraction"] for d in cp["by_resource"].values())
+    assert fr <= 1.0 + 1e-9
+
+
+@pytest.mark.parametrize("pipe", [{}, {"tiling": (4, 8)}])
+def test_pure_raw_chain_is_idle_free(pipe):
+    """On a pure RAW chain every cycle is on the dependence chain: the
+    critical path covers the makespan with zero idle bridging."""
+    cop = raw_chain_workload(make_cop("pipelined", pipe))
+    cp = cop.rt.metrics_report()["critical_path"]
+    assert cp["covers_makespan"] and cp["idle_cycles"] == 0
+    assert cp["cp_cycles"] == cop.rt.sim_time
+
+
+def test_serial_report_has_no_event_timeline():
+    cop = five_kernel_workload(make_cop("serial", None))
+    rep = cop.rt.metrics_report()
+    assert rep["conservation_ok"] and rep["critical_path"] is None
+    assert rep["extra"]["kernels_run"] == 5
+
+
+# -------------------------------------------------------- observational purity
+@pytest.mark.parametrize("mode,pipe", MODES[1:])
+def test_metrics_off_is_bit_identical(mode, pipe):
+    on = five_kernel_workload(make_cop(mode, pipe, metrics=True))
+    off = five_kernel_workload(make_cop(mode, pipe, metrics=False))
+    assert on.rt.sim_time == off.rt.sim_time
+    for r_on, r_off in zip(on.rt._all_resources(), off.rt._all_resources()):
+        assert r_on.name == r_off.name
+        assert [(iv.start, iv.end) for iv in r_on.intervals] == \
+            [(iv.start, iv.end) for iv in r_off.intervals]
+    on.rt.cache.flush_all()
+    off.rt.cache.flush_all()
+    np.testing.assert_array_equal(on.rt.memory.data, off.rt.memory.data)
+    # off-mode hooks collected nothing
+    rep = off.rt.metrics_report()
+    assert not rep["enabled"] and not rep["per_kernel"] \
+        and rep["critical_path"] is None
+
+
+def test_config_metrics_knob():
+    from repro.sim.config import SimConfig, load_config, load_raw
+    cfg = load_config("arcane-default")
+    assert cfg.metrics is True
+    from repro.sim.config import builtin_config_path
+    raw = load_raw(builtin_config_path("arcane-default"))
+    raw["metrics"]["enabled"] = False
+    rt = SimConfig.from_dict(raw).make_runtime(scheduler="pipelined")
+    assert rt.metrics.enabled is False
+    rt2 = cfg.make_runtime(scheduler="serial")
+    assert rt2.metrics.enabled is True
+
+
+# ------------------------------------------------------------ driver report
+def test_fig4_report_point_matches_makespan():
+    from benchmarks.fig4_speedup import metrics_report_point
+    total, mrep = metrics_report_point(16, 3, ElemWidth.B, 4, "pipelined",
+                                       tiling=(4, 8), reuse=True)
+    assert mrep["conservation_ok"]
+    cp = mrep["critical_path"]
+    assert cp["covers_makespan"] and cp["total"] == total
+    s_total, s_mrep = metrics_report_point(16, 3, ElemWidth.B, 4, "serial")
+    assert s_mrep["conservation_ok"] and s_mrep["critical_path"] is None

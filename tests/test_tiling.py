@@ -423,9 +423,9 @@ def test_per_tile_trace_lanes_in_chrome_export():
 
 def test_fig4_benchmark_tile_reuse_path():
     from benchmarks.fig4_speedup import arcane_cycles
-    base, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined")
-    tiled, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined",
-                             tiling=(4, 16), reuse=True)
+    base, _, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined")
+    tiled, _, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "pipelined",
+                                   tiling=(4, 16), reuse=True)
     assert base > 0 and tiled > 0
-    serial, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "serial")
+    serial, _, _, _ = arcane_cycles(32, 32, 3, ElemWidth.B, 4, "serial")
     assert tiled <= serial

@@ -142,3 +142,73 @@ def test_instant_emit_validation():
     rec = tr.emit("x", "allocation", "r", 3, 0, instant=True)
     assert rec.instant and rec.duration == 0
     assert tr.phase_cycles()["allocation"] == 0
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_counter_tracks_and_flow_events(mode):
+    """The enriched export: well-formed counter samples ("ph": "C") tracking
+    AT slots / per-VPU occupancy, and flow arrows ("ph": "s"/"f") whose
+    endpoints land on rows that carry complete events."""
+    cop = mixed_workload(make_cop(**mode))
+    tr = cop.rt.tracer
+    assert tr.counters, "no counter samples recorded"
+    names = {c.name for c in tr.counters}
+    assert "at.free_slots" in names
+    assert any(n.startswith("vpu") and n.endswith(".lines") for n in names)
+    doc = cop.rt.tracer.to_chrome()
+    events = doc["traceEvents"]
+    rows_with_slices = {e["tid"] for e in events if e["ph"] == "X"}
+    counters = [e for e in events if e["ph"] == "C"]
+    assert len(counters) == len(tr.counters)
+    for e in counters:
+        assert e["cat"] == "counter" and e["ts"] >= 0
+        assert e["args"] and all(isinstance(v, int)
+                                 for v in e["args"].values())
+    starts = {e["id"]: e for e in events if e["ph"] == "s"}
+    finishes = [e for e in events if e["ph"] == "f"]
+    assert len(starts) == len(finishes) == len(tr.flows)
+    for e in finishes:
+        s = starts[e["id"]]
+        assert e["bp"] == "e" and s["ts"] <= e["ts"]
+        assert s["tid"] in rows_with_slices
+        assert e["tid"] in rows_with_slices
+    if mode.get("tiling") and not mode.get("reuse"):
+        # tile trains strictly gate compute pieces -> at least one arrow
+        assert tr.flows
+
+
+def test_counter_and_flow_validation():
+    tr = Tracer()
+    with pytest.raises(ValueError, match="series"):
+        tr.counter("empty", 0)
+    with pytest.raises(ValueError, match="phase"):
+        tr.flow("x", "nope", "a", 0, "b", 1)
+    off = Tracer(enabled=False)
+    assert off.counter("c", 0, v=1) is None
+    assert off.flow("x", "compute", "a", 0, "b", 1) is None
+    tr.counter("c", 5, used=3, free=1)
+    tr.flow("x", "compute", "a", 0, "b", 9)
+    tr.clear()
+    assert not tr.counters and not tr.flows and not tr.records
+
+
+def test_chrome_export_is_deterministically_sorted():
+    cop = mixed_workload(make_cop(tiling=(4, 8)))
+    events = cop.rt.tracer.to_chrome()["traceEvents"]
+    metas = [e for e in events if e["ph"] == "M"]
+    assert events[:len(metas)] == metas, "metadata must lead the stream"
+    ph_rank = {"C": 0, "X": 1, "i": 2, "s": 3, "f": 4}
+    keys = [(e["ts"], e["tid"], ph_rank[e["ph"]], e["name"], e.get("id", -1))
+            for e in events[len(metas):]]
+    assert keys == sorted(keys)
+    # byte-identical across a re-export
+    assert json.dumps(cop.rt.tracer.to_chrome()) == json.dumps(
+        {"traceEvents": events, "displayTimeUnit": "ms",
+         "otherData": {"source": "repro.sim.PipelinedRuntime"}})
+
+
+def test_dump_creates_parent_directories(tmp_path):
+    cop = mixed_workload(make_cop())
+    out = cop.rt.tracer.dump(str(tmp_path / "deep" / "nested" / "t.json"))
+    with open(out) as f:
+        assert json.load(f) == cop.rt.tracer.to_chrome()
