@@ -1,0 +1,171 @@
+"""Model-level benchmark: lowered CNN / transformer tapes on both schedulers.
+
+Every scenario is a :class:`repro.core.KernelProgram` produced by the
+``repro.lower`` frontends — the paper's Listing-1 CNN (worst-case 32-bit
+elements), a deeper int8 CNN with a classifier head, one-token transformer
+decode steps with shapes scaled from the ``repro.configs`` registry, and an
+MoE expert burst. Each program runs on the serial C-RT (the paper's
+"serial" baseline) and the pipelined scheduler; the benchmark **asserts**
+the two flushed memory images are bit-identical and that both match the
+sequential numpy oracle (``repro.core.reference_images``) before reporting
+a single number, so every row is a verified execution, not just a timing.
+
+Reported per scenario: op/buffer counts, serial cycles, pipelined makespan,
+the modeled speedup, and the wall-clock issue throughput. ``--report`` adds
+the stall-attribution + critical-path breakdown (the unified metrics layer);
+``--out-json`` writes everything as a BENCH-envelope document
+(``BENCH_models.json``).
+
+Jax-free: the configs registry is shape-only at import and the oracle is
+numpy, so this driver runs on the scheduler-only toolchain.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (ArcaneCoprocessor, ElemWidth, issue_program,
+                        place_program, reference_images)
+from repro.core.program import ProgramRun
+from repro.core.runtime import CacheRuntime
+from repro.lower import (CNNSpec, decode_step_from_config, lower_cnn,
+                         moe_burst_from_config)
+from repro.sim import PipelinedRuntime
+
+#: VPU geometry shared by every scenario (the paper's 4-VPU data cache).
+RT = dict(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024)
+
+
+# ------------------------------------------------------------- scenarios
+def scen_cnn_paper():
+    """The paper's Listing-1 run: fused conv layer over a 32x32 RGB image,
+    worst-case 32-bit elements."""
+    return lower_cnn(CNNSpec(name="cnn-paper"))
+
+
+def scen_cnn_deep_int8():
+    """A deeper int8 CNN: fused front layer + two unfused
+    conv2d->leakyrelu->maxpool stages + GEMM classifier head, batch of 2."""
+    return lower_cnn(CNNSpec(name="cnn-deep-int8", h=24, w=24,
+                             width=ElemWidth.B, depth=2, classes=8, batch=2))
+
+
+def scen_decode(arch):
+    def build():
+        prog, _spec = decode_step_from_config(arch, scale=64, kv=16, layers=1)
+        return prog
+    return build
+
+
+def scen_moe_granite():
+    """Expert burst of granite's 8 active experts (top_k) over 4 tokens."""
+    prog, _spec = moe_burst_from_config("granite-moe-1b-a400m", scale=32)
+    return prog
+
+
+SCENARIOS = {
+    "cnn-paper": scen_cnn_paper,
+    "cnn-deep-int8": scen_cnn_deep_int8,
+    "decode-stablelm-3b": scen_decode("stablelm-3b"),
+    "decode-gemma2-9b": scen_decode("gemma2-9b"),
+    "moe-granite": scen_moe_granite,
+}
+
+
+# -------------------------------------------------------------- execution
+def _execute(prog, rt) -> tuple[ProgramRun, float]:
+    """Place (untimed) + issue (timed) one program; returns (run, seconds)."""
+    cop = ArcaneCoprocessor(runtime=rt)
+    addrs = place_program(cop, prog)
+    t0 = time.perf_counter()
+    issue_program(cop, prog, addrs)
+    return ProgramRun(prog=prog, cop=cop, addrs=addrs), \
+        time.perf_counter() - t0
+
+
+def run_scenario(name: str, *, report: bool = False) -> tuple[dict, dict]:
+    """Run one scenario on both schedulers, verify bit-identity against the
+    serial run and the numpy oracle, and return (row, metrics_report)."""
+    prog = SCENARIOS[name]()
+    ref = reference_images(prog)
+
+    run_s, _ = _execute(prog, CacheRuntime(**RT))
+    run_p, seconds = _execute(prog, PipelinedRuntime(**RT, metrics=report))
+
+    run_s.rt.cache.flush_all()
+    run_p.rt.cache.flush_all()
+    np.testing.assert_array_equal(
+        run_s.rt.memory.data, run_p.rt.memory.data,
+        err_msg=f"{name}: serial and pipelined memory images diverged")
+    for bname, arr in ref.items():
+        np.testing.assert_array_equal(
+            run_p.flushed_images()[bname], arr,
+            err_msg=f"{name}: buffer {bname} diverged from the numpy oracle")
+
+    serial = run_s.rt.stats.total_cycles
+    makespan = run_p.rt.sim_time
+    row = {
+        "scenario": name,
+        "width": prog.width.suffix,
+        "n_ops": prog.n_ops,
+        "n_buffers": len(prog.buffers),
+        "serial_cycles": serial,
+        "makespan": makespan,
+        "speedup": serial / makespan if makespan else float("inf"),
+        "instr_per_sec": prog.n_ops / seconds if seconds else float("inf"),
+        "verified": True,      # the asserts above gate reaching this line
+    }
+    mrep = run_p.rt.metrics_report() if report else {}
+    return row, mrep
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(
+        description="Lowered-model benchmark over the shared kernel IR")
+    p.add_argument("--scenarios", nargs="+", choices=sorted(SCENARIOS),
+                   default=sorted(SCENARIOS))
+    p.add_argument("--report", action="store_true",
+                   help="print stall-attribution + critical-path breakdowns")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write rows (+ metrics reports) as BENCH_models.json")
+    args = p.parse_args(argv)
+
+    # Sibling imports work whether this runs as a script (CI) or as the
+    # `benchmarks.bench_models` module.
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from common import bench_doc, write_bench_json
+    from fig4_speedup import print_metrics_report
+
+    rows = []
+    for name in args.scenarios:
+        row, mrep = run_scenario(name, report=args.report)
+        rows.append(row)
+        print(f"bench_models,{name},w={row['width']},ops={row['n_ops']},"
+              f"serial={row['serial_cycles']},makespan={row['makespan']},"
+              f"speedup={row['speedup']:.2f}x,verified={row['verified']}")
+        if args.report:
+            print_metrics_report(mrep, row["makespan"],
+                                 prefix=f"bench_models.{name}")
+            # each row carries its own metrics report (the envelope's
+            # top-level metrics_report slot holds a single report)
+            row["metrics_report"] = mrep
+
+    if args.out_json:
+        doc = bench_doc(
+            "bench_models",
+            config={"scenarios": list(args.scenarios), "rt": RT,
+                    "report": args.report},
+            rows=rows,
+            summary={"all_verified": all(r["verified"] for r in rows),
+                     "geomean_speedup": float(np.exp(np.mean(
+                         [np.log(r["speedup"]) for r in rows])))})
+        write_bench_json(args.out_json, doc)
+        print(f"bench_models,wrote,{args.out_json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,7 +45,8 @@ import time
 
 import numpy as np
 
-from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core import (ArcaneCoprocessor, ElemWidth, ProgramBuilder,
+                        issue_program, place_program)
 from repro.core.alias_index import brute_force_queries
 from repro.core.regions import clear_pair_memos
 from repro.sim import PipelinedRuntime
@@ -64,95 +65,94 @@ def _runtime(fast: bool, **kw) -> PipelinedRuntime:
 
 
 # ------------------------------------------------------------- scenarios
-def scenario_chain(n: int, fast: bool) -> dict:
-    """RAW chain: kernel i reads kernel i-1's destination."""
-    rt = _runtime(fast, n_vpus=4, queue_capacity=64)
-    cop = ArcaneCoprocessor(runtime=rt)
-    w = ElemWidth.W
-    rng = np.random.default_rng(0)
-    a = cop.place(rng.integers(-5, 5, (16, 16)).astype(np.int32), w)
-    bufs = [cop.malloc(16 * 16 * 4) for _ in range(8)]
-    prev = a
-    t0 = time.perf_counter()
+# Each scenario is a KernelProgram builder plus a runtime-knob assignment;
+# the shared IR turns the program into the same xmr/xmk train the old
+# hand-rolled drivers issued. Placement (host stores) stays untimed; the
+# clock starts at the first reservation (`issue_program`).
+
+def prog_chain(n: int):
+    """RAW chain: kernel i reads kernel i-1's destination (8 rotating
+    destination buffers, so WAR hazards recur every 8 instructions)."""
+    b = ProgramBuilder("chain", ElemWidth.W)
+    prev = b.buffer("a", 16, 16, init="random", seed=0, lo=-5, hi=5)
+    for j in range(8):
+        b.buffer(f"buf{j}", 16, 16)
     for i in range(n):
-        dst = bufs[i % 8]
-        cop._xmr(w, 0, prev, 16, 16, 16)
-        cop._xmr(w, 3, dst, 16, 16, 16)
-        cop._leakyrelu(w, 3, 0, alpha=0.5)
+        dst = f"buf{i % 8}"
+        b.op("leakyrelu", [b.full(prev)], b.full(dst), alpha=0.5)
         prev = dst
-    cop.barrier()
-    return _finish(cop, rt, n, t0)
+    return b.build()
 
 
-def scenario_alias(n: int, fast: bool) -> dict:
+def prog_alias(n: int):
     """Interleaved tall column strips of one 256x256 matrix: every bounding
     interval overlaps every other strip's, none of the footprints do."""
-    rt = _runtime(fast, n_vpus=8, vregs_per_vpu=64, queue_capacity=256,
-                  reuse=True, tiling=(4, 16))
-    cop = ArcaneCoprocessor(runtime=rt)
-    w = ElemWidth.W
-    rng = np.random.default_rng(1)
-    a = cop.place(rng.integers(-5, 5, (256, 256)).astype(np.int32), w)
-    out = cop.malloc(256 * 256 * 4)
-    t0 = time.perf_counter()
+    b = ProgramBuilder("alias", ElemWidth.W)
+    a = b.buffer("a", 256, 256, init="random", seed=1, lo=-5, hi=5)
+    out = b.buffer("out", 256, 256)
     for i in range(n):
         c0 = (i % 32) * 8
-        cop._xmr(w, 0, a + c0 * 4, 256, 256, 8)
-        cop._xmr(w, 3, out + c0 * 4, 256, 256, 8)
-        cop._leakyrelu(w, 3, 0, alpha=0.5)
-    cop.barrier()
-    return _finish(cop, rt, n, t0)
+        b.op("leakyrelu", [b.view(a, 256, 8, col0=c0)],
+             b.view(out, 256, 8, col0=c0), alpha=0.5)
+    return b.build()
 
 
-def scenario_stream(n: int, fast: bool) -> dict:
+def prog_stream(n: int):
     """Wide strips of a 256x1024 int8 matrix: row-heavy DMA trains."""
-    rt = _runtime(fast, n_vpus=8, vregs_per_vpu=64, queue_capacity=128,
-                  reuse=True, tiling=(8, 0))
-    cop = ArcaneCoprocessor(runtime=rt)
-    w = ElemWidth.B
-    rng = np.random.default_rng(2)
-    a = cop.place(rng.integers(-5, 5, (256, 1024)).astype(np.int8), w)
-    out = cop.malloc(256 * 1024)
-    t0 = time.perf_counter()
+    b = ProgramBuilder("stream", ElemWidth.B)
+    a = b.buffer("a", 256, 1024, init="random", seed=2, lo=-5, hi=5)
+    out = b.buffer("out", 256, 1024)
     for i in range(n):
         c0 = (i % 16) * 64
-        cop._xmr(w, 0, a + c0, 1024, 256, 64)
-        cop._xmr(w, 3, out + c0, 1024, 256, 64)
-        cop._leakyrelu(w, 3, 0, alpha=0.25)
-    cop.barrier()
-    return _finish(cop, rt, n, t0)
+        b.op("leakyrelu", [b.view(a, 256, 64, col0=c0)],
+             b.view(out, 256, 64, col0=c0), alpha=0.25)
+    return b.build()
 
 
-def scenario_gemm(n: int, fast: bool) -> dict:
+def prog_gemm(n: int):
     """Strip-mined GEMM: every strip re-reads the same B (reuse regime)."""
-    rt = _runtime(fast, n_vpus=8, vregs_per_vpu=64, queue_capacity=128,
-                  reuse=True, tiling=(4, 16))
-    cop = ArcaneCoprocessor(runtime=rt)
-    w = ElemWidth.W
-    rng = np.random.default_rng(3)
+    b = ProgramBuilder("gemm", ElemWidth.W)
     m, k, nn = 32, 96, 64
-    aA = cop.place(rng.integers(-4, 4, (16 * m, k)).astype(np.int32), w)
-    aB = cop.place(rng.integers(-4, 4, (k, nn)).astype(np.int32), w)
-    aC = cop.place(np.zeros((m, nn), dtype=np.int32), w)
-    out = cop.malloc(16 * m * nn * 4)
-    t0 = time.perf_counter()
+    a = b.buffer("a", 16 * m, k, init="random", seed=3, lo=-4, hi=4)
+    bb = b.buffer("b", k, nn, init="random", seed=4, lo=-4, hi=4)
+    c = b.buffer("c", m, nn)
+    out = b.buffer("out", 16 * m, nn)
     for i in range(n):
         s = i % 16
-        cop._xmr(w, 0, aA + s * m * k * 4, k, m, k)
-        cop._xmr(w, 1, aB, nn, k, nn)
-        cop._xmr(w, 2, aC, nn, m, nn)
-        cop._xmr(w, 3, out + s * m * nn * 4, nn, m, nn)
-        cop._gemm(w, 3, 0, 1, 2, alpha=1.0, beta=0.0)
-    cop.barrier()
-    return _finish(cop, rt, n, t0)
+        b.op("gemm",
+             [b.view(a, m, k, row0=s * m), b.full(bb), b.full(c)],
+             b.view(out, m, nn, row0=s * m), alpha=1.0, beta=0.0)
+    return b.build()
 
 
 SCENARIOS = {
-    "chain": scenario_chain,
-    "alias": scenario_alias,
-    "stream": scenario_stream,
-    "gemm": scenario_gemm,
+    "chain": prog_chain,
+    "alias": prog_alias,
+    "stream": prog_stream,
+    "gemm": prog_gemm,
 }
+
+#: Runtime knobs per scenario (the regimes PRs 1-4 made interesting).
+SCENARIO_RT = {
+    "chain": dict(n_vpus=4, queue_capacity=64),
+    "alias": dict(n_vpus=8, vregs_per_vpu=64, queue_capacity=256,
+                  reuse=True, tiling=(4, 16)),
+    "stream": dict(n_vpus=8, vregs_per_vpu=64, queue_capacity=128,
+                   reuse=True, tiling=(8, 0)),
+    "gemm": dict(n_vpus=8, vregs_per_vpu=64, queue_capacity=128,
+                 reuse=True, tiling=(4, 16)),
+}
+
+
+def _run_one(name: str, n: int, fast: bool) -> dict:
+    prog = SCENARIOS[name](n)       # build + validate untimed
+    rt = _runtime(fast, **SCENARIO_RT[name])
+    cop = ArcaneCoprocessor(runtime=rt)
+    addrs = place_program(cop, prog)
+    t0 = time.perf_counter()
+    issue_program(cop, prog, addrs)
+    return _finish(cop, rt, n, t0)
+
 
 #: Instruction counts per scale preset.
 SCALES = {"small": 96, "medium": 384, "large": 1024}
@@ -180,7 +180,6 @@ def _finish(cop, rt: PipelinedRuntime, n: int, t0: float) -> dict:
 
 def run_scenario(name: str, n: int, fast: bool, repeat: int) -> dict:
     """Best-of-``repeat`` timing (bit-identical rows; fastest wall clock)."""
-    fn = SCENARIOS[name]
     rows = []
     for _ in range(repeat):
         # No run inherits another's warm pairwise-decision memos — fast reps
@@ -189,9 +188,9 @@ def run_scenario(name: str, n: int, fast: bool, repeat: int) -> dict:
         clear_pair_memos()
         if not fast:
             with brute_force_queries():
-                rows.append(fn(n, fast=False))
+                rows.append(_run_one(name, n, fast=False))
         else:
-            rows.append(fn(n, fast=True))
+            rows.append(_run_one(name, n, fast=True))
     for r in rows[1:]:
         assert (r["makespan"], r["image_md5"]) == \
             (rows[0]["makespan"], rows[0]["image_md5"]), \

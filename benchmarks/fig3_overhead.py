@@ -11,8 +11,15 @@ compute / writeback cycle shares. Paper anchors:
 from __future__ import annotations
 
 from repro.core.encoding import ElemWidth
-from benchmarks.fig4_speedup import (arcane_cycles, metrics_report_point,
-                                     print_metrics_report)
+
+try:
+    from benchmarks.fig4_speedup import (arcane_cycles, metrics_report_point,
+                                         print_metrics_report)
+except ImportError:       # script invocation: siblings import by bare name
+    import sys
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from fig4_speedup import (arcane_cycles, metrics_report_point,
+                              print_metrics_report)
 
 
 def run(sizes=(16, 32, 64, 128, 256), lanes=(2, 4, 8), quiet=False,

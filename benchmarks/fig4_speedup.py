@@ -20,9 +20,8 @@ Paper anchors: int8 3×3 256² 8-lane ≈ 30×; int8 7×7 256² ≈ 84×; XCVPUL
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core import (ArcaneCoprocessor, ElemWidth, issue_program,
+                        place_program)
 from repro.core.isa import KernelCost
 from repro.core.vpu import VPUGeometry
 
@@ -49,36 +48,20 @@ def packed_simd_cycles(cost: KernelCost, width: ElemWidth) -> int:
     return int(mac_cycles + elem_cycles)
 
 
-def tiled_conv_layer(cop, width, aX, h, w, aF, k, aR):
-    """Issue the conv layer as column strips that fit the VPU register file
+def tiled_conv_layer(h: int, w: int, k: int, width: ElemWidth,
+                     vregs: int = 64, vlen: int = 1024):
+    """The conv layer as column strips that fit the VPU register file
     (exactly what the C-RT macro-kernel does for operands larger than the
     vector register capacity): input strips are strided ``xmr`` bindings
     (stride = image width), each strip is one xmk4 instruction, destination
-    strips write back through the strided 2D DMA."""
-    eb = width.nbytes
-    om, on = (h - k + 1) // 2, (w - k + 1) // 2
-    vlen = cop.rt.cache.vlen_bytes
-    vregs = cop.rt.cache.vregs_per_vpu
-    # lines for an input strip of win cols: ceil(3h*win*eb / vlen) (packed)
-    budget = vregs - 2 - (3 * k * k * eb + vlen - 1) // vlen
-    # find max out-strip width sw with input strip 2*sw+k-1 cols fitting
-    sw = on
-    while sw > 1:
-        win = 2 * sw + k - 1
-        in_lines = (3 * h * win * eb + vlen - 1) // vlen
-        out_lines = (om * sw * eb + vlen - 1) // vlen
-        if in_lines + out_lines <= budget:
-            break
-        sw = max(1, sw // 2)
-    for c0 in range(0, on, sw):
-        c1 = min(c0 + sw, on)
-        scols = c1 - c0
-        win = 2 * scols + k - 1
-        cop._xmr(width, 0, aX + 2 * c0 * eb, w, 3 * h, win)
-        cop._xmr(width, 1, aF, 0, 3 * k, k)
-        cop._xmr(width, 2, aR + c0 * eb, on, om, scols)
-        cop._conv_layer(width, 2, 0, 1)
-    cop.barrier()
+    strips write back through the strided 2D DMA. Since the IR refactor this
+    is :func:`repro.lower.lower_cnn` — the same strip-miner the model-level
+    benchmarks and examples use — returning the program instead of issuing
+    inline."""
+    from repro.lower import CNNSpec, lower_cnn
+    spec = CNNSpec(name=f"fig4-{width.suffix}{k}-{h}x{w}",
+                   h=h, w=w, k=k, width=width)
+    return lower_cnn(spec, vregs_per_vpu=vregs, vlen_bytes=vlen)
 
 
 def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
@@ -103,7 +86,6 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
     registers row-by-row inside one instruction, which our strip model
     conservatively replaces with more strips; the larger register file
     compensates — deviation noted in EXPERIMENTS §Paper-validation)."""
-    rng = np.random.default_rng(0)
     rt_kwargs = dict(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024, lanes=lanes)
     if scheduler == "pipelined":
         from repro.sim import PipelinedRuntime
@@ -117,17 +99,12 @@ def arcane_cycles(h: int, w: int, k: int, width: ElemWidth, lanes: int,
         cop = ArcaneCoprocessor(memory=None, **rt_kwargs)
     else:
         raise ValueError(f"unknown scheduler {scheduler!r}")
-    dt = {ElemWidth.B: np.int8, ElemWidth.H: np.int16,
-          ElemWidth.W: np.int32}[width]
-    X = rng.integers(-5, 5, (3 * h, w)).astype(dt)
-    F = rng.integers(-3, 3, (3 * k, k)).astype(dt)
-    aX, aF = cop.place(X, width), cop.place(F, width)
-    om, on = (h - k + 1) // 2, (w - k + 1) // 2
-    aR = cop.malloc(max(om * on * width.nbytes, 4))
+    prog = tiled_conv_layer(h, w, k, width)
+    addrs = place_program(cop, prog)    # host stores: untimed
     cop.rt.stats.reset()          # measure the offload path only
     import time as _time
     wall0 = _time.perf_counter()
-    tiled_conv_layer(cop, width, aX, h, w, aF, k, aR)
+    issue_program(cop, prog, addrs)
     wall = _time.perf_counter() - wall0
     s = cop.rt.stats
     total = cop.rt.sim_time if scheduler == "pipelined" else s.total_cycles

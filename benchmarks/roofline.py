@@ -114,9 +114,20 @@ def pick_hillclimb(rows) -> dict[str, dict]:
             "most_representative": rep}
 
 
-def main():
-    rows = run(quiet=True)
-    write_csv(rows)
+def main(argv=None):
+    import argparse
+    import sys
+    p = argparse.ArgumentParser(
+        description="Roofline extraction from dry-run artifacts")
+    p.add_argument("--dryrun-dir", default="results/dryrun",
+                   help="directory of dry-run JSON artifacts")
+    p.add_argument("--csv", default="results/roofline.csv",
+                   help="CSV output path")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write rows + hillclimb picks as BENCH_roofline.json")
+    args = p.parse_args(argv)
+    rows = run(args.dryrun_dir, quiet=True)
+    write_csv(rows, args.csv)
     for r in rows:
         print(f"roofline,{r['arch']}|{r['shape']},"
               f"{r['step_lower_bound_s']*1e6:.0f},"
@@ -125,6 +136,18 @@ def main():
     picks = pick_hillclimb(rows)
     for k, r in picks.items():
         print(f"roofline_pick,{k},{r['arch']}|{r['shape']}")
+    if args.out_json:
+        sys.path.insert(0, __file__.rsplit("/", 1)[0])
+        from common import bench_doc, write_bench_json
+        doc = bench_doc(
+            "roofline",
+            config={"dryrun_dir": args.dryrun_dir, "peak_flops": PEAK_FLOPS,
+                    "hbm_bw": HBM_BW, "ici_bw": ICI_BW},
+            rows=rows,
+            summary={"picks": {k: f"{r['arch']}|{r['shape']}"
+                               for k, r in picks.items()}})
+        write_bench_json(args.out_json, doc)
+        print(f"roofline,wrote,{args.out_json}")
     return rows
 
 

@@ -17,7 +17,13 @@ throughput in this reproduction (and on the TPU target):
 from __future__ import annotations
 
 from repro.core.encoding import ElemWidth
-from benchmarks.fig4_speedup import arcane_cycles, conv_cost
+
+try:
+    from benchmarks.fig4_speedup import arcane_cycles, conv_cost
+except ImportError:       # script invocation: siblings import by bare name
+    import sys
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from fig4_speedup import arcane_cycles, conv_cost
 
 CLOCK_HZ = 250e6
 PAPER_AREA_UM2 = {2: 2.88e6, 4: 3.03e6, 8: 3.34e6}

@@ -1,7 +1,8 @@
 """Pipelined C-RT demo: a batched CNN front-end scheduled two ways.
 
-Runs the same xmnmc program — a batch of four 3-channel conv layers followed
-by a GEMM classifier head over the pooled features — through
+Builds ONE xmnmc program through the shared kernel IR — a batch of four
+3-channel conv layers followed by a GEMM classifier head over the pooled
+features — and runs the identical tape through
 
   1. the serial C-RT (``CacheRuntime``): decode → allocate → compute →
      write-back, one kernel at a time, and
@@ -10,10 +11,12 @@ by a GEMM classifier head over the pooled features — through
      deferred write-backs drain on idle DMA ports.
 
 The kernel outputs are bit-identical (the two schedulers share the same
-phase steps); only the modeled cycles differ. The pipelined run also exports
-a Chrome ``trace_event`` JSON — load it at https://ui.perfetto.dev (or
-``chrome://tracing``) and look at one row per modeled resource: the eCPU,
-the cache lock, and each VPU's datapath and DMA port.
+phase steps) and both match the sequential numpy oracle
+(``repro.core.reference_images``); only the modeled cycles differ. The
+pipelined run also exports a Chrome ``trace_event`` JSON — load it at
+https://ui.perfetto.dev (or ``chrome://tracing``) and look at one row per
+modeled resource: the eCPU, the cache lock, and each VPU's datapath and DMA
+port.
 
 Usage::
 
@@ -23,39 +26,32 @@ import argparse
 
 import numpy as np
 
-from repro.core import ArcaneCoprocessor, ElemWidth
+from repro.core import (ArcaneCoprocessor, ElemWidth, ProgramBuilder,
+                        reference_images, run_program)
 from repro.sim import load_config
 
 
-def build_and_run(cop, *, batch=4, h=32, w=32, k=3, classes=10):
-    """Issue the batched conv + classifier program; returns host-visible results."""
-    rng = np.random.default_rng(0)
-    width = ElemWidth.W
+def build_program(*, batch=4, h=32, w=32, k=3, classes=10):
+    """The batched conv + classifier tape. Per image: one fused conv layer
+    (independent kernels, free to spread across VPUs) then a dependent GEMM
+    head consuming the deferred feature map."""
+    b = ProgramBuilder("pipelined-cnn", ElemWidth.W)
     om, on = (h - k + 1) // 2, (w - k + 1) // 2
-
-    images = [rng.integers(-8, 8, (3 * h, w), dtype=np.int32)
-              for _ in range(batch)]
-    filt = rng.integers(-4, 4, (3 * k, k), dtype=np.int32)
-    head = rng.integers(-3, 3, (on, classes), dtype=np.int32)
-
-    a_imgs = [cop.place(x, width) for x in images]
-    a_filt = cop.place(filt, width)
-    a_head = cop.place(head, width)
-    a_feat = [cop.malloc(om * on * 4) for _ in range(batch)]
-    a_out = [cop.malloc(om * classes * 4) for _ in range(batch)]
-
-    # One conv layer per image — independent kernels, free to spread across
-    # VPUs — then a dependent GEMM head consuming each deferred feature map.
+    b.buffer("filt", 3 * k, k, init="random", seed=1, lo=-4, hi=4)
+    b.buffer("head", on, classes, init="random", seed=2, lo=-3, hi=3)
     for i in range(batch):
-        cop._xmr_w(0, a_imgs[i], 0, 3 * h, w)
-        cop._xmr_w(1, a_filt, 0, 3 * k, k)
-        cop._xmr_w(2, a_feat[i], 0, om, on)
-        cop._conv_layer_w(2, 0, 1)               # feat_i = convlayer(img_i)
-        cop._xmr_w(3, a_head, 0, on, classes)
-        cop._xmr_w(4, a_out[i], 0, om, classes)
-        cop._gemm_w(4, 2, 3, 4, alpha=1.0, beta=0.0)   # out_i = feat_i @ head
-    cop.barrier()
-    return [cop.gather(a, om, classes, width) for a in a_out]
+        b.buffer(f"img{i}", 3 * h, w, init="random", seed=10 + i, lo=-8, hi=8)
+        b.buffer(f"feat{i}", om, on)
+        b.buffer(f"out{i}", om, classes)
+        b.op("conv_layer", [b.full(f"img{i}"), b.full("filt")],
+             b.full(f"feat{i}"),
+             comment=f"_conv_layer_w(m3, m0, m1)  "
+                     f"// feat{i} = convlayer(img{i})")
+        # dst doubles as the beta=0 accumulator (the Listing-1 GEMM idiom)
+        b.op("gemm", [b.full(f"feat{i}"), b.full("head"), b.full(f"out{i}")],
+             b.full(f"out{i}"), alpha=1.0, beta=0.0,
+             comment=f"_gemm_w(m3, m0, m1, m2)  // out{i} = feat{i} @ head")
+    return b.build()
 
 
 def main(argv=None):
@@ -73,16 +69,23 @@ def main(argv=None):
           f"({cfg.n_vpus} VPUs x {cfg.lanes} lanes, "
           f"{cfg.llc_bytes // 1024} KiB LLC)")
 
+    prog = build_program(batch=args.batch)
+
     cop_s = ArcaneCoprocessor(runtime=cfg.make_runtime("serial"))
-    out_s = build_and_run(cop_s, batch=args.batch)
+    run_s = run_program(cop_s, prog)
+    out_s = [run_s.gather(f"out{i}") for i in range(args.batch)]
     serial_cycles = cop_s.rt.stats.total_cycles
 
     cop_p = ArcaneCoprocessor(runtime=cfg.make_runtime("pipelined"))
-    out_p = build_and_run(cop_p, batch=args.batch)
+    run_p = run_program(cop_p, prog)
+    out_p = [run_p.gather(f"out{i}") for i in range(args.batch)]
     rep = cop_p.rt.report()
 
     identical = all(np.array_equal(a, b) for a, b in zip(out_s, out_p))
     assert identical, "schedulers disagree — bit-identical contract broken"
+    ref = reference_images(prog)
+    assert all(np.array_equal(out_p[i], ref[f"out{i}"])
+               for i in range(args.batch)), "schedulers disagree with oracle"
 
     print(f"kernels run: {rep.kernels_run}  (batch of {args.batch}: "
           f"conv layer + GEMM head each)")
@@ -123,7 +126,7 @@ def main(argv=None):
                   f"({seg['cycles']} cycles)")
 
     path = cop_p.rt.tracer.dump(args.trace)
-    print(f"\nserial == pipelined results ✓   chrome trace -> {path}")
+    print(f"\nserial == pipelined == numpy oracle ✓   chrome trace -> {path}")
     print("(the trace now carries counter tracks — AT free slots, per-VPU "
           "occupancy — and flow arrows from DMA tiles to the compute pieces "
           "they gate)")

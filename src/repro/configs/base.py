@@ -14,8 +14,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax.numpy as jnp
-
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -116,10 +114,12 @@ class ModelConfig:
 
     @property
     def pdtype(self):
+        import jax.numpy as jnp   # deferred: shape-only users stay jax-free
         return jnp.dtype(self.param_dtype)
 
     @property
     def cdtype(self):
+        import jax.numpy as jnp
         return jnp.dtype(self.compute_dtype)
 
     @property

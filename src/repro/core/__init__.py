@@ -19,6 +19,10 @@ from repro.core.hazards import DependencyTracker, KernelDeps
 from repro.core.runtime import CacheRuntime, PhaseStats
 from repro.core.vpu import VPU, VPUGeometry, ResidentMatrix
 from repro.core.bridge import ArcaneCoprocessor, Bridge, XifResult
+from repro.core.program import (Buffer, KernelOp, KernelProgram,
+                                ProgramBuilder, ProgramError, ProgramRun,
+                                View, PROGRAM_VERSION, issue_program,
+                                place_program, reference_images, run_program)
 
 __all__ = [
     "ElemWidth", "InstrWord", "Offload", "Operands", "encode_xmk", "encode_xmr",
@@ -30,5 +34,7 @@ __all__ = [
     "LineBusy", "MainMemory", "ResourceStall", "AddressTable", "RegionKind",
     "RegionStatus", "DependencyTracker", "KernelDeps", "CacheRuntime",
     "PhaseStats", "VPU", "VPUGeometry", "ResidentMatrix", "ArcaneCoprocessor",
-    "Bridge", "XifResult",
+    "Bridge", "XifResult", "Buffer", "KernelOp", "KernelProgram",
+    "ProgramBuilder", "ProgramError", "ProgramRun", "View", "PROGRAM_VERSION",
+    "issue_program", "place_program", "reference_images", "run_program",
 ]

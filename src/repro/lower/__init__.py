@@ -1,0 +1,41 @@
+"""Model→tape lowering frontend: real workloads onto the ARCANE simulator.
+
+This package closes the gap between the repo's model zoo and its simulator:
+it lowers model-shaped workloads into :class:`repro.core.KernelProgram`
+tapes — the validated xmr/xmk IR both C-RT schedulers execute through
+``repro.core.run_program`` — with every operand strip-mined to the VPU
+register-file budget, exactly like the C-RT macro-kernel does for operands
+larger than the vector register capacity.
+
+Three frontends:
+
+* :mod:`repro.lower.cnn` — the paper's CNN workload (Listing 1): a fused
+  3-channel ``xmk4`` conv layer, optional deeper ``conv2d → leakyrelu →
+  maxpool`` stages, optional GEMM classifier head; any depth, batch, and
+  element width.
+* :mod:`repro.lower.transformer` — a transformer decode step (QKV / scores /
+  attention / output / MLP projections as a GEMM-dominated tape with
+  residual accumulation through GeMM's β path) and an MoE expert burst,
+  with shapes taken from the ``repro.configs`` registry scaled down to
+  cache-feasible dimensions.
+* :mod:`repro.lower.tracefile` — versioned JSONL serialization (TBM-style),
+  so scenarios can be authored, diffed, and replayed without Python.
+
+Every lowered program carries Listing-1-style provenance comments on its ops
+and checks numerically against ``repro.core.reference_images`` (the
+sequential numpy oracle) — see ``tests/test_lower.py`` and
+``benchmarks/bench_models.py``.
+"""
+from repro.lower.cnn import CNNSpec, lower_cnn
+from repro.lower.tracefile import (TraceFormatError, dumps, load_program,
+                                   loads, save_program)
+from repro.lower.transformer import (DecodeSpec, MoESpec,
+                                     decode_step_from_config,
+                                     lower_decode_step, lower_moe_burst,
+                                     moe_burst_from_config)
+
+__all__ = [
+    "CNNSpec", "lower_cnn", "DecodeSpec", "MoESpec", "lower_decode_step",
+    "lower_moe_burst", "decode_step_from_config", "moe_burst_from_config",
+    "TraceFormatError", "dumps", "loads", "load_program", "save_program",
+]

@@ -1,32 +1,37 @@
 """Differential scheduler fuzzing: random kernel programs, serial oracle.
 
-The generator draws random programs over the whole kernel library (gemm /
-conv2d / conv_layer / maxpool / leakyrelu) with random shapes, strided
-sub-matrix views, aliased destinations, and random scheduler knobs
-(row_chunk / dataflow / tiling / reuse / VPU geometry / queue capacity), then
-asserts for every program:
+The generator draws random :class:`repro.core.KernelProgram` tapes over the
+whole kernel library (gemm / conv2d / conv_layer / maxpool / leakyrelu) with
+random shapes, strided sub-matrix views, aliased destinations, and random
+scheduler knobs (row_chunk / dataflow / tiling / reuse / VPU geometry /
+queue capacity), then asserts for every program:
 
-  * **bit-identity** — the pipelined schedule's final memory image equals the
-    serial scheduler's, byte for byte (after an LLC flush);
+  * **bit-identity** — the pipelined schedule's final memory image equals
+    the serial scheduler's, byte for byte (after an LLC flush), and both
+    match ``repro.core.reference_images`` — the sequential numpy oracle that
+    executes the same tape with no cache, scheduler, or DMA model at all;
   * **makespan sanity** — the modeled makespan is bounded below by every
     single-server resource's busy cycles (the critical-path lower bound our
     resource model implies) and above by the serial sum of phases;
   * **no deadlock** — the event loop drains the queue, every admitted kernel
-    retires, the Address Table empties, and per-resource busy intervals never
-    overlap.
+    retires, the Address Table empties, and per-resource busy intervals
+    never overlap.
 
-The core harness is plain seeded numpy (so it runs without the dev extra);
-a hypothesis wrapper adds shrinking when hypothesis is installed. Locally the
-loop covers 200 generated programs; under ``HYPOTHESIS_PROFILE=ci`` it is
-capped to keep tier-1 inside the CI time budget.
+Programs are built and executed exclusively through the shared IR
+(``repro.core.program``) — the replay loop that used to live here is now
+``repro.core.run_program``, the same entry point the benchmarks and
+examples use. The core harness is plain seeded numpy (so it runs without
+the dev extra); a hypothesis wrapper adds shrinking when hypothesis is
+installed. Locally the loop covers 200 generated programs; under
+``HYPOTHESIS_PROFILE=ci`` it is capped to keep tier-1 inside the CI budget.
 """
 import os
 
 import numpy as np
 import pytest
 
-from repro.core import ArcaneCoprocessor, ElemWidth
-from repro.core.matrix import np_dtype
+from repro.core import (ArcaneCoprocessor, Buffer, ElemWidth, KernelOp,
+                        KernelProgram, View, reference_images, run_program)
 from repro.core.runtime import CacheRuntime
 from repro.sim import PipelinedRuntime
 
@@ -38,27 +43,31 @@ N_PROGRAMS = 25 if os.environ.get("HYPOTHESIS_PROFILE") == "ci" else 200
 
 
 # ------------------------------------------------------------ generation
-def _draw_view(rng, pool, rows, cols, fresh_bias=0.5):
-    """A (buf, r0, c0, rows, cols) view of shape (rows, cols): a random
-    sub-rectangle of an existing pool buffer when one fits (strided /
-    aliasing reads), else a fresh placed buffer (sometimes oversized, so the
-    view is strided even then)."""
+def _name(i: int) -> str:
+    return f"b{i}"
+
+
+def _draw_view(rng, pool, rows, cols, fresh_bias=0.5) -> View:
+    """A view of shape (rows, cols): a random sub-rectangle of an existing
+    pool buffer when one fits (strided / aliasing reads), else a fresh
+    placed buffer (sometimes oversized, so the view is strided even then)."""
     fits = [i for i, (br, bc, _) in enumerate(pool)
             if br >= rows and bc >= cols]
     if fits and rng.random() > fresh_bias:
         i = int(rng.choice(fits))
         br, bc, _ = pool[i]
-        return (i, int(rng.integers(0, br - rows + 1)),
-                int(rng.integers(0, bc - cols + 1)), rows, cols)
+        return View(buf=_name(i), rows=rows, cols=cols,
+                    row0=int(rng.integers(0, br - rows + 1)),
+                    col0=int(rng.integers(0, bc - cols + 1)))
     pad_r = int(rng.integers(0, 3))
     pad_c = int(rng.integers(0, 3))
     pool.append((rows + pad_r, cols + pad_c, "placed"))
-    i = len(pool) - 1
-    return (i, int(rng.integers(0, pad_r + 1)),
-            int(rng.integers(0, pad_c + 1)), rows, cols)
+    return View(buf=_name(len(pool) - 1), rows=rows, cols=cols,
+                row0=int(rng.integers(0, pad_r + 1)),
+                col0=int(rng.integers(0, pad_c + 1)))
 
 
-def _draw_dst(rng, pool, rows, cols):
+def _draw_dst(rng, pool, rows, cols) -> View:
     """Destination view: usually a fresh exact buffer, sometimes an aliasing
     view over an existing buffer (WAW/WAR pressure)."""
     fits = [i for i, (br, bc, _) in enumerate(pool)
@@ -66,10 +75,24 @@ def _draw_dst(rng, pool, rows, cols):
     if fits and rng.random() < 0.35:
         i = int(rng.choice(fits))
         br, bc, _ = pool[i]
-        return (i, int(rng.integers(0, br - rows + 1)),
-                int(rng.integers(0, bc - cols + 1)), rows, cols)
+        return View(buf=_name(i), rows=rows, cols=cols,
+                    row0=int(rng.integers(0, br - rows + 1)),
+                    col0=int(rng.integers(0, bc - cols + 1)))
     pool.append((rows, cols, "dst"))
-    return (len(pool) - 1, 0, 0, rows, cols)
+    return View(buf=_name(len(pool) - 1), rows=rows, cols=cols)
+
+
+def _freeze(name: str, seed: int, width: ElemWidth, pool, ops
+            ) -> KernelProgram:
+    """Assemble the drawn pool/ops into a validated KernelProgram (placed
+    buffers get per-buffer random seeds; dst buffers stay zeros)."""
+    buffers = tuple(
+        Buffer(name=_name(i), rows=r, cols=c,
+               init="random" if origin == "placed" else "zeros",
+               seed=seed * 4096 + i, lo=-9, hi=9)
+        for i, (r, c, origin) in enumerate(pool))
+    return KernelProgram(name=name, width=width, buffers=buffers,
+                         ops=tuple(ops)).validate()
 
 
 def gen_program(seed: int) -> dict:
@@ -82,48 +105,52 @@ def gen_program(seed: int) -> dict:
         kind = KERNELS[int(rng.integers(len(KERNELS)))]
         if kind == "leakyrelu":
             r, c = int(rng.integers(3, 11)), int(rng.integers(3, 11))
-            ops.append({"kind": kind,
-                        "srcs": [_draw_view(rng, pool, r, c)],
-                        "dst": _draw_dst(rng, pool, r, c),
-                        "alpha": float(rng.integers(-8, 9)) / 4})
+            ops.append(KernelOp(
+                kernel=kind, srcs=(_draw_view(rng, pool, r, c),),
+                dst=_draw_dst(rng, pool, r, c),
+                params={"alpha": float(rng.integers(-8, 9)) / 4}))
         elif kind == "maxpool":
             r, c = int(rng.integers(4, 11)), int(rng.integers(4, 11))
             win = int(rng.integers(2, min(r, c, 3) + 1))
             stride = int(rng.integers(1, win + 1))
             om, on = (r - win) // stride + 1, (c - win) // stride + 1
-            ops.append({"kind": kind,
-                        "srcs": [_draw_view(rng, pool, r, c)],
-                        "dst": _draw_dst(rng, pool, om, on),
-                        "win": win, "stride": stride})
+            ops.append(KernelOp(
+                kernel=kind, srcs=(_draw_view(rng, pool, r, c),),
+                dst=_draw_dst(rng, pool, om, on),
+                params={"stride": stride, "win_size": win}))
         elif kind == "gemm":
             m, k, n = (int(rng.integers(2, 9)) for _ in range(3))
-            ops.append({"kind": kind,
-                        "srcs": [_draw_view(rng, pool, m, k),
-                                 _draw_view(rng, pool, k, n),
-                                 _draw_view(rng, pool, m, n)],
-                        "dst": _draw_dst(rng, pool, m, n),
-                        "alpha": float(rng.integers(1, 5)) / 2,
-                        "beta": float(rng.integers(-2, 3)) / 2})
+            ops.append(KernelOp(
+                kernel=kind,
+                srcs=(_draw_view(rng, pool, m, k),
+                      _draw_view(rng, pool, k, n),
+                      _draw_view(rng, pool, m, n)),
+                dst=_draw_dst(rng, pool, m, n),
+                params={"alpha": float(rng.integers(1, 5)) / 2,
+                        "beta": float(rng.integers(-2, 3)) / 2}))
         elif kind == "conv2d":
             r, c = int(rng.integers(5, 11)), int(rng.integers(5, 11))
             km, kn = int(rng.integers(2, 4)), int(rng.integers(2, 4))
-            ops.append({"kind": kind,
-                        "srcs": [_draw_view(rng, pool, r, c),
-                                 _draw_view(rng, pool, km, kn)],
-                        "dst": _draw_dst(rng, pool, r - km + 1, c - kn + 1)})
+            ops.append(KernelOp(
+                kernel=kind,
+                srcs=(_draw_view(rng, pool, r, c),
+                      _draw_view(rng, pool, km, kn)),
+                dst=_draw_dst(rng, pool, r - km + 1, c - kn + 1)))
         else:  # conv_layer
             h, w = int(rng.integers(6, 10)), int(rng.integers(6, 11))
             kk = int(rng.integers(2, 4))
             om, on = (h - kk + 1) // 2, (w - kk + 1) // 2
-            ops.append({"kind": kind,
-                        "srcs": [_draw_view(rng, pool, 3 * h, w),
-                                 _draw_view(rng, pool, 3 * kk, kk)],
-                        "dst": _draw_dst(rng, pool, om, on)})
+            ops.append(KernelOp(
+                kernel=kind,
+                srcs=(_draw_view(rng, pool, 3 * h, w),
+                      _draw_view(rng, pool, 3 * kk, kk)),
+                dst=_draw_dst(rng, pool, om, on)))
     dataflow = bool(rng.random() < 0.8)
     tiling = (None, (0, 4), (3, 5), (2, 0))[int(rng.integers(4))] \
         if dataflow else None
     return {
-        "seed": seed, "width": width, "pool": pool, "ops": ops,
+        "seed": seed,
+        "program": _freeze(f"fuzz{seed}", seed, width, pool, ops),
         "rt": {"n_vpus": int(rng.choice((1, 2, 4))),
                "vregs_per_vpu": int(rng.choice((16, 32))),
                "vlen_bytes": int(rng.choice((256, 512))),
@@ -151,13 +178,15 @@ def gen_chain_program(seed: int, n_ops: int = 64) -> dict:
     for _ in range(n_ops):
         pool.append((rows + 1, cols + 2, "dst"))     # oversized: strided dst
         dst = len(pool) - 1
-        ops.append({"kind": "leakyrelu",
-                    "srcs": [(prev, 0, 0, rows, cols)],
-                    "dst": (dst, 0, 0, rows, cols),
-                    "alpha": float(rng.integers(-8, 9)) / 4})
+        ops.append(KernelOp(
+            kernel="leakyrelu",
+            srcs=(View(buf=_name(prev), rows=rows, cols=cols),),
+            dst=View(buf=_name(dst), rows=rows, cols=cols),
+            params={"alpha": float(rng.integers(-8, 9)) / 4}))
         prev = dst
     return {
-        "seed": seed, "width": width, "pool": pool, "ops": ops,
+        "seed": seed,
+        "program": _freeze(f"chain{seed}", seed, width, pool, ops),
         "rt": {"n_vpus": int(rng.choice((2, 4))),
                "vregs_per_vpu": 32,
                "vlen_bytes": int(rng.choice((256, 512))),
@@ -170,72 +199,61 @@ def gen_chain_program(seed: int, n_ops: int = 64) -> dict:
     }
 
 
-def _replay(prog: dict, cop) -> None:
-    """Issue ``prog``'s instruction stream on an existing coprocessor."""
-    width = prog["width"]
-    eb = width.nbytes
-    dt = np_dtype(width)
-    data_rng = np.random.default_rng(prog["seed"] + 1)
-    addrs, dims = [], []
-    for rows, cols, origin in prog["pool"]:
-        if origin == "placed":
-            arr = data_rng.integers(-9, 9, (rows, cols)).astype(dt)
-            addrs.append(cop.place(arr, width))
-        else:
-            addrs.append(cop.malloc(rows * cols * eb))
-        dims.append((rows, cols))
-
-    def bind(reg, view):
-        buf, r0, c0, rows, cols = view
-        bc = dims[buf][1]
-        addr = addrs[buf] + (r0 * bc + c0) * eb
-        cop._xmr(width, reg, addr, bc, rows, cols)
-
-    for op in prog["ops"]:
-        for reg, view in enumerate(op["srcs"]):
-            bind(reg, view)
-        bind(3, op["dst"])
-        if op["kind"] == "leakyrelu":
-            cop._leakyrelu(width, 3, 0, alpha=op["alpha"])
-        elif op["kind"] == "maxpool":
-            cop._maxpool(width, 3, 0, op["stride"], op["win"])
-        elif op["kind"] == "gemm":
-            cop._gemm(width, 3, 0, 1, 2, alpha=op["alpha"], beta=op["beta"])
-        elif op["kind"] == "conv2d":
-            cop._conv2d(width, 3, 0, 1)
-        else:
-            cop._conv_layer(width, 3, 0, 1)
-    cop.barrier()
-
-
-def run_program(prog: dict, scheduler: str):
-    """Execute ``prog`` on a fresh runtime; returns the coprocessor."""
+def _run(prog: dict, scheduler: str):
+    """Execute the program on a fresh runtime through the shared IR entry
+    point; returns the :class:`repro.core.ProgramRun`."""
     if scheduler == "serial":
-        cop = ArcaneCoprocessor(runtime=CacheRuntime(**prog["rt"]))
+        rt = CacheRuntime(**prog["rt"])
     else:
-        cop = ArcaneCoprocessor(runtime=PipelinedRuntime(
-            **prog["rt"], **prog["pipe"]))
-    _replay(prog, cop)
-    return cop
+        rt = PipelinedRuntime(**prog["rt"], **prog["pipe"])
+    return run_program(rt, prog["program"])
 
 
 # -------------------------------------------------------------- the oracle
+def check_identity(program: KernelProgram, rt_kwargs: dict,
+                   pipe_kwargs: dict, tag: str = "") -> None:
+    """Serial ≡ pipelined ≡ functional-oracle bit-identity for one program
+    (shared with the lowered-program corpus in test_lower.py)."""
+    prog = {"program": program, "rt": rt_kwargs, "pipe": pipe_kwargs}
+    run_s = _run(prog, "serial")
+    run_p = _run(prog, "pipelined")
+    run_s.rt.cache.flush_all()
+    run_p.rt.cache.flush_all()
+    np.testing.assert_array_equal(run_s.rt.memory.data, run_p.rt.memory.data,
+                                  err_msg=f"{tag}: memory diverged")
+    ref = reference_images(program)
+    imgs = run_p.flushed_images()
+    for name, arr in ref.items():
+        np.testing.assert_array_equal(
+            imgs[name], arr,
+            err_msg=f"{tag}: buffer {name} diverged from the numpy oracle")
+
+
 def check_program(seed: int, gen=gen_program):
     prog = gen(seed)
-    cop_s = run_program(prog, "serial")
-    cop_p = run_program(prog, "pipelined")
-    rt = cop_p.rt
+    run_s = _run(prog, "serial")
+    run_p = _run(prog, "pipelined")
+    rt = run_p.rt
+    n_ops = prog["program"].n_ops
 
     # bit-identity of the full memory image (LLC flushed: write-back cache)
-    cop_s.rt.cache.flush_all()
+    run_s.rt.cache.flush_all()
     rt.cache.flush_all()
-    np.testing.assert_array_equal(cop_s.rt.memory.data, rt.memory.data,
+    np.testing.assert_array_equal(run_s.rt.memory.data, rt.memory.data,
                                   err_msg=f"seed {seed}: memory diverged")
+
+    # functional oracle: the scheduled result equals a sequential numpy
+    # execution of the same tape (no cache/DMA model at all)
+    ref = reference_images(prog["program"])
+    imgs = run_p.flushed_images()
+    for name, arr in ref.items():
+        np.testing.assert_array_equal(
+            imgs[name], arr,
+            err_msg=f"seed {seed}: buffer {name} diverged from the oracle")
 
     # no deadlock: queue drained, every kernel retired, AT empty
     assert not rt.queue, f"seed {seed}: queue not drained"
-    assert rt.stats.kernels_run == len(prog["ops"]) \
-        == cop_s.rt.stats.kernels_run
+    assert rt.stats.kernels_run == n_ops == run_s.rt.stats.kernels_run
     assert rt.at.live_count() == 0
     assert not rt.tracker.runnable()     # no dangling dependency state
 
@@ -250,8 +268,8 @@ def check_program(seed: int, gen=gen_program):
             f"seed {seed}: {r.name} busier than the makespan"
         if ivs:
             assert ivs[-1].end <= rt.sim_time
-    assert rt.sim_time >= len(prog["ops"]) * rt.geometry.decode_cycles
-    assert rt.sim_time <= cop_s.rt.stats.total_cycles, \
+    assert rt.sim_time >= n_ops * rt.geometry.decode_cycles
+    assert rt.sim_time <= run_s.rt.stats.total_cycles, \
         f"seed {seed}: pipelined makespan exceeded the serial schedule"
 
 
@@ -299,7 +317,7 @@ def test_differential_metrics_identity():
             cops[metrics] = cop = ArcaneCoprocessor(
                 runtime=PipelinedRuntime(**prog["rt"], **prog["pipe"],
                                          metrics=metrics))
-            _replay(prog, cop)
+            run_program(cop, prog["program"])
         on, off = cops[True].rt, cops[False].rt
         assert on.sim_time == off.sim_time, f"seed {seed}: makespan diverged"
         for r_on, r_off in zip(on._all_resources(), off._all_resources()):
@@ -326,15 +344,17 @@ def test_generator_covers_the_space():
     tilings, reuses, dataflows, wakeups = set(), set(), set(), set()
     for seed in range(80):
         prog = gen_program(seed)
-        widths.add(prog["width"])
+        program = prog["program"]
+        by_name = {b.name: b for b in program.buffers}
+        widths.add(program.width)
         tilings.add(prog["pipe"]["tiling"])
         reuses.add(prog["pipe"]["reuse"])
         dataflows.add(prog["pipe"]["dataflow"])
         wakeups.add(prog["pipe"]["wakeup"])
-        for op in prog["ops"]:
-            kinds.add(op["kind"])
-            if prog["pool"][op["dst"][0]][2] == "placed" \
-                    or op["dst"][1] or op["dst"][2]:
+        for op in program.ops:
+            kinds.add(op.kernel)
+            if by_name[op.dst.buf].init == "random" \
+                    or op.dst.row0 or op.dst.col0:
                 aliased_dst += 1
     assert kinds == set(KERNELS)
     assert len(widths) == 3

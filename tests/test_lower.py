@@ -1,0 +1,168 @@
+"""The model→tape lowering frontends: golden tapes, knob sweeps, traces.
+
+Three layers of assurance on every lowered program:
+
+  * **golden tape** — the flushed memory image after simulation matches the
+    sequential numpy oracle (``reference_images``) bit for bit, and the
+    CNN front layer additionally matches the jnp ``conv_layer_ref`` model
+    oracle (lowering → simulation → flush reproduces the model's numbers);
+  * **scheduler bit-identity** — lowered programs are a differential corpus:
+    serial ≡ pipelined across scheduler-knob combinations (reusing the
+    fuzzer's ``check_identity`` harness);
+  * **trace round-trip** — ``loads(dumps(prog)) == prog`` for every lowered
+    program, and malformed trace files fail with ``TraceFormatError`` naming
+    the offending line.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ElemWidth, ProgramError, reference_images, run_program
+from repro.core.runtime import CacheRuntime
+from repro.lower import (CNNSpec, DecodeSpec, MoESpec, TraceFormatError,
+                         decode_step_from_config, dumps, loads, load_program,
+                         lower_cnn, lower_decode_step, lower_moe_burst,
+                         moe_burst_from_config, save_program)
+
+from test_differential import check_identity
+
+RT = dict(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024)
+
+
+def corpus():
+    """The lowered-program corpus the knob sweeps and trace tests run over."""
+    return [
+        lower_cnn(CNNSpec(name="cnn32")),
+        lower_cnn(CNNSpec(name="cnn-deep", h=24, w=24, width=ElemWidth.B,
+                          depth=2, classes=8, batch=2)),
+        # small register file: forces multi-strip decomposition
+        lower_cnn(CNNSpec(name="cnn-strips", h=32, w=32),
+                  vregs_per_vpu=16, vlen_bytes=512),
+        lower_decode_step(DecodeSpec(name="dec", d=24, ff=64, kv=16,
+                                     layers=2, vocab=32)),
+        lower_moe_burst(MoESpec(name="moe", d=24, ff=64, tokens=4,
+                                experts=3)),
+    ]
+
+
+# ------------------------------------------------------------ golden tapes
+@pytest.mark.parametrize("prog", corpus(), ids=lambda p: p.name)
+def test_flushed_memory_matches_numpy_oracle(prog):
+    ref = reference_images(prog)
+    run = run_program(CacheRuntime(**RT), prog)
+    imgs = run.flushed_images()
+    for name, arr in ref.items():
+        np.testing.assert_array_equal(imgs[name], arr,
+                                      err_msg=f"{prog.name}/{name}")
+
+
+def test_cnn_front_layer_matches_jnp_model_oracle():
+    """Lowering → simulation → flush reproduces the jnp model's conv layer
+    (the paper's fused conv+pool+ReLU) numerically."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.convlayer.ref import conv_layer_ref
+
+    spec = CNNSpec(name="golden", h=16, w=20, k=3)
+    prog = lower_cnn(spec, vregs_per_vpu=16, vlen_bytes=512)  # multi-strip
+    run = run_program(CacheRuntime(**RT), prog)
+    x = prog.buffer("x0").materialize(prog.width)
+    f = prog.buffer("f0").materialize(prog.width)
+    ref = np.asarray(conv_layer_ref(
+        jnp.asarray(x.reshape(3, spec.h, spec.w)),
+        jnp.asarray(f.reshape(1, 3, spec.k, spec.k))))[0]
+    np.testing.assert_array_equal(run.flushed_images()["l0_out0"], ref)
+
+
+def test_decode_residual_beta_path():
+    """The decode step's residual adds run through GeMM's β-accumulate; the
+    layer output therefore differs from the MLP branch alone and equals the
+    oracle's sum."""
+    prog = lower_decode_step(DecodeSpec(name="resid", d=16, ff=32, kv=8))
+    ref = reference_images(prog)
+    x1 = ref["x1"]
+    h2 = ref["h2_0"]
+    xa = ref["xa0"]
+    np.testing.assert_array_equal(
+        x1, (h2.astype(np.int64) + xa).astype(x1.dtype))
+
+
+# ------------------------------------------------- scheduler bit-identity
+KNOBS = [
+    dict(row_chunk=0, dataflow=True, tiling=None, reuse=False, wakeup=True),
+    dict(row_chunk=3, dataflow=True, tiling=(2, 4), reuse=True, wakeup=True),
+    dict(row_chunk=8, dataflow=False, tiling=None, reuse=False, wakeup=False),
+]
+
+
+@pytest.mark.parametrize("knobs", KNOBS,
+                         ids=["plain", "tiled-reuse", "legacy-rescan"])
+def test_lowered_corpus_serial_pipelined_identity(knobs):
+    for prog in corpus():
+        check_identity(prog, RT, knobs, tag=prog.name)
+
+
+# ------------------------------------------------------- configs frontend
+def test_decode_from_config_shapes():
+    prog, spec = decode_step_from_config("stablelm-3b", scale=64, kv=16)
+    assert spec.d >= 8 and spec.d % 4 == 0 and spec.ff % 4 == 0
+    assert prog.name == "decode-stablelm-3b"
+    # executes + matches the oracle like any other program
+    run = run_program(CacheRuntime(**RT), prog)
+    ref = reference_images(prog)
+    np.testing.assert_array_equal(run.flushed_images()["x1"], ref["x1"])
+
+
+def test_moe_from_config_uses_top_k_and_rejects_dense():
+    from repro.configs import get_config
+    prog, spec = moe_burst_from_config("granite-moe-1b-a400m", scale=32)
+    assert spec.experts == get_config("granite-moe-1b-a400m").moe.top_k
+    assert prog.n_ops == 3 * spec.experts
+    with pytest.raises(ProgramError):
+        moe_burst_from_config("stablelm-3b")
+
+
+def test_degenerate_shapes_rejected():
+    with pytest.raises(ProgramError):
+        lower_cnn(CNNSpec(h=3, w=3, k=3))   # conv output < pool window
+    with pytest.raises(ProgramError):
+        lower_decode_step(DecodeSpec(d=1))
+    with pytest.raises(ProgramError):
+        lower_moe_burst(MoESpec(experts=0))
+
+
+# --------------------------------------------------------- trace files
+@pytest.mark.parametrize("prog", corpus(), ids=lambda p: p.name)
+def test_trace_round_trip(prog):
+    assert loads(dumps(prog)) == prog
+
+
+def test_trace_file_round_trip(tmp_path):
+    prog = lower_cnn(CNNSpec(name="file", h=16, w=16))
+    path = save_program(prog, str(tmp_path / "prog.jsonl"))
+    assert load_program(path) == prog
+
+
+def test_malformed_traces_fail_with_line_numbers(tmp_path):
+    good = dumps(lower_cnn(CNNSpec(name="m", h=16, w=16)))
+    lines = good.splitlines()
+
+    with pytest.raises(TraceFormatError, match="no header"):
+        loads("")
+    with pytest.raises(TraceFormatError, match="line 1"):
+        loads("not json\n")
+    with pytest.raises(TraceFormatError, match="before the"):
+        loads("\n".join(lines[1:]))            # header dropped
+    with pytest.raises(TraceFormatError, match="duplicate header"):
+        loads(lines[0] + "\n" + good)
+    with pytest.raises(TraceFormatError, match="format"):
+        loads(lines[0].replace("arcane-kernel-trace", "other-trace"))
+    with pytest.raises(TraceFormatError, match="version"):
+        loads(lines[0].replace('"version": 1', '"version": 99'))
+    with pytest.raises(TraceFormatError, match="unknown record"):
+        loads(lines[0] + '\n{"record": "mystery"}\n')
+    with pytest.raises(TraceFormatError, match="bad op record"):
+        loads(lines[0] + '\n{"record": "op", "kernel": "gemm"}\n')
+    # structurally fine but semantically invalid -> ProgramError from
+    # validation, still raised at load time (never mid-schedule)
+    bad = good.replace('"kernel": "conv_layer"', '"kernel": "fft"')
+    with pytest.raises(ProgramError):
+        loads(bad)

@@ -1,0 +1,184 @@
+"""KernelProgram IR: validation, builder, serialization, execution contract.
+
+The IR is the single construction path for every driver in the repo (fuzzer,
+benchmarks, examples), so its guarantees are tested directly: a program that
+validates runs identically on both runtimes and matches the sequential numpy
+oracle; a program that cannot run fails at validation with a ProgramError
+naming the problem, never mid-schedule.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ArcaneCoprocessor, Buffer, ElemWidth, KernelOp,
+                        KernelProgram, ProgramBuilder, ProgramError, View,
+                        issue_program, place_program, reference_images,
+                        run_program)
+from repro.core.runtime import CacheRuntime
+from repro.sim import PipelinedRuntime
+
+
+def small_program(width=ElemWidth.W) -> KernelProgram:
+    b = ProgramBuilder("small", width)
+    b.buffer("x", 6, 8, init="random", seed=3, lo=-6, hi=6)
+    b.buffer("y", 6, 8)
+    b.buffer("p", 3, 4)
+    b.op("leakyrelu", [b.full("x")], b.full("y"), alpha=0.5)
+    b.op("maxpool", [b.full("y")], b.full("p"), stride=2, win_size=2)
+    return b.build()
+
+
+# ------------------------------------------------------------- validation
+def test_builder_builds_and_validates():
+    prog = small_program()
+    assert prog.n_ops == 2 and len(prog.buffers) == 3
+    assert prog.buffer("x").seed == 3
+
+
+def test_duplicate_buffer_name_rejected():
+    b = ProgramBuilder("dup", ElemWidth.W)
+    b.buffer("x", 4, 4)
+    with pytest.raises(ProgramError, match="x"):
+        b.buffer("x", 4, 4)
+
+
+def test_unknown_kernel_rejected():
+    b = ProgramBuilder("bad", ElemWidth.W)
+    b.buffer("x", 4, 4)
+    with pytest.raises(ProgramError):
+        b.op("fft", [b.full("x")], b.full("x"))
+        b.build()
+
+
+def test_view_out_of_bounds_rejected():
+    b = ProgramBuilder("oob", ElemWidth.W)
+    b.buffer("x", 4, 4)
+    b.buffer("y", 4, 4)
+    b.op("leakyrelu", [b.view("x", 4, 4, col0=1)], b.full("y"), alpha=0.5)
+    with pytest.raises(ProgramError):
+        b.build()
+
+
+def test_wrong_source_count_rejected():
+    b = ProgramBuilder("srcs", ElemWidth.W)
+    b.buffer("x", 4, 4)
+    b.buffer("y", 4, 4)
+    b.op("gemm", [b.full("x")], b.full("y"))
+    with pytest.raises(ProgramError):
+        b.build()
+
+
+def test_unknown_param_rejected():
+    b = ProgramBuilder("param", ElemWidth.W)
+    b.buffer("x", 4, 4)
+    b.buffer("y", 4, 4)
+    b.op("leakyrelu", [b.full("x")], b.full("y"), gamma=2.0)
+    with pytest.raises(ProgramError, match="gamma"):
+        b.build()
+
+
+def test_dst_shape_mismatch_rejected():
+    b = ProgramBuilder("shape", ElemWidth.W)
+    b.buffer("x", 6, 6)
+    b.buffer("p", 6, 6)
+    # maxpool 2x2/2 over 6x6 -> 3x3, not 6x6
+    b.op("maxpool", [b.full("x")], b.full("p"), stride=2, win_size=2)
+    with pytest.raises(ProgramError):
+        b.build()
+
+
+def test_fx_overflow_rejected_at_validation():
+    b = ProgramBuilder("fx", ElemWidth.W)
+    b.buffer("x", 4, 4)
+    b.buffer("y", 4, 4)
+    b.op("leakyrelu", [b.full("x")], b.full("y"), alpha=200.0)  # > Q8.8 max
+    with pytest.raises(ProgramError):
+        b.build()
+
+
+def test_data_buffer_shape_checked():
+    with pytest.raises(ProgramError):
+        KernelProgram(name="bad", width=ElemWidth.W,
+                      buffers=(Buffer(name="d", rows=3, cols=3, init="data",
+                                      data=((1, 0), (0, 1))),),
+                      ops=()).validate()
+
+
+# ----------------------------------------------------------- serialization
+def test_obj_round_trip():
+    prog = small_program()
+    clone = KernelProgram.from_obj(prog.to_obj())
+    assert clone == prog
+    assert clone.validate() is clone
+
+
+def test_from_obj_malformed():
+    with pytest.raises(ProgramError):
+        KernelProgram.from_obj({"name": "x"})
+    obj = small_program().to_obj()
+    obj["ops"][0]["srcs"] = [["x", 0]]     # truncated view record
+    with pytest.raises(ProgramError):
+        KernelProgram.from_obj(obj)
+
+
+# --------------------------------------------------------------- execution
+@pytest.mark.parametrize("width", [ElemWidth.B, ElemWidth.H, ElemWidth.W])
+def test_run_program_matches_oracle_both_runtimes(width):
+    prog = small_program(width)
+    ref = reference_images(prog)
+    for rt in (CacheRuntime(n_vpus=2), PipelinedRuntime(n_vpus=2)):
+        run = run_program(rt, prog)
+        imgs = run.flushed_images()
+        for name, arr in ref.items():
+            np.testing.assert_array_equal(imgs[name], arr, err_msg=name)
+        assert run.gather("p").shape == (3, 4)
+
+
+def test_place_issue_split():
+    """place_program is untimed layout; issue_program is the whole offload.
+    Splitting them equals run_program bit-for-bit."""
+    prog = small_program()
+    cop = ArcaneCoprocessor(runtime=PipelinedRuntime(n_vpus=2))
+    addrs = place_program(cop, prog)
+    assert set(addrs) == {b.name for b in prog.buffers}
+    issue_program(cop, prog, addrs)
+    ref = reference_images(prog)
+    cop.rt.cache.flush_all()
+    for name, a in addrs.items():
+        buf = prog.buffer(name)
+        nb = buf.nbytes(prog.width)
+        img = (cop.rt.memory.data[a:a + nb].copy()
+               .view(np.int32).reshape(buf.rows, buf.cols))
+        np.testing.assert_array_equal(img, ref[name], err_msg=name)
+
+
+def test_gemm_beta_accumulates():
+    """The β-path (residual idiom): dst = alpha*A@B + beta*C."""
+    b = ProgramBuilder("beta", ElemWidth.W)
+    b.data("a", np.arange(4).reshape(2, 2))
+    b.data("i", np.eye(2, dtype=np.int64))
+    b.data("c", np.full((2, 2), 10, dtype=np.int64))
+    b.buffer("y", 2, 2)
+    b.op("gemm", [b.full("a"), b.full("i"), b.full("c")], b.full("y"),
+         alpha=1.0, beta=1.0)
+    prog = b.build()
+    run = run_program(CacheRuntime(n_vpus=1), prog)
+    np.testing.assert_array_equal(
+        run.gather("y"), np.arange(4).reshape(2, 2) + 10)
+
+
+def test_strided_views_execute():
+    """Sub-rectangle views bind as strided xmr reservations; the quadrant
+    writes land in the right place and nowhere else."""
+    b = ProgramBuilder("strided", ElemWidth.W)
+    b.buffer("x", 8, 8, init="random", seed=7, lo=-5, hi=5)
+    b.buffer("y", 8, 8)
+    b.op("leakyrelu", [b.view("x", 4, 4, row0=2, col0=3)],
+         b.view("y", 4, 4, row0=1, col0=1), alpha=0.25)
+    prog = b.build()
+    ref = reference_images(prog)
+    run = run_program(PipelinedRuntime(n_vpus=2), prog)
+    got = run.flushed_images()["y"]
+    np.testing.assert_array_equal(got, ref["y"])
+    mask = np.ones((8, 8), bool)
+    mask[1:5, 1:5] = False
+    assert (got[mask] == 0).all()    # untouched region stays zeros
