@@ -1,0 +1,181 @@
+"""Serving-under-load benchmark: latency percentiles over offered load.
+
+The closed-batch benchmarks measure one tape's makespan; this driver runs
+the continuous-batching scenario (``repro.sim.serving``) — Poisson request
+arrivals posted onto an open runtime session, slot admission, per-request
+prefill tapes, batched decode steps — and reports what a *client* sees:
+
+* **TTFT** (time to first token, modeled cycles): arrival → prefill
+  completion, queue wait included. p50 and p99 per load point.
+* **TPOT** (time per output token): mean inter-token gap after the first.
+* **goodput** — completed-request tokens per kilo-cycle — plus wall-clock
+  tokens/sec for the simulator-throughput view.
+
+The sweep crosses offered load (mean inter-arrival gap) × runtime
+configuration (VPU count, reuse/tiling knobs), so the knee of the latency
+curve is visible per config: at low load p99 TTFT ≈ an unloaded prefill,
+and it inflates as queueing dominates.
+
+``--floor N`` is the CI gate: exit nonzero if p99 TTFT **at the lowest
+offered load** exceeds ``N`` cycles for any config — low-load latency is
+arrival-pattern-insensitive, so a committed ceiling only trips on a real
+scheduling regression. Rows carry ``conservation_ok`` (per-kernel stall
+accounting must add up across idle gaps) and the document uses the shared
+``BENCH_*.json`` envelope; CI validates both.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.sim import PipelinedRuntime
+from repro.sim.serving import (ServingConfig, ServingDriver, bursty_arrivals,
+                               poisson_arrivals)
+from repro.sim.trace import Tracer
+
+#: Request-count presets (requests per load point).
+SCALES = {"small": 6, "medium": 16, "large": 40}
+
+#: Mean inter-arrival gaps (cycles), highest gap = lowest load first. The
+#: floor gate reads the first entry's rows.
+LOADS = {"small": [60_000, 20_000, 6_000],
+         "medium": [60_000, 20_000, 6_000, 2_000],
+         "large": [80_000, 30_000, 10_000, 3_000, 1_000]}
+
+#: Runtime configurations swept per load point.
+CONFIGS = {
+    "4vpu": dict(n_vpus=4, queue_capacity=16),
+    "8vpu-reuse": dict(n_vpus=8, vregs_per_vpu=64, queue_capacity=16,
+                       reuse=True, tiling=(4, 16)),
+}
+
+
+def _runtime(**kw) -> PipelinedRuntime:
+    # Metrics ON (unlike bench_scheduler): the RequestLog feeds TTFT/TPOT
+    # through the runtime's SchedulerMetrics, and CI checks conservation.
+    kw.setdefault("tracer", Tracer(enabled=False))
+    kw.setdefault("metrics", True)
+    return PipelinedRuntime(**kw)
+
+
+def run_point(config: str, mean_gap: int, n_requests: int, *,
+              arrivals: str = "poisson", seed: int = 0) -> dict:
+    """One (config, load) cell: fresh runtime, fresh driver, one run."""
+    cfg = ServingConfig(kv_max=24, slots=4)
+    if arrivals == "poisson":
+        reqs = poisson_arrivals(n_requests, mean_gap,
+                                prompt_range=(3, 8), new_range=(2, 5),
+                                seed=seed)
+    else:
+        reqs = bursty_arrivals(n_requests, max(2, n_requests // 3),
+                               mean_gap * 3, prompt_range=(3, 8),
+                               new_range=(2, 5), seed=seed)
+    rt = _runtime(**CONFIGS[config])
+    drv = ServingDriver(rt, cfg)
+    t0 = time.perf_counter()
+    s = drv.run(reqs)
+    seconds = time.perf_counter() - t0
+    makespan = drv.session.now()
+    return {
+        "config": config,
+        "arrivals": arrivals,
+        "mean_gap": mean_gap,
+        "requests": s["requests"],
+        "finished": s["finished"],
+        "tokens": s["tokens_generated"],
+        "steps": drv.steps_issued,
+        "ttft_p50": s["ttft_p50"],
+        "ttft_p99": s["ttft_p99"],
+        "tpot_p50": s["tpot_p50"],
+        "tpot_p99": s["tpot_p99"],
+        "queue_wait_p99": s["queue_wait_p99"],
+        "goodput_tokens_per_kcycle": s["goodput_tokens_per_kcycle"],
+        "makespan": makespan,
+        "seconds": seconds,
+        "tokens_per_wall_sec": (s["tokens_generated"] / seconds
+                                if seconds else float("inf")),
+        "conservation_ok": rt.metrics.stalls.conservation_ok(),
+    }
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(
+        description="Continuous-batching serving benchmark "
+                    "(offered load x runtime config)")
+    p.add_argument("--scale", choices=sorted(SCALES), default="medium",
+                   help="requests per load point "
+                        f"({', '.join(f'{k}={v}' for k, v in SCALES.items())})")
+    p.add_argument("--configs", nargs="+", choices=sorted(CONFIGS),
+                   default=sorted(CONFIGS))
+    p.add_argument("--arrivals", choices=("poisson", "bursty"),
+                   default="poisson")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--floor", type=float, default=None,
+                   help="fail (exit 1) if p99 TTFT at the lowest offered "
+                        "load exceeds this many cycles for any config")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write all rows + summary (BENCH_serving.json)")
+    args = p.parse_args(argv)
+
+    n = SCALES[args.scale]
+    loads = LOADS[args.scale]
+    rows, failed = [], []
+    for config in args.configs:
+        for gap in loads:
+            r = run_point(config, gap, n, arrivals=args.arrivals,
+                          seed=args.seed)
+            rows.append(r)
+            print(f"bench_serving,{config},{args.arrivals},gap={gap},"
+                  f"ttft_p50={r['ttft_p50']:.0f},ttft_p99={r['ttft_p99']:.0f},"
+                  f"tpot_p50={r['tpot_p50']:.0f},"
+                  f"goodput={r['goodput_tokens_per_kcycle']},"
+                  f"tok/s={r['tokens_per_wall_sec']:.0f},"
+                  f"conserved={r['conservation_ok']}")
+            if not r["conservation_ok"]:
+                failed.append((config, gap, "stall conservation violated"))
+        low = next(r for r in rows
+                   if r["config"] == config and r["mean_gap"] == loads[0])
+        if args.floor is not None and low["ttft_p99"] > args.floor:
+            failed.append((config, loads[0],
+                           f"low-load ttft_p99 {low['ttft_p99']:.0f} "
+                           f"> floor {args.floor:.0f}"))
+
+    summary = {
+        c: {"low_load_ttft_p99":
+                next(r["ttft_p99"] for r in rows
+                     if r["config"] == c and r["mean_gap"] == loads[0]),
+            "high_load_ttft_p99":
+                next(r["ttft_p99"] for r in rows
+                     if r["config"] == c and r["mean_gap"] == loads[-1]),
+            "peak_goodput_tokens_per_kcycle":
+                max(r["goodput_tokens_per_kcycle"] for r in rows
+                    if r["config"] == c)}
+        for c in args.configs
+    }
+
+    if args.out_json:
+        # Same trick as bench_scheduler: make `common` importable whether
+        # this runs as a script or as the `benchmarks.bench_serving` module.
+        sys.path.insert(0, __file__.rsplit("/", 1)[0])
+        from common import bench_doc, write_bench_json
+        doc = bench_doc(
+            "bench_serving",
+            config={"scale": args.scale, "requests_per_point": n,
+                    "loads": loads, "configs": list(args.configs),
+                    "arrivals": args.arrivals, "seed": args.seed,
+                    "floor": args.floor},
+            rows=rows, summary=summary)
+        write_bench_json(args.out_json, doc)
+        print(f"bench_serving,json,{args.out_json}")
+
+    if failed:
+        for config, gap, why in failed:
+            print(f"bench_serving,FAIL,{config},gap={gap},{why}",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,8 +59,9 @@ def main(argv=None):
     p.add_argument("--config", default="arcane-default",
                    help="builtin config name or YAML path (default: "
                         "arcane-default; try arcane-8vpu)")
-    p.add_argument("--trace", default="pipelined_cnn_trace.json",
-                   help="Chrome trace_event JSON output path")
+    p.add_argument("--trace", default="out/pipelined_cnn_trace.json",
+                   help="Chrome trace_event JSON output path "
+                        "(default: the gitignored out/ directory)")
     p.add_argument("--batch", type=int, default=4)
     args = p.parse_args(argv)
 

@@ -23,6 +23,7 @@ from repro.core.program import (Buffer, KernelOp, KernelProgram,
                                 ProgramBuilder, ProgramError, ProgramRun,
                                 View, PROGRAM_VERSION, issue_program,
                                 place_program, reference_images, run_program)
+from repro.core.session import IssueHandle, RuntimeSession
 
 __all__ = [
     "ElemWidth", "InstrWord", "Offload", "Operands", "encode_xmk", "encode_xmr",
@@ -37,4 +38,5 @@ __all__ = [
     "Bridge", "XifResult", "Buffer", "KernelOp", "KernelProgram",
     "ProgramBuilder", "ProgramError", "ProgramRun", "View", "PROGRAM_VERSION",
     "issue_program", "place_program", "reference_images", "run_program",
+    "IssueHandle", "RuntimeSession",
 ]

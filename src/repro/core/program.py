@@ -419,14 +419,22 @@ def _as_cop(rt_or_cop):
     return ArcaneCoprocessor(runtime=rt_or_cop)
 
 
-def place_program(rt_or_cop, prog: KernelProgram) -> dict[str, int]:
+def place_program(rt_or_cop, prog: KernelProgram,
+                  prior: Optional[dict[str, int]] = None) -> dict[str, int]:
     """Place every buffer of ``prog`` into simulated main memory (host-store
     for data/random images, bare allocation for zeros destinations); returns
     the name→address map. Split out of :func:`run_program` so throughput
-    benchmarks can keep placement outside the timed region."""
+    benchmarks can keep placement outside the timed region.
+
+    ``prior`` maps already-placed buffer names to their addresses (shared
+    weights, a request's KV buffers carried across step programs): those are
+    reused as-is — neither re-allocated nor re-initialised, so state written
+    by earlier programs survives — and the returned map merges both."""
     cop = _as_cop(rt_or_cop)
-    addrs: dict[str, int] = {}
+    addrs: dict[str, int] = dict(prior) if prior else {}
     for b in prog.buffers:
+        if b.name in addrs:
+            continue
         arr = b.materialize(prog.width)
         if arr is None:
             addrs[b.name] = cop.malloc(b.nbytes(prog.width))
@@ -467,17 +475,22 @@ def issue_program(rt_or_cop, prog: KernelProgram, addrs: dict[str, int],
 
 def run_program(rt_or_cop, prog: KernelProgram, *,
                 validate: bool = True, barrier: bool = True) -> ProgramRun:
-    """The single entry point both runtimes consume programs through:
-    validate, place buffers, issue the tape, barrier. ``rt_or_cop`` is a
-    :class:`~repro.core.runtime.CacheRuntime`, a
+    """The single entry point both runtimes consume programs through — now a
+    thin wrapper over a *closed* :class:`~repro.core.session.RuntimeSession`:
+    issue everything at t0, drain. A closed session keeps the legacy batch
+    discipline (queue backpressure drains eagerly), so this is bit-identical
+    to the pre-session path; the differential fuzzer pins that down.
+    ``rt_or_cop`` is a :class:`~repro.core.runtime.CacheRuntime`, a
     :class:`~repro.sim.PipelinedRuntime`, or an already-wrapped
     :class:`~repro.core.bridge.ArcaneCoprocessor`."""
+    # Function-level import: session imports this module's helpers.
+    from repro.core.session import RuntimeSession
     cop = _as_cop(rt_or_cop)
-    if validate:
-        prog.validate(cop.rt.library)
-    addrs = place_program(cop, prog)
-    issue_program(cop, prog, addrs, barrier=barrier)
-    return ProgramRun(prog=prog, cop=cop, addrs=addrs)
+    sess = RuntimeSession(cop, open_loop=False, validate=validate)
+    h = sess.issue(prog)
+    if barrier:
+        sess.drain()
+    return ProgramRun(prog=prog, cop=cop, addrs=h.addrs)
 
 
 # ----------------------------------------------------------------- oracle

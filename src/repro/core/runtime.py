@@ -21,10 +21,11 @@ feeds the Fig. 3 reproduction benchmark directly.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import time
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.address_table import AddressTable, RegionKind
 from repro.core.alias_index import AliasIndex
@@ -157,6 +158,25 @@ class CacheRuntime:
         # consolidation DMA appends (vpu, cycles) here — the transfer runs on
         # the port of the VPU *holding* the resident, not the dispatch VPU.
         self._wb_segments: Optional[list[tuple[int, int]]] = None
+        # ---- re-entrant session protocol (see repro.core.session) ----
+        # The serial clock is modeled-cycles-so-far plus injected idle (the
+        # gaps between a drain finishing and the next posted arrival).
+        self._session_idle = 0
+        self._session_posts: list[tuple[int, int, Callable]] = []
+        self._post_seq = itertools.count()
+        # Re-entrancy guards: completion callbacks may issue new kernels from
+        # *inside* a drain. ``_running`` stops the serial fixpoint loop from
+        # nesting; ``_in_loop`` is the pipelined scheduler's event-loop flag
+        # (defined here so shared helpers can consult it either way).
+        self._running = False
+        self._in_loop = False
+        self._session_open = False
+        # Issue capture + completion watchers: a session wraps issue_program
+        # with a capture hook so it learns the kernel ids a program decoded
+        # into, and registers per-kernel callbacks fired exactly once when
+        # the kernel retires (serial _run_one or pipelined compute_done).
+        self._issue_capture: Optional[Callable[[int], None]] = None
+        self._retire_watchers: dict[int, list[Callable[[int], None]]] = {}
 
     # ================================================================ decoder
     def decode(self, off: Offload) -> None:
@@ -230,6 +250,11 @@ class CacheRuntime:
         self.stats.preamble_cycles += self.geometry.decode_cycles
         self.stats.preamble_s += time.perf_counter() - t0
         self.metrics.inc("kernels.decoded")
+        if self._issue_capture is not None:
+            # Capture at decode time (not after issue_program returns):
+            # queue backpressure can retire early kernels of a long program
+            # mid-issue, and their completion watchers must already exist.
+            self._issue_capture(deps.kernel_id)
 
     @staticmethod
     def _xmr_stride(ops) -> int:
@@ -261,17 +286,28 @@ class CacheRuntime:
         return best
 
     def run_pending(self) -> None:
-        """Drain the kernel queue respecting the dependency DAG."""
-        progress = True
-        while self.queue and progress:
-            progress = False
-            for _ in range(len(self.queue)):
-                qk = self.queue.popleft()
-                if self.tracker.ready(qk.deps.kernel_id):
-                    self._run_one(qk)
-                    progress = True
-                else:
-                    self.queue.append(qk)
+        """Drain the kernel queue respecting the dependency DAG.
+
+        Re-entrant calls (a completion watcher issuing new kernels from
+        inside ``_run_one``) return immediately: the outer fixpoint loop
+        re-checks the queue every pass, so nested work is picked up without
+        recursing."""
+        if self._running:
+            return
+        self._running = True
+        try:
+            progress = True
+            while self.queue and progress:
+                progress = False
+                for _ in range(len(self.queue)):
+                    qk = self.queue.popleft()
+                    if self.tracker.ready(qk.deps.kernel_id):
+                        self._run_one(qk)
+                        progress = True
+                    else:
+                        self.queue.append(qk)
+        finally:
+            self._running = False
 
     def _run_one(self, qk: QueuedKernel) -> None:
         t0 = time.perf_counter()
@@ -303,6 +339,7 @@ class CacheRuntime:
             bins={"cache_lock": self.geometry.schedule_cycles,
                   "dma_wait": alloc.dma_cycles,
                   "drain": alloc.wb_cycles + retire_wb})
+        self._notify_retired(qk.deps.kernel_id, self.session_now())
 
     # ------------------------------------------------- shared scheduler steps
     # The serial scheduler above and repro.sim.pipeline.PipelinedRuntime both
@@ -566,10 +603,10 @@ class CacheRuntime:
         """Write back deferred dirty results and drop clean residents,
         releasing their AT destination regions — all of them (``barrier``),
         or just enough to free ``need_slots`` AT slots (capacity-pressure
-        relief: residency affinity of the rest survives). Only sound once the
-        kernel queue is empty (pending readers re-fetch from memory
-        afterwards — the consolidation lands the bytes first, so this is a
-        pure timing cost)."""
+        relief: residency affinity of the rest survives). Pending readers of
+        a drained resident re-fetch from memory afterwards — the
+        consolidation lands the bytes first, so draining under a non-empty
+        queue is a pure timing cost, not a correctness hazard."""
         for phys_id in list(self.resident):
             if need_slots is not None and self.at.free_slots() >= need_slots:
                 return
@@ -602,7 +639,12 @@ class CacheRuntime:
         if need <= 0 or self.at.free_slots() >= need:
             return
         self.run_pending()
-        if self.at.free_slots() < need and not self.queue:
+        # ``self._running``: a completion watcher is decoding new kernels
+        # from inside a drain (the run_pending above was a guarded no-op, so
+        # the queue may be non-empty) — the kernel that fired the watcher has
+        # fully retired, so draining deferred residents is sound (see
+        # _drain_deferred_residents: readers re-fetch landed bytes).
+        if self.at.free_slots() < need and (not self.queue or self._running):
             self._drain_deferred_residents(need_slots=need)
         if self.at.free_slots() < need:
             raise KernelError(
@@ -617,6 +659,61 @@ class CacheRuntime:
         if self.queue:
             raise RuntimeError("kernel queue not drained — dependency deadlock?")
         self._drain_deferred_residents()
+
+    # ============================================================== sessions
+    # The re-entrant session protocol (repro.core.session.RuntimeSession is
+    # the user-facing wrapper). The serial runtime has no event timeline, so
+    # its clock is "modeled cycles so far plus injected idle": issuing at a
+    # future time first drains queued work (work-conserving — the hardware
+    # would not sit on runnable kernels), then pads the clock with idle.
+    def session_now(self) -> int:
+        """Current sim time of this runtime's session clock."""
+        return self._session_idle + self.stats.total_cycles
+
+    def session_post(self, t: int, fn: Callable[[int], None]) -> None:
+        """Inject an external event (e.g. a request arrival): ``fn(now)`` is
+        called when the session clock reaches ``t`` (clamped to now) during
+        a later :meth:`session_advance`/:meth:`session_drain`."""
+        if not callable(fn):
+            raise TypeError(f"session_post payload must be callable, got "
+                            f"{type(fn).__name__}")
+        heapq.heappush(self._session_posts,
+                       (max(int(t), self.session_now()),
+                        next(self._post_seq), fn))
+
+    def _session_pad(self, t: int) -> None:
+        """Advance the clock to ``t``: run queued work first (its cycles are
+        busy time, not idle), then pad the remainder with idle."""
+        self.run_pending()
+        now = self.session_now()
+        if t > now:
+            self._session_idle += t - now
+
+    def _service_posts(self, until: Optional[int]) -> None:
+        while self._session_posts and (until is None
+                                       or self._session_posts[0][0] <= until):
+            t, _, fn = heapq.heappop(self._session_posts)
+            self._session_pad(t)
+            fn(self.session_now())
+            self.run_pending()
+
+    def session_advance(self, until: int) -> None:
+        """Service every posted event due by ``until`` (in time order, each
+        followed by a drain of the work it issued), then pad to ``until``."""
+        self._service_posts(until)
+        self._session_pad(until)
+
+    def session_drain(self) -> None:
+        """Run the session to completion: service all remaining posts (and
+        any they chain), then barrier."""
+        self._service_posts(None)
+        self.barrier()
+
+    def _notify_retired(self, kid: int, t: int) -> None:
+        """Fire the completion watchers registered for kernel ``kid`` —
+        exactly once per kernel, at its retire point on either scheduler."""
+        for cb in self._retire_watchers.pop(kid, ()):
+            cb(t)
 
     def alias_queries_served(self) -> int:
         """AliasIndex queries answered across the scheduler stack (profiling:

@@ -2,7 +2,10 @@
 
 Layout:
   * :mod:`repro.sim.events`   — deterministic event queue + resource timelines
+    (+ :class:`Timeline`, the open-ended clock external events post onto)
   * :mod:`repro.sim.pipeline` — :class:`PipelinedRuntime` (overlapped phases)
+  * :mod:`repro.sim.serving`  — continuous-batching workload driver over the
+    open-loop session API (arrivals, slots, prefill/decode tapes)
   * :mod:`repro.sim.config`   — YAML configs with ``extends`` composition
   * :mod:`repro.sim.trace`    — Chrome ``trace_event`` export
   * :mod:`repro.sim.metrics`  — stall attribution, critical path, typed
@@ -15,25 +18,32 @@ kernel outputs are bit-identical; only the modeled timing differs.
 from repro.sim.config import (ConfigError, SimConfig, builtin_config_path,
                               deep_merge, load_config, load_raw)
 from repro.sim.events import (ChunkTrain, Event, EventQueue, Interval,
-                              Resource, TileTrain, interleave_blocks,
-                              row_chunks, split_proportional, tile_entries)
+                              Resource, TileTrain, Timeline,
+                              interleave_blocks, row_chunks,
+                              split_proportional, tile_entries)
 from repro.sim.metrics import (METRICS_SCHEMA_VERSION, STALL_BINS, Activity,
                                ActivityLog, Counter, CPSegment, Gauge,
                                Histogram, KernelStall, MetricsError,
-                               MetricsRegistry, SchedulerMetrics, StallTable,
+                               MetricsRegistry, RequestLog, RequestRecord,
+                               SchedulerMetrics, StallTable,
                                summarize_critical_path)
 from repro.sim.pipeline import PipelinedRuntime, PipelineReport, ReuseEntry
+from repro.sim.serving import (Request, ServingConfig, ServingDriver,
+                               bursty_arrivals, poisson_arrivals)
 from repro.sim.trace import (PHASES, CounterRecord, FlowRecord, TraceRecord,
                              Tracer)
 
 __all__ = [
     "ConfigError", "SimConfig", "builtin_config_path", "deep_merge",
     "load_config", "load_raw", "ChunkTrain", "Event", "EventQueue",
-    "Interval", "Resource", "TileTrain", "interleave_blocks", "row_chunks",
-    "split_proportional", "tile_entries", "PipelinedRuntime",
-    "PipelineReport", "ReuseEntry", "PHASES", "TraceRecord", "Tracer",
+    "Interval", "Resource", "TileTrain", "Timeline", "interleave_blocks",
+    "row_chunks", "split_proportional", "tile_entries", "PipelinedRuntime",
+    "PipelineReport", "ReuseEntry", "Request", "ServingConfig",
+    "ServingDriver", "bursty_arrivals", "poisson_arrivals",
+    "PHASES", "TraceRecord", "Tracer",
     "CounterRecord", "FlowRecord", "METRICS_SCHEMA_VERSION", "STALL_BINS",
     "Activity", "ActivityLog", "Counter", "CPSegment", "Gauge", "Histogram",
-    "KernelStall", "MetricsError", "MetricsRegistry", "SchedulerMetrics",
-    "StallTable", "summarize_critical_path",
+    "KernelStall", "MetricsError", "MetricsRegistry", "RequestLog",
+    "RequestRecord", "SchedulerMetrics", "StallTable",
+    "summarize_critical_path",
 ]

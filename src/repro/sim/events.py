@@ -80,6 +80,46 @@ class EventQueue:
             yield self.pop()
 
 
+class Timeline(EventQueue):
+    """Open-ended event timeline: a persistent :class:`EventQueue` plus the
+    current simulation clock.
+
+    The closed-batch scheduler built a fresh queue per drain and ran it to
+    empty; a :class:`Timeline` instead lives for the whole session, so events
+    can be injected from *outside* the event loop — request arrivals posted at
+    future sim times while the clock advances — and the loop can stop at an
+    arbitrary ``until`` bound with work still in flight. ``now`` is the time
+    of the last processed event (monotonically non-decreasing; the scheduler
+    owns advancing it). External events carry a callback payload under the
+    reserved kind ``"external"`` and are invoked by the scheduler's event
+    loop when their time comes.
+    """
+
+    #: Event kind reserved for externally injected events (payload is a
+    #: ``fn(t)`` callback invoked by the scheduler loop at the event's time).
+    EXTERNAL = "external"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.now = 0
+
+    def advance_clock(self, t: int) -> int:
+        """Move the clock forward to ``t`` (never backward); returns ``now``."""
+        if t > self.now:
+            self.now = int(t)
+        return self.now
+
+    def post(self, time: int, fn) -> Event:
+        """Inject an external event (e.g. a request arrival) at sim time
+        ``time``. Times in the past are clamped to ``now`` — the event then
+        fires at the next loop step, which is as early as an arrival that
+        already happened can be serviced."""
+        if not callable(fn):
+            raise TypeError(f"external event payload must be callable, got "
+                            f"{type(fn).__name__}")
+        return self.push(max(int(time), self.now), self.EXTERNAL, fn)
+
+
 @dataclasses.dataclass
 class Interval:
     start: int

@@ -132,9 +132,41 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def percentile(self, q: float) -> int:
+        """Upper edge of the bucket holding the ``q``-th percentile
+        observation (conservative: the true value is ≤ the returned one,
+        within the bucket's power-of-two resolution). ``q`` in [0, 100];
+        0 with no observations."""
+        if not 0 <= q <= 100:
+            raise ValueError(f"histogram {self.name}: percentile {q} "
+                             f"outside [0, 100]")
+        if not self.count:
+            return 0
+        # Rank of the target observation (nearest-rank definition), walked
+        # over the cumulative bucket counts in value order.
+        rank = max(1, -(-self.count * q // 100))      # ceil without floats
+        seen = 0
+        for b in sorted(self.buckets):
+            seen += self.buckets[b]
+            if seen >= rank:
+                # Bucket b holds values with bit_length() == b: [2^(b-1),
+                # 2^b - 1]; bucket 0 holds zeros. Clamp to the observed max.
+                upper = (1 << b) - 1
+                return min(upper, self.max)
+        return self.max                                # pragma: no cover
+
+    @property
+    def p50(self) -> int:
+        return self.percentile(50)
+
+    @property
+    def p99(self) -> int:
+        return self.percentile(99)
+
     def to_dict(self) -> dict:
         return {"count": self.count, "sum": self.sum, "min": self.min,
                 "max": self.max, "mean": self.mean,
+                "p50": self.p50, "p99": self.p99,
                 "buckets": {f"<2^{k}" if k else "0": n
                             for k, n in sorted(self.buckets.items())}}
 
@@ -613,3 +645,148 @@ class SchedulerMetrics:
         else:
             doc["critical_path"] = None
         return doc
+
+
+# ---------------------------------------------------------------------------
+# Per-request serving lifecycle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's lifecycle timestamps (sim cycles) under a serving run.
+
+    ``ttft`` counts from *arrival* (queue wait included) to the first
+    generated token — the latency a client observes; ``tpot`` is the mean
+    inter-token gap over the remaining ``tokens - 1`` decode steps."""
+
+    rid: int
+    prompt_len: int
+    max_new: int
+    arrived: int
+    admitted: Optional[int] = None
+    first_token: Optional[int] = None
+    finished: Optional[int] = None
+    tokens: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.finished is not None
+
+    @property
+    def queue_wait(self) -> Optional[int]:
+        if self.admitted is None:
+            return None
+        return self.admitted - self.arrived
+
+    @property
+    def ttft(self) -> Optional[int]:
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrived
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finished is None or self.first_token is None:
+            return None
+        if self.tokens <= 1:
+            return 0.0
+        return (self.finished - self.first_token) / (self.tokens - 1)
+
+    def to_dict(self) -> dict:
+        return {"rid": self.rid, "prompt_len": self.prompt_len,
+                "max_new": self.max_new, "arrived": self.arrived,
+                "admitted": self.admitted, "first_token": self.first_token,
+                "finished": self.finished, "tokens": self.tokens,
+                "queue_wait": self.queue_wait, "ttft": self.ttft,
+                "tpot": self.tpot}
+
+
+def _exact_percentile(vals: list, q: float) -> float:
+    """Nearest-rank percentile over raw values (exact, unlike the
+    power-of-two histogram buckets)."""
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    rank = max(1, -(-len(s) * int(q) // 100))
+    return float(s[rank - 1])
+
+
+class RequestLog:
+    """Request lifecycle tracking for the serving scenario.
+
+    Each transition feeds the shared metrics instruments —
+    ``serving.ttft`` / ``serving.tpot`` / ``serving.queue_wait`` histograms
+    and a ``serving.goodput_tokens_per_kcycle`` gauge — so a serving run's
+    report carries them alongside the scheduler's stall attribution.
+    ``summary()`` additionally computes *exact* percentiles from the raw
+    records (the histograms quantize to power-of-two buckets)."""
+
+    def __init__(self, metrics: "SchedulerMetrics"):
+        self.metrics = metrics
+        self.records: dict[int, RequestRecord] = {}
+
+    # ----------------------------------------------------------- transitions
+    def arrive(self, rid: int, prompt_len: int, max_new: int,
+               t: int) -> RequestRecord:
+        if rid in self.records:
+            raise MetricsError(f"request {rid} already arrived")
+        rec = RequestRecord(rid=rid, prompt_len=prompt_len, max_new=max_new,
+                            arrived=int(t))
+        self.records[rid] = rec
+        self.metrics.inc("serving.requests.arrived")
+        return rec
+
+    def admit(self, rid: int, t: int) -> None:
+        rec = self.records[rid]
+        rec.admitted = int(t)
+        self.metrics.inc("serving.requests.admitted")
+        self.metrics.observe("serving.queue_wait", rec.queue_wait)
+
+    def first_token(self, rid: int, t: int) -> None:
+        rec = self.records[rid]
+        rec.first_token = int(t)
+        rec.tokens = max(rec.tokens, 1)
+        self.metrics.observe("serving.ttft", rec.ttft)
+
+    def token(self, rid: int, n: int = 1) -> None:
+        self.records[rid].tokens += n
+
+    def finish(self, rid: int, t: int) -> None:
+        rec = self.records[rid]
+        rec.finished = int(t)
+        self.metrics.inc("serving.requests.finished")
+        if rec.tokens > 1:
+            self.metrics.observe("serving.tpot", int(round(rec.tpot)))
+        done = [r for r in self.records.values() if r.done]
+        toks = sum(r.tokens for r in done)
+        if t > 0:
+            self.metrics.set_gauge("serving.goodput_tokens_per_kcycle",
+                                   round(1000.0 * toks / t, 3))
+
+    # ------------------------------------------------------------- reporting
+    def summary(self, now: Optional[int] = None) -> dict:
+        """Exact lifecycle aggregates from the raw records."""
+        done = [r for r in self.records.values() if r.done]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None and r.tokens > 1]
+        waits = [r.queue_wait for r in done if r.queue_wait is not None]
+        toks = sum(r.tokens for r in done)
+        end = now if now is not None else max(
+            (r.finished for r in done), default=0)
+        return {
+            "requests": len(self.records),
+            "finished": len(done),
+            "tokens_generated": toks,
+            "ttft_p50": _exact_percentile(ttfts, 50),
+            "ttft_p99": _exact_percentile(ttfts, 99),
+            "ttft_mean": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
+            "tpot_p50": _exact_percentile(tpots, 50),
+            "tpot_p99": _exact_percentile(tpots, 99),
+            "queue_wait_p50": _exact_percentile(waits, 50),
+            "queue_wait_p99": _exact_percentile(waits, 99),
+            "goodput_tokens_per_kcycle":
+                round(1000.0 * toks / end, 3) if end else 0.0,
+            "per_request": [r.to_dict() for r in
+                            sorted(self.records.values(),
+                                   key=lambda r: r.rid)],
+        }

@@ -35,8 +35,8 @@ from repro.core.alias_index import AliasIndex
 from repro.core.dataflow import FULL, FlowKind
 from repro.core.regions import StridedRegion, contains_cached
 from repro.core.runtime import CacheRuntime, QueuedKernel
-from repro.sim.events import (EventQueue, Resource, TileTrain, row_chunks,
-                              split_proportional, tile_entries)
+from repro.sim.events import (EventQueue, Resource, TileTrain, Timeline,
+                              row_chunks, split_proportional, tile_entries)
 from repro.sim.trace import Tracer
 
 
@@ -173,6 +173,13 @@ class PipelinedRuntime(CacheRuntime):
         self._dep_waiters: dict[int, set[int]] = {}
         self._war_waiters: dict[int, set[int]] = {}
         self._cap_blocked: set[int] = set()
+        # Open-ended timeline (persistent across drains): the event queue
+        # lives for the whole session so externally posted events (request
+        # arrivals) and kernels issued from completion callbacks interleave
+        # with in-flight work. ``_inflight`` maps dispatched-but-unretired
+        # kernels to their functional state.
+        self._timeline = Timeline()
+        self._inflight: dict[int, tuple] = {}
         # Simulator self-profiling (PipelineReport / --profile).
         self.events_processed = 0
         self._wall_seconds = 0.0
@@ -288,10 +295,52 @@ class PipelinedRuntime(CacheRuntime):
 
     # ------------------------------------------------------------ scheduler
     def run_pending(self) -> None:
-        """Drain the kernel queue with the event-driven pipelined schedule."""
-        if not self.queue:
+        """Drain every admitted kernel with the event-driven schedule.
+
+        Re-entrant calls — a completion callback issuing new kernels from
+        inside the event loop, or any issue under an *open* session (see
+        :mod:`repro.core.session`) — only admit the queue into the pending
+        set; the owning event loop (or the session's ``advance``/``drain``)
+        processes the events. A top-level call in closed (batch) mode is the
+        legacy behaviour: admit, run the timeline dry, settle."""
+        if self._in_loop or self._session_open:
+            self._admit_queue()
+            return
+        if not (self.queue or self._pending_map or self._timeline):
             return
         wall0 = time.perf_counter()
+        self._admit_queue()
+        self._wake.update(self._pending_map)
+        t = self._run_events()
+        self._settle(t)
+        self._wall_seconds += time.perf_counter() - wall0
+
+    def _relieve_at_pressure(self, need: int) -> None:
+        """Address-Table pressure with the event loop live (re-entrant issue
+        from a callback, or any issue under an open session): model a
+        *frontend stall*. The decoder blocks mid-issue and the machine keeps
+        executing — internal lifecycle events run until enough earlier
+        kernels retire to free ``need`` slots — while posted arrivals stay
+        queued (a stalled decoder cannot service them; they fire at the
+        unblock time). Closed-batch calls fall through to the base eager
+        drain, which this path never perturbs."""
+        if need > 0 and self.at.free_slots() < need \
+                and (self._in_loop or self._session_open):
+            self._admit_queue()
+            self._wake.update(self._pending_map)
+            self._run_events(at_need=need)
+        super()._relieve_at_pressure(need)
+
+    def _admit_queue(self, at: Optional[int] = None) -> None:
+        """Move queued kernels into the pending set and book their decodes
+        starting at ``at`` (default: the timeline clock).
+
+        Decode timeline: the eCPU ISR serialises preambles, but kernel k may
+        dispatch right after its own decode — later decodes overlap with
+        earlier kernels' allocation/compute. Each decode-completion event
+        wakes exactly its own kernel."""
+        if not self.queue:
+            return
         pending = list(self.queue)
         self.queue.clear()
         for qk in pending:
@@ -301,16 +350,10 @@ class PipelinedRuntime(CacheRuntime):
                 self._pending_src_count[s.phys_id] = \
                     self._pending_src_count.get(s.phys_id, 0) + 1
                 self._war_index.insert((kid, si), s.region)
-        eq = EventQueue()
-        t = self.sim_time
-
-        # Decode timeline: the eCPU ISR serialises preambles, but kernel k may
-        # dispatch right after its own decode — later decodes overlap with
-        # earlier kernels' allocation/compute. Each decode-completion event
-        # wakes exactly its own kernel.
+        t0 = self._timeline.now if at is None else at
         for qk in pending:
             kid = qk.deps.kernel_id
-            iv = self.res_ecpu.acquire(t, self.geometry.decode_cycles,
+            iv = self.res_ecpu.acquire(t0, self.geometry.decode_cycles,
                                        label=f"decode k{kid}")
             self._ready_at[kid] = iv.end
             self.tracer.emit(f"{qk.spec.name} k{kid} decode", "preamble",
@@ -318,56 +361,161 @@ class PipelinedRuntime(CacheRuntime):
             self.metrics.kernel_decoded(kid, iv.end, qk.spec.name)
             self.metrics.activity(f"{qk.spec.name} k{kid} decode", "preamble",
                                   "ecpu", iv.start, iv.end, kernel=kid)
-            eq.push(iv.end, "dispatch", kid)
+            self._timeline.push(iv.end, "dispatch", kid)
 
-        self._wake = set(self._pending_map)
-        inflight: dict[int, tuple] = {}
-        while True:
-            self._dispatch_sweep(t, inflight, eq)
-            if not eq:
-                break
-            ev = eq.pop()
-            t = ev.time
-            self.events_processed += 1
-            if ev.kind == "dispatch":
-                # Decode finished: this kernel becomes examinable.
-                self._wake.add(ev.payload)
-            elif ev.kind == "compute_done":
-                self._handle_compute_done(ev.payload, t, inflight, eq)
-            elif ev.kind == "wb_done":
-                # A port that just finished a write-back immediately takes
-                # the next least-booked-port drain instead of leaving it for
-                # the final barrier flush. Drains evict residents, so
-                # capacity-blocked kernels get another look.
-                self._drain_idle_dma(t, inflight, eq)
-                self._emit_counters(t)
-                self._wake_capacity_blocked()
+    def _run_events(self, until: Optional[int] = None,
+                    at_need: Optional[int] = None,
+                    internal_only: bool = False) -> int:
+        """Process timeline events in order until the timeline empties or
+        the next event lies beyond ``until``; returns the clock. External
+        events (posted arrivals) invoke their callback — which may issue new
+        kernels re-entrantly — then admit whatever the callback queued.
 
+        ``at_need`` is the frontend-stall mode (see
+        :meth:`_relieve_at_pressure`): run only *internal* lifecycle events
+        until that many Address-Table slots are free. External events are
+        deferred back onto the timeline — the stalled decoder cannot service
+        arrivals, so their callbacks fire at the unblock time (their posted
+        sim time is preserved; only the service time moves, exactly a
+        stalled issue queue's behaviour). ``internal_only`` (implied by
+        ``at_need``) defers externals without an AT target — the settle uses
+        it to run residual in-flight work dry."""
+        internal_only = internal_only or at_need is not None
+        eq = self._timeline
+        t = eq.now
+        was_in_loop, self._in_loop = self._in_loop, True
+        deferred = []
+        try:
+            while True:
+                if at_need is not None and self.at.free_slots() >= at_need:
+                    break
+                self._dispatch_sweep(t, self._inflight, eq)
+                while internal_only and eq \
+                        and eq.peek().kind == Timeline.EXTERNAL:
+                    deferred.append(eq.pop())
+                if not eq:
+                    break
+                if until is not None and eq.peek().time > until:
+                    break
+                ev = eq.pop()
+                t = eq.advance_clock(ev.time)
+                self.events_processed += 1
+                if ev.kind == "dispatch":
+                    # Decode finished: this kernel becomes examinable.
+                    self._wake.add(ev.payload)
+                elif ev.kind == "compute_done":
+                    self._handle_compute_done(ev.payload, t, self._inflight,
+                                              eq)
+                elif ev.kind == "wb_done":
+                    # A port that just finished a write-back immediately
+                    # takes the next least-booked-port drain instead of
+                    # leaving it for the final barrier flush. Drains evict
+                    # residents, so capacity-blocked kernels get another
+                    # look.
+                    self._drain_idle_dma(t, self._inflight, eq)
+                    self._emit_counters(t)
+                    self._wake_capacity_blocked()
+                elif ev.kind == Timeline.EXTERNAL:
+                    ev.payload(t)
+                    self._admit_queue()
+        finally:
+            self._in_loop = was_in_loop
+            for ev in deferred:
+                eq.push(ev.time, ev.kind, ev.payload)
+        return t
+
+    def _settle(self, t: int) -> None:
+        """Close a batch drain: align the makespan with the latest booking,
+        run capacity-starved leftovers through the serial fallback, and
+        reset the wakeup bookkeeping.
+
+        Capacity-starved leftovers fall back to the serial step so the
+        failure mode (ResourceStall) is identical to CacheRuntime's. Their
+        phase cycles (everything but the already-timelined decode) append
+        serially to the makespan — nothing overlaps a starved schedule.
+        Kernels admitted *during* the fallback (completion callbacks may
+        issue new work) are not part of this settle: they stay pending, with
+        their decode events on the timeline, for the next drain."""
         end = max([t, self.sim_time]
                   + [r.free_at for r in self._all_resources()])
-        # Capacity-starved leftovers: fall back to the serial step so the
-        # failure mode (ResourceStall) is identical to CacheRuntime's. Their
-        # phase cycles (everything but the already-timelined decode) append
-        # serially to the makespan — nothing overlaps a starved schedule.
         still = []
         fallback_before = self.stats.total_cycles
-        for qk in list(self._pending_map.values()):
-            if self.tracker.ready(qk.deps.kernel_id):
-                self.metrics.inc("kernels.fallback")
-                self._run_one(qk)
-            else:
-                still.append(qk)
+        snapshot = list(self._pending_map.values())
+        ran: set[int] = set()
+        was_in_loop, self._in_loop = self._in_loop, True   # nested issues admit
+        try:
+            for qk in snapshot:
+                kid = qk.deps.kernel_id
+                if kid not in self._pending_map:
+                    # A retire callback's backpressure stall ran the event
+                    # loop mid-pass and dispatched (and cleaned up) this
+                    # kernel — nothing left to do here.
+                    continue
+                if self.tracker.ready(kid):
+                    self.metrics.inc("kernels.fallback")
+                    # Hide the kernel from re-entrant dispatch sweeps before
+                    # running it, but keep its source counts until the pass
+                    # ends: _needed_later must see the whole snapshot.
+                    self._pending_map.pop(kid)
+                    ran.add(kid)
+                    self._run_one(qk)
+                else:
+                    still.append(qk)
+        finally:
+            self._in_loop = was_in_loop
+        # A backpressure stall during the fallback may have dispatched
+        # kernels event-driven; run their remaining lifecycle dry (externals
+        # stay deferred) so nothing is left in flight across the settle
+        # clock jump — the stall attribution could not account for that
+        # gap. Closed-batch settles enter with an empty timeline and no
+        # in-flight work, so this is a no-op there.
+        if self._inflight or self._timeline:
+            t2 = self._run_events(internal_only=True)
+            end = max([end, t2] + [r.free_at for r in self._all_resources()])
+        # Pending-state removal happens after the fallback pass (not per
+        # kernel): _needed_later must see the whole snapshot's source counts
+        # while fallback kernels retire, exactly as the batch scheduler did.
+        for qk in snapshot:
+            kid = qk.deps.kernel_id
+            if kid in self._pending_map:
+                self._remove_pending(kid)
+            elif kid in ran:
+                self._strip_pending_residue(kid, qk)
+        # Kernels admitted *during* the fallback (retire callbacks issuing
+        # new programs) get the same treatment as capacity-starved
+        # leftovers: back to the queue for a fresh decode next drain. A
+        # settle always ends with the pending set empty, so the serial
+        # fallback cycles it appends to the makespan never open an
+        # unattributed ready→dispatch gap in the stall accounting.
+        for kid in list(self._pending_map):
+            still.append(self._remove_pending(kid))
         end += self.stats.total_cycles - fallback_before
         self.sim_time = end
-        self._pending_map.clear()
-        self._pending_src_count.clear()
-        self._war_index.clear()
+        self._timeline.advance_clock(end)
         self._wake.clear()
         self._dep_waiters.clear()
         self._war_waiters.clear()
         self._cap_blocked.clear()
         self.queue.extend(still)
-        self._wall_seconds += time.perf_counter() - wall0
+
+    def _remove_pending(self, kid: int) -> QueuedKernel:
+        """Drop one kernel from the pending bookkeeping (dispatched, run by
+        the fallback, or re-queued as undispatchable)."""
+        qk = self._pending_map.pop(kid)
+        self._strip_pending_residue(kid, qk)
+        return qk
+
+    def _strip_pending_residue(self, kid: int, qk: QueuedKernel) -> None:
+        """The non-map half of :meth:`_remove_pending`: release the decode
+        booking, the source refcounts, and the WAR-index entries."""
+        self._ready_at.pop(kid, None)
+        for si, s in enumerate(qk.src_bindings):
+            n = self._pending_src_count[s.phys_id] - 1
+            if n:
+                self._pending_src_count[s.phys_id] = n
+            else:
+                del self._pending_src_count[s.phys_id]
+            self._war_index.remove((kid, si))
 
     def _dispatch_sweep(self, t: int, inflight: dict, eq: EventQueue) -> None:
         """Dispatch every kernel that can go at time ``t``.
@@ -439,10 +587,7 @@ class PipelinedRuntime(CacheRuntime):
             if self.wakeup:
                 self._cap_blocked.add(kid)
             return False
-        del self._pending_map[kid]
-        for si, s in enumerate(qk.src_bindings):
-            self._pending_src_count[s.phys_id] -= 1
-            self._war_index.remove((kid, si))
+        self._remove_pending(kid)
         self._dispatch(qk, v, t, inflight, eq)
         # This dispatch unblocks: later kernels WAR-gated on this reader, and
         # (because allocation can consolidate/evict residents on any VPU)
@@ -845,6 +990,10 @@ class PipelinedRuntime(CacheRuntime):
         if waiters:
             self._wake |= waiters
         self._wake_capacity_blocked()
+        # Completion watchers last, with scheduler state consistent: a
+        # watcher may re-entrantly issue the request's next kernels (the
+        # continuous-batching step chain).
+        self._notify_retired(kid, t)
 
     def _drain_idle_dma(self, t: int, inflight: dict, eq: EventQueue) -> None:
         """Opportunistically write back deferred results whose consumers are
@@ -898,12 +1047,23 @@ class PipelinedRuntime(CacheRuntime):
     def _drain_deferred_residents(self, need_slots: Optional[int] = None) -> None:
         """Timed flush of deferred results (all for barrier, just enough AT
         slots for capacity-pressure relief): each consolidation books on the
-        owning VPU's DMA port, so the flushes overlap across ports."""
+        owning VPU's DMA port, so the flushes overlap across ports.
+
+        Skips residents touched by in-flight kernels: mid-loop (AT pressure
+        from a re-entrant issue) a dispatched kernel's functional state is
+        already claimed, and evicting its destination would let the retire
+        step re-insert a dead residency over released lines."""
         wall0 = time.perf_counter()
-        t = self.sim_time
+        t = self._timeline.now
+        busy_phys: set[int] = set()
+        for qk, _, _, _ in self._inflight.values():
+            busy_phys.update(s.phys_id for s in qk.src_bindings)
+            busy_phys.add(qk.dst_binding.phys_id)
         for phys_id in list(self.resident):
             if need_slots is not None and self.at.free_slots() >= need_slots:
                 break
+            if phys_id in busy_phys:
+                continue
             res = self.resident.get(phys_id)
             if res is None:              # invalidated by an earlier landing
                 continue
@@ -924,8 +1084,13 @@ class PipelinedRuntime(CacheRuntime):
             else:
                 self._evict_resident(phys_id)
                 self.at.release(phys_id, RegionKind.DST)
-        self.sim_time = max([self.sim_time]
-                            + [r.free_at for r in self._all_resources()])
+        if not (self._in_loop or self._session_open):
+            # Batch mode: the flush extends the makespan and the next drain's
+            # decodes start where it left off. Mid-session the clock belongs
+            # to the event loop — flush bookings surface via free_at.
+            self.sim_time = max([self.sim_time]
+                                + [r.free_at for r in self._all_resources()])
+            self._timeline.advance_clock(self.sim_time)
         self._wall_seconds += time.perf_counter() - wall0
 
     def barrier(self) -> None:
@@ -934,3 +1099,44 @@ class PipelinedRuntime(CacheRuntime):
         if self.queue:
             raise RuntimeError("kernel queue not drained — dependency deadlock?")
         self._drain_deferred_residents()
+
+    # -------------------------------------------------------------- sessions
+    # The pipelined runtime's session clock IS the open timeline: issues book
+    # decodes at the current clock, posted arrivals are timeline events, and
+    # ``advance`` runs the event loop up to a bound with work left in flight.
+    def session_now(self) -> int:
+        return self._timeline.now
+
+    def session_post(self, t: int, fn) -> None:
+        self._timeline.post(t, fn)
+
+    def session_advance(self, until: int) -> None:
+        """Process every event due by ``until`` — dispatches, completions,
+        posted arrivals — then move the clock there, leaving later events
+        (and undispatched kernels) in flight."""
+        wall0 = time.perf_counter()
+        self._admit_queue()
+        self._wake.update(self._pending_map)
+        self._run_events(until)
+        self._timeline.advance_clock(until)
+        self._wall_seconds += time.perf_counter() - wall0
+
+    def session_drain(self) -> None:
+        """Run the timeline dry (arrivals included), settle, and flush —
+        the open-session counterpart of :meth:`barrier`.
+
+        Unlike a closed-batch barrier, one drain pass is not enough: the
+        settle fallback fires retire callbacks, and those may issue fresh
+        programs (a continuous-batching driver chaining its next step), so
+        the pass repeats until a full pass makes no progress. A stuck
+        remainder then falls through to :meth:`barrier`'s deadlock check."""
+        was, self._session_open = self._session_open, False
+        try:
+            while self.queue or self._pending_map or self._timeline:
+                before = (self.events_processed, self.stats.total_cycles)
+                self.run_pending()
+                if (self.events_processed, self.stats.total_cycles) == before:
+                    break
+            self.barrier()
+        finally:
+            self._session_open = was

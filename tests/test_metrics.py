@@ -273,3 +273,47 @@ def test_fig4_report_point_matches_makespan():
     assert cp["covers_makespan"] and cp["total"] == total
     s_total, s_mrep = metrics_report_point(16, 3, ElemWidth.B, 4, "serial")
     assert s_mrep["conservation_ok"] and s_mrep["critical_path"] is None
+
+
+# --------------------------------------------------- histogram percentiles
+def test_histogram_percentile_nearest_rank():
+    h = Histogram("lat")
+    for v in [3, 10, 10, 100, 1000]:
+        h.observe(v)
+    # p50 -> rank 3 (the second 10): bucket upper edge 2^4-1 = 15
+    assert h.p50 == 15
+    # p99 -> rank 5 (1000): bucket [512, 1023], clamped to the observed max
+    assert h.p99 == 1000
+    assert h.percentile(0) == 3           # rank clamps to 1 -> min's bucket
+    assert h.percentile(100) == 1000
+    d = h.to_dict()
+    assert d["p50"] == 15 and d["p99"] == 1000
+
+
+def test_histogram_percentile_degenerate_and_bounds():
+    h = Histogram("x")
+    assert h.p50 == 0 and h.p99 == 0      # empty: 0, not an error
+    h.observe(0)
+    assert h.p50 == 0 and h.p99 == 0      # zeros live in bucket 0
+    h2 = Histogram("y")
+    h2.observe(42)
+    assert h2.p50 == h2.p99 == 42         # single value: clamped to max
+    with pytest.raises(ValueError, match="outside"):
+        h2.percentile(101)
+    with pytest.raises(ValueError, match="outside"):
+        h2.percentile(-1)
+
+
+def test_histogram_percentile_monotone_and_conservative():
+    rng = np.random.default_rng(0)
+    h = Histogram("m")
+    vals = sorted(int(v) for v in rng.integers(0, 50_000, 500))
+    for v in vals:
+        h.observe(v)
+    qs = [0, 10, 25, 50, 75, 90, 99, 100]
+    ps = [h.percentile(q) for q in qs]
+    assert ps == sorted(ps)               # monotone in q
+    for q, p in zip(qs, ps):
+        # conservative: an upper bound within the bucket's 2x resolution
+        exact = vals[max(0, -(-len(vals) * q // 100) - 1)]
+        assert exact <= p <= max(2 * exact, 1), (q, exact, p)

@@ -1,0 +1,204 @@
+"""Continuous-batching serving scenario over the open runtime session.
+
+Covers ``repro.sim.serving`` (arrival processes, the slot-discipline
+driver, the per-request programs) and the request-lifecycle layer in
+``repro.sim.metrics`` (RequestLog, exact percentiles):
+
+  * **determinism** — the same arrival tape on a fresh runtime reproduces
+    the summary and the makespan bit for bit;
+  * **cross-scheduler agreement** — serial and pipelined runtimes generate
+    the same tokens per request (batch composition may differ — per-slot
+    decode math must not);
+  * **functional spot-check** — after a prefill, the KV key buffer holds
+    exactly the weight columns the tape appended;
+  * **saturation** — more simultaneous requests than slots ⇒ FIFO
+    admission and non-zero queue waits feeding TTFT.
+
+Distinct from ``tests/test_serving.py``, which exercises the jax LM
+serving engine (``repro.serving.engine``) this scenario's slot discipline
+mirrors.
+"""
+import numpy as np
+import pytest
+
+from repro.core.program import ProgramError, np_dtype
+from repro.core.runtime import CacheRuntime
+from repro.sim import PipelinedRuntime
+from repro.sim.metrics import MetricsError, RequestLog
+from repro.sim.serving import (Request, ServingConfig, ServingDriver,
+                               bursty_arrivals, poisson_arrivals)
+
+CFG = ServingConfig(kv_max=24, slots=3)
+ARRIVAL_KW = dict(prompt_range=(3, 6), new_range=(2, 4))
+
+
+def _gather(rt, addrs, name, rows, cols, width):
+    rt.cache.flush_all()
+    dt = np_dtype(width)
+    nbytes = rows * cols * dt.itemsize
+    raw = rt.memory.data[addrs[name]:addrs[name] + nbytes]
+    return raw.copy().view(dt).reshape(rows, cols)
+
+
+# ------------------------------------------------------- arrival processes
+def test_poisson_arrivals_deterministic_and_bounded():
+    a = poisson_arrivals(20, 5_000, seed=7, **ARRIVAL_KW)
+    b = poisson_arrivals(20, 5_000, seed=7, **ARRIVAL_KW)
+    assert a == b                                  # seeded: replayable
+    assert [r.rid for r in a] == list(range(20))
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    assert all(3 <= r.prompt_len <= 6 and 2 <= r.max_new <= 4 for r in a)
+    # mean gap lands in the right decade (20 draws: loose 3x band)
+    gaps = np.diff([0] + [r.arrival for r in a])
+    assert 5_000 / 3 < gaps.mean() < 5_000 * 3
+    assert poisson_arrivals(20, 5_000, seed=8, **ARRIVAL_KW) != a
+
+
+def test_bursty_arrivals_structure():
+    reqs = bursty_arrivals(12, 4, 100_000, spread=50, seed=3, **ARRIVAL_KW)
+    assert len(reqs) == 12
+    assert sorted(r.rid for r in reqs) == list(range(12))
+    assert all(x.arrival <= y.arrival for x, y in zip(reqs, reqs[1:]))
+    for r in reqs:
+        base = (r.rid // 4) * 100_000
+        assert base <= r.arrival < base + 50      # jitter stays in-burst
+
+
+def test_request_exceeding_kv_capacity_rejected():
+    drv = ServingDriver(PipelinedRuntime(n_vpus=2), ServingConfig(kv_max=8))
+    with pytest.raises(ProgramError, match="exceeds kv_max"):
+        drv.run([Request(rid=0, arrival=0, prompt_len=7, max_new=3)])
+
+
+# ---------------------------------------------------------------- driving
+def test_single_request_prefill_writes_weight_columns():
+    """One request, max_new=1 (prefill only): the KV key buffer's first
+    ``prompt_len`` columns are exactly the wq columns the tape copies in
+    (leakyrelu alpha=1 pass-through), the rest untouched zeros."""
+    cfg = ServingConfig(kv_max=16, slots=2)
+    drv = ServingDriver(PipelinedRuntime(n_vpus=2, metrics=True), cfg)
+    s = drv.run([Request(rid=0, arrival=100, prompt_len=5, max_new=1)])
+    assert s["requests"] == s["finished"] == 1
+    assert s["tokens_generated"] == 1
+    assert s["ttft_p50"] == s["ttft_p99"] > 0
+    rt = drv.session.rt
+    wq = _gather(rt, drv.addrs, "wq", cfg.d, cfg.d, cfg.width)
+    kt = _gather(rt, drv.addrs, "r0_kt", cfg.d, cfg.kv_max, cfg.width)
+    for s_pos in range(5):
+        np.testing.assert_array_equal(kt[:, s_pos], wq[:, s_pos % cfg.d])
+    assert not kt[:, 5:].any()
+
+
+@pytest.mark.parametrize("make_rt", [
+    pytest.param(lambda: CacheRuntime(n_vpus=2), id="serial"),
+    pytest.param(lambda: PipelinedRuntime(n_vpus=2, metrics=True),
+                 id="pipelined"),
+])
+def test_driver_deterministic(make_rt):
+    reqs = poisson_arrivals(6, 4_000, seed=1, **ARRIVAL_KW)
+    runs = []
+    for _ in range(2):
+        drv = ServingDriver(make_rt(), CFG)
+        s = drv.run(reqs)
+        runs.append((s, drv.session.now(), drv.steps_issued))
+    assert runs[0] == runs[1]
+    s = runs[0][0]
+    assert s["finished"] == s["requests"] == 6
+    assert s["tokens_generated"] == sum(r.max_new for r in reqs)
+    assert s["ttft_p99"] >= s["ttft_p50"] > 0
+    assert s["goodput_tokens_per_kcycle"] > 0
+
+
+def test_serial_and_pipelined_agree_per_request():
+    """Batch composition differs between schedulers (completion timing
+    drives grouping) but every request's token count — and the KV image it
+    leaves behind — must agree."""
+    reqs = poisson_arrivals(5, 3_000, seed=2, **ARRIVAL_KW)
+    drvs = {}
+    for key, rt in (("serial", CacheRuntime(n_vpus=2)),
+                    ("pipelined", PipelinedRuntime(n_vpus=2, metrics=True))):
+        drvs[key] = drv = ServingDriver(rt, CFG)
+        drv.run(reqs)
+    ser, pip = drvs["serial"], drvs["pipelined"]
+    tok_s = {r["rid"]: r["tokens"] for r in ser.log.summary()["per_request"]}
+    tok_p = {r["rid"]: r["tokens"] for r in pip.log.summary()["per_request"]}
+    assert tok_s == tok_p == {r.rid: r.max_new for r in reqs}
+    for r in reqs:
+        kv = r.prompt_len + r.max_new - 1
+        for name, rows, cols in ((f"r{r.rid}_kt", CFG.d, CFG.kv_max),
+                                 (f"r{r.rid}_v", CFG.kv_max, CFG.d)):
+            np.testing.assert_array_equal(
+                _gather(ser.rt, ser.addrs, name, rows, cols, CFG.width),
+                _gather(pip.rt, pip.addrs, name, rows, cols, CFG.width),
+                err_msg=f"{name} diverged between schedulers (kv_len {kv})")
+    assert pip.rt.metrics.stalls.conservation_ok()
+
+
+def test_saturation_fifo_admission_and_queue_wait():
+    """A burst wider than the slot count: admissions happen in rid order
+    as slots free, every overflow request records a positive queue wait,
+    and the waits feed TTFT (ttft >= queue_wait per request)."""
+    cfg = ServingConfig(kv_max=16, slots=2)
+    drv = ServingDriver(PipelinedRuntime(n_vpus=2, metrics=True), cfg)
+    reqs = [Request(rid=i, arrival=10 + i, prompt_len=3, max_new=2)
+            for i in range(6)]
+    s = drv.run(reqs)
+    assert s["finished"] == 6
+    per = {r["rid"]: r for r in s["per_request"]}
+    admits = [per[i]["admitted"] for i in range(6)]
+    assert admits == sorted(admits)               # FIFO admission order
+    for i in range(2, 6):                         # overflow: waited for slot
+        assert per[i]["queue_wait"] > 0
+        assert per[i]["ttft"] >= per[i]["queue_wait"]
+    assert s["queue_wait_p99"] > 0
+    assert drv.session.rt.metrics.stalls.conservation_ok()
+
+
+def test_bursty_load_drains_without_deadlock():
+    cfg = ServingConfig(kv_max=16, slots=2)
+    drv = ServingDriver(PipelinedRuntime(n_vpus=4, metrics=True), cfg)
+    reqs = bursty_arrivals(8, 4, 150_000, spread=40, seed=5, **ARRIVAL_KW)
+    s = drv.run(reqs)
+    assert s["finished"] == 8 and not drv.active and not drv.waiting
+    assert drv.session.rt.metrics.stalls.conservation_ok()
+    # two bursts 150k apart: the makespan spans both
+    assert drv.session.now() >= 150_000
+
+
+# -------------------------------------------------------- request lifecycle
+def test_request_log_lifecycle_math():
+    log = RequestLog(PipelinedRuntime(n_vpus=1, metrics=True).metrics)
+    log.arrive(0, prompt_len=4, max_new=3, t=100)
+    log.admit(0, t=150)
+    log.first_token(0, t=400)
+    log.token(0)
+    log.token(0)
+    log.finish(0, t=1000)
+    r = log.records[0]
+    assert r.queue_wait == 50
+    assert r.ttft == 300                  # arrival -> first token
+    assert r.tpot == pytest.approx(600 / 2)   # 2 gaps after the first token
+    s = log.summary(now=1000)
+    assert s["finished"] == 1 and s["tokens_generated"] == 3
+    assert s["ttft_p50"] == s["ttft_p99"] == 300
+    assert s["goodput_tokens_per_kcycle"] == pytest.approx(3.0)
+
+
+def test_request_log_duplicate_rid_raises():
+    log = RequestLog(PipelinedRuntime(n_vpus=1, metrics=True).metrics)
+    log.arrive(7, prompt_len=1, max_new=1, t=0)
+    with pytest.raises(MetricsError, match="already arrived"):
+        log.arrive(7, prompt_len=1, max_new=1, t=5)
+
+
+def test_request_log_percentiles_exact():
+    log = RequestLog(PipelinedRuntime(n_vpus=1, metrics=True).metrics)
+    for i, ttft in enumerate([100, 200, 300, 400, 1000]):
+        log.arrive(i, prompt_len=1, max_new=1, t=0)
+        log.admit(i, t=0)
+        log.first_token(i, t=ttft)
+        log.finish(i, t=ttft)
+    s = log.summary(now=1000)
+    assert s["ttft_p50"] == 300           # nearest-rank on raw values
+    assert s["ttft_p99"] == 1000
+    assert s["ttft_mean"] == pytest.approx(400.0)
