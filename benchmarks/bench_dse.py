@@ -1,0 +1,197 @@
+"""Design-space exploration: parallel config sweeps + Pareto fronts.
+
+ARCANE's central trade — incremental VPU lanes buy near-linear throughput
+at sub-linear area growth (Table II) — is a design-space question. This
+driver asks it at sweep scale:
+
+1. **Grid expansion** (``repro.dse.grid``): a declarative grid — VPU count
+   × row_chunk × tile shape × reuse × cache geometry × lanes × scenario —
+   expands into concrete ``SimConfig`` points via dotted overrides on the
+   YAML ``extends`` layer. Conflicting axes fail at expansion; point IDs
+   are pure functions of the grid, so reruns are diffable.
+2. **Parallel execution** (``repro.dse.runner``): points fan out over
+   worker processes; every model point runs both schedulers with the numpy
+   oracle as referee (golden-tape verification) and the metrics layer on,
+   so each row carries a stall-attribution summary.
+3. **Area join** (``table2_area.area_model``): every row gains a modeled
+   area/GOPS estimate anchored to the paper's synthesized instances.
+4. **Pareto fronts** (``repro.dse.pareto``): per scenario — makespan vs
+   area for model scenarios, tokens-per-kilocycle vs area for serving
+   scenarios. Dominated rows carry ``dominated_by`` + their stall summary,
+   so the document explains *why* a point loses, not just that it does.
+
+The grid comes from ``--grid sweep.yaml`` or from the CLI axis flags
+(``--vpus 2 4 --tiles 0x0 4x16 ...``). ``--floor`` gates the reference
+point (``--reference``, default: the first expanded point): model
+scenarios fail above ``--floor`` makespan cycles, serving scenarios fail
+below ``--floor`` tokens/kcycle. Results land in ``BENCH_dse.json`` under
+the shared envelope.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.dse import SweepGrid, annotate_fronts, run_points, scenario_kind
+from repro.sim.config import ConfigError
+
+#: Pareto objectives per scenario kind. Model tapes trade speed for area;
+#: serving trades goodput for area.
+OBJECTIVES = {
+    "model": (("makespan", "min"), ("area_um2", "min")),
+    "serving": (("tokens_per_kcycle", "max"), ("area_um2", "min")),
+}
+
+
+def _axis_from_values(key: str, values, fmt=str) -> dict:
+    return {fmt(v): {key: v} for v in values}
+
+
+def grid_from_args(args) -> SweepGrid:
+    """Build the sweep grid from the CLI axis flags (used when no --grid
+    YAML is given). Single-valued axes stay in the grid — they still name
+    the point and keep IDs stable when the axis is widened later."""
+    axes = {
+        "vpus": _axis_from_values("cache.n_vpus", args.vpus),
+        "lanes": _axis_from_values("vpu.lanes", args.lanes),
+        "vregs": _axis_from_values("cache.vregs_per_vpu", args.vregs),
+        "chunk": _axis_from_values("pipeline.row_chunk", args.row_chunks),
+        "tile": {},
+        "reuse": _axis_from_values("pipeline.reuse", args.reuse),
+    }
+    for t in args.tiles:
+        try:
+            rows, cols = (int(x) for x in t.lower().split("x"))
+        except ValueError:
+            raise ConfigError(
+                f"--tiles entries must look like ROWSxCOLS (e.g. 4x16, "
+                f"0x0 for untiled), got {t!r}") from None
+        axes["tile"][t] = {"pipeline.tiling.rows": rows,
+                           "pipeline.tiling.cols": cols}
+    return SweepGrid(base=args.base, scenarios=tuple(args.scenarios),
+                     axes=axes)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(
+        description="Design-space exploration sweep with Pareto fronts")
+    p.add_argument("--grid", default=None, metavar="YAML",
+                   help="declarative sweep grid (base/scenarios/axes); "
+                        "overrides the CLI axis flags")
+    p.add_argument("--base", default="arcane-default",
+                   help="base config every point overrides "
+                        "(builtin name or YAML path)")
+    p.add_argument("--scenarios", nargs="+", default=["cnn-small"],
+                   help="scenario axis (see repro.dse.scenarios)")
+    p.add_argument("--vpus", type=int, nargs="+", default=[2, 4],
+                   help="cache.n_vpus axis")
+    p.add_argument("--lanes", type=int, nargs="+", default=[4],
+                   help="vpu.lanes axis (the Table II area axis)")
+    p.add_argument("--vregs", type=int, nargs="+", default=[32],
+                   help="cache.vregs_per_vpu axis (cache geometry / "
+                        "reuse-FIFO bytes)")
+    p.add_argument("--row-chunks", type=int, nargs="+", default=[8],
+                   help="pipeline.row_chunk axis")
+    p.add_argument("--tiles", nargs="+", default=["0x0", "4x16"],
+                   help="pipeline.tiling axis as ROWSxCOLS (0x0 = untiled)")
+    p.add_argument("--reuse", nargs="+", default=["off"],
+                   choices=("on", "off"), help="pipeline.reuse axis")
+    p.add_argument("--jobs", type=int, default=None,
+                   help="worker processes (default: min(points, cpus); "
+                        "1 = run in-process)")
+    p.add_argument("--reference", default=None, metavar="POINT_ID",
+                   help="point the --floor gate reads "
+                        "(default: the first expanded point)")
+    p.add_argument("--floor", type=float, default=None,
+                   help="gate on the reference point: fail if its makespan "
+                        "exceeds this (model scenarios) or its tokens/"
+                        "kcycle falls below it (serving scenarios)")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write the sweep document (BENCH_dse.json)")
+    args = p.parse_args(argv)
+
+    grid = (SweepGrid.from_yaml(args.grid) if args.grid
+            else grid_from_args(args))
+    points = grid.expand()
+    print(f"bench_dse,grid,{len(points)} points,"
+          f"{len(grid.axes)} axes,{len(grid.scenarios)} scenarios")
+
+    rows = run_points([pt.to_spec() for pt in points], jobs=args.jobs,
+                      in_process=args.jobs == 1)
+
+    # ---- join: modeled area/GOPS per point (table2_area's model) --------
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from common import bench_doc, write_bench_json
+    from table2_area import area_model
+    for r in rows:
+        c = r["config"]
+        a = area_model(c["lanes"], c["n_vpus"], c["vregs_per_vpu"],
+                       c["vlen_bytes"])
+        r["area_um2"] = a["area_um2"]
+        r["area_mm2"] = a["area_mm2"]
+        r["peak_gops"] = a["peak_gops"]
+        r["gops_per_mm2"] = a["gops_per_mm2"]
+
+    # ---- Pareto fronts, one per scenario --------------------------------
+    fronts: dict[str, list[str]] = {}
+    for scenario in grid.scenarios:
+        objectives = OBJECTIVES[scenario_kind(scenario)]
+        srows = [r for r in rows if r["scenario"] == scenario]
+        fronts[scenario] = annotate_fronts(srows, objectives)
+
+    for r in rows:
+        metric = (f"makespan={r['makespan']}" if r["kind"] == "model"
+                  else f"tok/kcycle={r['tokens_per_kcycle']}")
+        top = ",".join(f"{b}:{c}" for b, c in r["stall_summary"]["top"])
+        print(f"bench_dse,{r['point_id']},{metric},"
+              f"area={r['area_mm2']:.2f}mm2,front={r.get('on_front')},"
+              f"verified={r['verified']},stalls[{top}]")
+    for scenario, ids in fronts.items():
+        print(f"bench_dse,front,{scenario},{len(ids)} points,{'; '.join(ids)}")
+
+    # ---- gates ----------------------------------------------------------
+    failed = []
+    bad = [r["point_id"] for r in rows
+           if not (r["verified"] and r["conservation_ok"])]
+    if bad:
+        failed.append(f"unverified/unconserved points: {bad}")
+    if any(not ids for ids in fronts.values()):
+        failed.append(f"empty Pareto front: "
+                      f"{[s for s, ids in fronts.items() if not ids]}")
+    if args.floor is not None:
+        ref_id = args.reference or points[0].point_id
+        ref = next((r for r in rows if r["point_id"] == ref_id), None)
+        if ref is None:
+            failed.append(f"reference point {ref_id!r} not in the sweep")
+        elif ref["kind"] == "model" and ref["makespan"] > args.floor:
+            failed.append(f"reference {ref_id}: makespan {ref['makespan']} "
+                          f"> floor {args.floor:.0f}")
+        elif (ref["kind"] == "serving"
+              and ref["tokens_per_kcycle"] < args.floor):
+            failed.append(f"reference {ref_id}: tokens/kcycle "
+                          f"{ref['tokens_per_kcycle']} < floor {args.floor}")
+
+    if args.out_json:
+        doc = bench_doc(
+            "bench_dse",
+            config={"grid": grid.to_dict(), "jobs": args.jobs,
+                    "reference": args.reference, "floor": args.floor},
+            rows=rows,
+            summary={
+                "points": len(rows),
+                "all_verified": all(r["verified"] for r in rows),
+                "all_conserved": all(r["conservation_ok"] for r in rows),
+                "fronts": fronts,
+            })
+        write_bench_json(args.out_json, doc)
+        print(f"bench_dse,wrote,{args.out_json}")
+
+    if failed:
+        for why in failed:
+            print(f"bench_dse,FAIL,{why}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

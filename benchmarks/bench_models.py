@@ -27,52 +27,15 @@ import time
 
 import numpy as np
 
-from repro.core import (ArcaneCoprocessor, ElemWidth, issue_program,
-                        place_program, reference_images)
+from repro.core import (ArcaneCoprocessor, issue_program, place_program,
+                        reference_images)
 from repro.core.program import ProgramRun
 from repro.core.runtime import CacheRuntime
-from repro.lower import (CNNSpec, decode_step_from_config, lower_cnn,
-                         moe_burst_from_config)
+from repro.dse.scenarios import MODEL_SCENARIOS as SCENARIOS
 from repro.sim import PipelinedRuntime
 
 #: VPU geometry shared by every scenario (the paper's 4-VPU data cache).
 RT = dict(n_vpus=4, vregs_per_vpu=64, vlen_bytes=1024)
-
-
-# ------------------------------------------------------------- scenarios
-def scen_cnn_paper():
-    """The paper's Listing-1 run: fused conv layer over a 32x32 RGB image,
-    worst-case 32-bit elements."""
-    return lower_cnn(CNNSpec(name="cnn-paper"))
-
-
-def scen_cnn_deep_int8():
-    """A deeper int8 CNN: fused front layer + two unfused
-    conv2d->leakyrelu->maxpool stages + GEMM classifier head, batch of 2."""
-    return lower_cnn(CNNSpec(name="cnn-deep-int8", h=24, w=24,
-                             width=ElemWidth.B, depth=2, classes=8, batch=2))
-
-
-def scen_decode(arch):
-    def build():
-        prog, _spec = decode_step_from_config(arch, scale=64, kv=16, layers=1)
-        return prog
-    return build
-
-
-def scen_moe_granite():
-    """Expert burst of granite's 8 active experts (top_k) over 4 tokens."""
-    prog, _spec = moe_burst_from_config("granite-moe-1b-a400m", scale=32)
-    return prog
-
-
-SCENARIOS = {
-    "cnn-paper": scen_cnn_paper,
-    "cnn-deep-int8": scen_cnn_deep_int8,
-    "decode-stablelm-3b": scen_decode("stablelm-3b"),
-    "decode-gemma2-9b": scen_decode("gemma2-9b"),
-    "moe-granite": scen_moe_granite,
-}
 
 
 # -------------------------------------------------------------- execution
@@ -89,7 +52,8 @@ def _execute(prog, rt) -> tuple[ProgramRun, float]:
 def run_scenario(name: str, *, report: bool = False) -> tuple[dict, dict]:
     """Run one scenario on both schedulers, verify bit-identity against the
     serial run and the numpy oracle, and return (row, metrics_report)."""
-    prog = SCENARIOS[name]()
+    prog = SCENARIOS[name](vregs_per_vpu=RT["vregs_per_vpu"],
+                           vlen_bytes=RT["vlen_bytes"])
     ref = reference_images(prog)
 
     run_s, _ = _execute(prog, CacheRuntime(**RT))

@@ -45,7 +45,7 @@ def main() -> None:
     fig3_overhead.main([])
 
     print("# === Table II: lanes / resource trade-off ===")
-    table2_area.main()
+    table2_area.main([])
 
     print("# === SOTA comparison (BLADE / Intel CNC) ===")
     sota_throughput.main([])

@@ -1,0 +1,33 @@
+"""repro.dse — design-space exploration over the simulator stack.
+
+The ARCANE trade the paper's Table II quantifies — incremental VPU lanes
+buy near-linear throughput at sub-linear area growth — is a design-space
+question, and this package is the harness that asks it at sweep scale:
+
+  * :mod:`repro.dse.grid`      — declarative sweep grids (axes of dotted
+    config overrides × scenarios) expanded into deterministic, diffable
+    points on the YAML ``extends`` layer
+  * :mod:`repro.dse.scenarios` — the model/serving scenario catalog shared
+    with the benchmark drivers
+  * :mod:`repro.dse.runner`    — per-point execution with golden-tape
+    verification + stall summaries, fanned out over worker processes
+  * :mod:`repro.dse.pareto`    — order-independent Pareto-front extraction
+    (makespan / goodput vs. modeled area)
+
+``benchmarks/bench_dse.py`` drives the whole pipeline and joins each row
+with ``benchmarks/table2_area.py``'s modeled area estimates into
+``BENCH_dse.json``.
+"""
+from repro.dse.grid import SweepGrid, SweepPoint
+from repro.dse.pareto import annotate_fronts, dominates, pareto_front
+from repro.dse.runner import run_point, run_points, stall_summary
+from repro.dse.scenarios import (MODEL_SCENARIOS, SERVING_SCENARIOS,
+                                 ServingScenario, scenario_kind,
+                                 scenario_names)
+
+__all__ = [
+    "SweepGrid", "SweepPoint", "annotate_fronts", "dominates",
+    "pareto_front", "run_point", "run_points", "stall_summary",
+    "MODEL_SCENARIOS", "SERVING_SCENARIOS", "ServingScenario",
+    "scenario_kind", "scenario_names",
+]

@@ -15,8 +15,10 @@ The serial :class:`repro.core.runtime.CacheRuntime` and the pipelined
 scheduler share the same decode/allocate/compute/retire steps, so their
 kernel outputs are bit-identical; only the modeled timing differs.
 """
-from repro.sim.config import (ConfigError, SimConfig, builtin_config_path,
-                              deep_merge, load_config, load_raw)
+from repro.sim.config import (ConfigError, SimConfig, apply_overrides,
+                              builtin_config_path, config_from_overrides,
+                              deep_merge, load_config, load_raw,
+                              merge_overrides)
 from repro.sim.events import (ChunkTrain, Event, EventQueue, Interval,
                               Resource, TileTrain, Timeline,
                               interleave_blocks, row_chunks,
@@ -34,8 +36,9 @@ from repro.sim.trace import (PHASES, CounterRecord, FlowRecord, TraceRecord,
                              Tracer)
 
 __all__ = [
-    "ConfigError", "SimConfig", "builtin_config_path", "deep_merge",
-    "load_config", "load_raw", "ChunkTrain", "Event", "EventQueue",
+    "ConfigError", "SimConfig", "apply_overrides", "builtin_config_path",
+    "config_from_overrides", "deep_merge", "load_config", "load_raw",
+    "merge_overrides", "ChunkTrain", "Event", "EventQueue",
     "Interval", "Resource", "TileTrain", "Timeline", "interleave_blocks",
     "row_chunks", "split_proportional", "tile_entries", "PipelinedRuntime",
     "PipelineReport", "ReuseEntry", "Request", "ServingConfig",

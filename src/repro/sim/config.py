@@ -21,6 +21,7 @@ fails when a YAML file is actually loaded (dict-based configs always work).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import os
 from typing import Any, Optional
@@ -217,6 +218,87 @@ def deep_merge(base: dict, override: dict) -> dict:
         else:
             out[k] = v
     return out
+
+
+# ---------------------------------------------------------------- overrides
+def _check_override_paths(keys) -> None:
+    """Reject override key sets where one dotted path prefixes another
+    (``pipeline.tiling`` vs ``pipeline.tiling.rows``): the two writes race
+    for the same subtree and the survivor would depend on application
+    order — exactly the silent nondeterminism a sweep grid must not have."""
+    paths = sorted(keys)
+    for a, b in zip(paths, paths[1:]):
+        if b.startswith(a + "."):
+            raise ConfigError(
+                f"conflicting override keys {a!r} and {b!r}: one is a "
+                f"prefix of the other, so they write the same config subtree")
+
+
+def merge_overrides(*maps: dict, sources: Optional[list] = None) -> dict:
+    """Merge several flat override mappings (dotted keys → values) into one,
+    raising :class:`ConfigError` on duplicate or prefix-conflicting keys.
+
+    This is the sweep-grid combinator: each axis contributes one mapping per
+    point, and two axes silently writing the same knob would make the grid
+    labels lie about what each point runs. ``sources`` optionally names each
+    mapping (axis names) for the error message."""
+    out: dict[str, Any] = {}
+    owner: dict[str, Any] = {}
+    for i, m in enumerate(maps):
+        name = sources[i] if sources else f"overrides[{i}]"
+        for k, v in m.items():
+            if not isinstance(k, str) or not k:
+                raise ConfigError(
+                    f"{name}: override keys must be non-empty dotted "
+                    f"strings, got {k!r}")
+            if k in out:
+                raise ConfigError(
+                    f"duplicate override key {k!r}: set by {owner[k]} "
+                    f"and again by {name}")
+            out[k] = v
+            owner[k] = name
+    _check_override_paths(out)
+    return out
+
+
+def apply_overrides(raw: dict, overrides: dict) -> dict:
+    """Apply flat dotted-key overrides onto a raw config mapping (the YAML
+    ``extends`` layer, *before* :meth:`SimConfig.from_dict` validation).
+
+    ``{"cache.n_vpus": 8, "pipeline.tiling.rows": 4}`` descends/creates the
+    nested sections and sets the leaves; a mapping value replaces the whole
+    subtree. The input is not mutated. Unknown keys are deliberately left
+    for :meth:`SimConfig.from_dict`, which names the valid ones."""
+    _check_override_paths(overrides)
+    out = copy.deepcopy(raw)
+    for key, val in overrides.items():
+        parts = key.split(".")
+        node = out
+        for p in parts[:-1]:
+            child = node.get(p)
+            if child is None:
+                child = node[p] = {}
+            elif not isinstance(child, dict):
+                raise ConfigError(
+                    f"override {key!r} descends through {p!r}, which holds "
+                    f"the scalar {child!r}, not a section")
+            node = child
+        node[parts[-1]] = val
+    return out
+
+
+def config_from_overrides(base, overrides: Optional[dict] = None
+                          ) -> "SimConfig":
+    """Expand one sweep point: load ``base`` (builtin name, YAML path, or a
+    raw mapping), apply dotted-key ``overrides`` on the raw layer, and
+    validate the result into a :class:`SimConfig`."""
+    if isinstance(base, dict):
+        raw = base
+    else:
+        path = (base if str(base).endswith((".yaml", ".yml"))
+                else builtin_config_path(str(base)))
+        raw = load_raw(path)
+    return SimConfig.from_dict(apply_overrides(raw, overrides or {}))
 
 
 # ------------------------------------------------------------------ loading

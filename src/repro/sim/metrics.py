@@ -703,11 +703,16 @@ class RequestRecord:
 
 def _exact_percentile(vals: list, q: float) -> float:
     """Nearest-rank percentile over raw values (exact, unlike the
-    power-of-two histogram buckets)."""
+    power-of-two histogram buckets). ``q`` may be fractional — p99.9 ranks
+    on 99.9, not a truncated 99."""
     if not vals:
         return 0.0
     s = sorted(vals)
-    rank = max(1, -(-len(s) * int(q) // 100))
+    # ceil(len * q / 100) in integer arithmetic: q is scaled to 1e-4
+    # percentile resolution first, so float noise (1000 * 99.9 / 100 ->
+    # 999.0000000000001) can never bump the rank past the true one.
+    qi = int(round(q * 10_000))
+    rank = min(len(s), max(1, -(-len(s) * qi // 1_000_000)))
     return float(s[rank - 1])
 
 
@@ -779,6 +784,7 @@ class RequestLog:
             "tokens_generated": toks,
             "ttft_p50": _exact_percentile(ttfts, 50),
             "ttft_p99": _exact_percentile(ttfts, 99),
+            "ttft_p999": _exact_percentile(ttfts, 99.9),
             "ttft_mean": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
             "tpot_p50": _exact_percentile(tpots, 50),
             "tpot_p99": _exact_percentile(tpots, 99),

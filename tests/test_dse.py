@@ -1,0 +1,180 @@
+"""Design-space exploration harness: overrides, grids, Pareto, workers.
+
+Covers the four contracts the sweep stack makes:
+
+* the dotted-override layer rejects duplicate keys and path conflicts at
+  merge time (``ConfigError``, not a silently-last-wins config);
+* grid expansion is deterministic — point IDs are a pure function of the
+  grid and survive a rerun byte-for-byte;
+* Pareto-front extraction is order-independent and handles the degenerate
+  single-point / all-dominated shapes;
+* the worker-pool path produces rows bit-identical to the in-process path.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.dse import (SweepGrid, annotate_fronts, dominates, pareto_front,
+                       run_points, scenario_kind, scenario_names)
+from repro.sim.config import (ConfigError, apply_overrides,
+                              config_from_overrides, merge_overrides)
+
+
+# ------------------------------------------------------------- overrides
+def test_apply_overrides_dotted_paths():
+    raw = {"cache": {"n_vpus": 4}, "pipeline": {"row_chunk": 8}}
+    out = apply_overrides(raw, {"cache.n_vpus": 2,
+                                "pipeline.tiling.rows": 4,
+                                "pipeline.tiling.cols": 16})
+    assert out["cache"]["n_vpus"] == 2
+    assert out["pipeline"]["tiling"] == {"rows": 4, "cols": 16}
+    assert out["pipeline"]["row_chunk"] == 8
+    # the input raw dict must be untouched (deep copy, not aliasing)
+    assert raw["cache"]["n_vpus"] == 4 and "tiling" not in raw["pipeline"]
+
+
+def test_apply_overrides_scalar_descent_raises():
+    raw = {"cache": {"n_vpus": 4}}
+    with pytest.raises(ConfigError, match="n_vpus"):
+        apply_overrides(raw, {"cache.n_vpus.x": 1})
+
+
+def test_merge_overrides_duplicate_key_raises():
+    with pytest.raises(ConfigError, match="cache.n_vpus"):
+        merge_overrides({"cache.n_vpus": 2}, {"cache.n_vpus": 4},
+                        sources=["axis-a", "axis-b"])
+
+
+def test_merge_overrides_prefix_conflict_raises():
+    # one axis sets the tiling subtree, another a scalar on the same path
+    with pytest.raises(ConfigError, match="pipeline.tiling"):
+        merge_overrides({"pipeline.tiling": None},
+                        {"pipeline.tiling.rows": 4})
+
+
+def test_config_from_overrides_builds_simconfig():
+    cfg = config_from_overrides("arcane-default",
+                                {"cache.n_vpus": 2, "pipeline.row_chunk": 4})
+    assert cfg.n_vpus == 2 and cfg.row_chunk == 4
+    with pytest.raises(ConfigError):
+        config_from_overrides("arcane-default", {"cache.bogus_knob": 1})
+
+
+# ------------------------------------------------------------------ grid
+def _grid(**kw):
+    base = dict(
+        base="arcane-default",
+        scenarios=("cnn-small",),
+        axes={"vpus": {"2": {"cache.n_vpus": 2}, "4": {"cache.n_vpus": 4}},
+              "tile": {"0x0": {"pipeline.tiling.rows": 0,
+                               "pipeline.tiling.cols": 0},
+                       "4x16": {"pipeline.tiling.rows": 4,
+                                "pipeline.tiling.cols": 16}}})
+    base.update(kw)
+    return SweepGrid(**base)
+
+
+def test_grid_expansion_deterministic_ids():
+    pts = _grid().expand(validate=False)
+    ids = [p.point_id for p in pts]
+    assert ids == ["cnn-small|vpus=2|tile=0x0", "cnn-small|vpus=2|tile=4x16",
+                   "cnn-small|vpus=4|tile=0x0", "cnn-small|vpus=4|tile=4x16"]
+    # pure function of the grid: a second expansion is identical
+    assert [p.to_spec() for p in _grid().expand(validate=False)] == \
+        [p.to_spec() for p in pts]
+
+
+def test_grid_conflicting_axes_raise_at_expansion():
+    g = _grid(axes={"a": {"x": {"cache.n_vpus": 2}},
+                    "b": {"y": {"cache.n_vpus": 8}}})
+    with pytest.raises(ConfigError, match="cache.n_vpus"):
+        g.expand(validate=False)
+
+
+def test_grid_unknown_scenario_and_bad_override():
+    with pytest.raises(ConfigError, match="no-such-scenario"):
+        _grid(scenarios=("no-such-scenario",)).expand()
+    g = _grid(axes={"vpus": {"0": {"cache.n_vpus": 0}}})
+    with pytest.raises(ConfigError):
+        g.expand()            # validate=True builds each SimConfig
+
+
+def test_grid_yaml_round_trip(tmp_path):
+    g = _grid()
+    d = g.to_dict()
+    assert SweepGrid.from_dict(d).to_dict() == d
+    import yaml
+    p = tmp_path / "sweep.yaml"
+    p.write_text(yaml.safe_dump(d))
+    assert SweepGrid.from_yaml(str(p)).to_dict() == d
+
+
+def test_scenario_catalog_lookup():
+    assert scenario_kind("cnn-small") == "model"
+    assert scenario_kind("serving-poisson") == "serving"
+    with pytest.raises(KeyError):
+        scenario_kind("nope")
+    assert "cnn-paper" in scenario_names()
+
+
+# ---------------------------------------------------------------- pareto
+OBJ = (("makespan", "min"), ("area", "min"))
+
+
+def _rows():
+    return [
+        {"point_id": "a", "makespan": 100, "area": 3.0},   # front
+        {"point_id": "b", "makespan": 200, "area": 2.0},   # front
+        {"point_id": "c", "makespan": 150, "area": 3.5},   # dom by a
+        {"point_id": "d", "makespan": 100, "area": 3.0},   # tie with a: front
+        {"point_id": "e", "makespan": 300, "area": 4.0},   # dom by a, b, c
+    ]
+
+
+def test_pareto_front_order_independent():
+    import itertools
+    expected = {"a", "b", "d"}
+    rows = _rows()
+    for perm in itertools.permutations(rows):
+        front = pareto_front(list(perm), OBJ)
+        assert {r["point_id"] for r in front} == expected, perm
+
+
+def test_pareto_front_degenerate():
+    one = [{"point_id": "only", "makespan": 10, "area": 1.0}]
+    assert pareto_front(one, OBJ) == one
+    assert pareto_front([], OBJ) == []
+    # None-valued objectives are excluded, not crashed on
+    rows = _rows() + [{"point_id": "n", "makespan": None, "area": 1.0}]
+    assert "n" not in {r["point_id"] for r in pareto_front(rows, OBJ)}
+
+
+def test_annotate_fronts_dominators():
+    rows = _rows()
+    front_ids = annotate_fronts(rows, OBJ)
+    assert set(front_ids) == {"a", "b", "d"}
+    by = {r["point_id"]: r for r in rows}
+    assert by["a"]["on_front"] and by["a"]["dominated_by"] == []
+    assert not by["c"]["on_front"] and by["c"]["dominated_by"] == ["a", "d"]
+    assert by["e"]["dominated_by"] == ["a", "b", "c", "d"]
+
+
+def test_dominates_max_sense():
+    obj = (("goodput", "max"), ("area", "min"))
+    hi = {"goodput": 2.0, "area": 1.0}
+    lo = {"goodput": 1.0, "area": 1.0}
+    assert dominates(hi, lo, obj) and not dominates(lo, hi, obj)
+    assert not dominates(hi, hi, obj)      # equal never dominates
+
+
+# --------------------------------------------------------------- workers
+def test_pool_matches_in_process_bit_for_bit():
+    specs = [p.to_spec() for p in
+             _grid(axes={"vpus": {"2": {"cache.n_vpus": 2},
+                                  "4": {"cache.n_vpus": 4}}}).expand()]
+    assert len(specs) == 2
+    seq = run_points(specs, in_process=True)
+    pool = run_points(specs, jobs=2)
+    assert seq == pool
+    assert [r["point_id"] for r in pool] == [s["point_id"] for s in specs]
+    assert all(r["verified"] and r["conservation_ok"] for r in pool)

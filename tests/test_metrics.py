@@ -317,3 +317,22 @@ def test_histogram_percentile_monotone_and_conservative():
         # conservative: an upper bound within the bucket's 2x resolution
         exact = vals[max(0, -(-len(vals) * q // 100) - 1)]
         assert exact <= p <= max(2 * exact, 1), (q, exact, p)
+
+
+# ------------------------------------------------------ exact percentiles
+def test_exact_percentile_fractional_q():
+    """Regression: int(q) used to truncate fractional quantiles, so p99.9
+    silently returned p99. Nearest-rank must rank on the float q."""
+    from repro.sim.metrics import _exact_percentile
+    vals = list(range(1, 1001))           # 1..1000, already the ranks
+    assert _exact_percentile(vals, 99) == 990
+    assert _exact_percentile(vals, 99.9) == 999
+    assert _exact_percentile(vals, 99.9) != _exact_percentile(vals, 99)
+    assert _exact_percentile(vals, 50) == 500
+    assert _exact_percentile(vals, 100) == 1000
+    assert _exact_percentile(vals, 0) == 1        # rank clamps to 1
+    assert _exact_percentile([], 99.9) == 0.0
+    # 1000 * 99.9 / 100 floats to 999.0000000000001; ceil must not bump the
+    # rank to 1000
+    assert _exact_percentile(vals, 99.99) == 1000  # ceil(999.9) = rank 1000
+    assert _exact_percentile([7], 99.9) == 7
