@@ -1,0 +1,273 @@
+"""Fault-injection benchmark: recovery overhead and graceful degradation.
+
+Sweeps seeded fault pressure (ECC flip rate × compute-corruption rate) and
+one scheduled mid-run hard VPU fault across runtime configurations, over a
+multi-kernel model scenario and the continuous-batching serving scenario.
+Every row is *verified*, not just timed:
+
+* **recoverable rows** — the flushed memory image must be bit-identical to
+  the fault-free run (recovery is functionally exact by construction), the
+  per-kernel stall accounting must conserve with the ``fault_replay`` bin
+  included, and the row reports the ``faults.*`` counters plus the makespan
+  degradation factor the recovery overhead costs;
+* **hard rows** — a VPU offlined halfway through the fault-free makespan:
+  the run must still complete every kernel on the survivors, bit-identical
+  again, with a makespan no better than fault-free;
+* **serving rows** — the serving scenario through a mid-run VPU offline:
+  every request finishes and goodput stays nonzero (reduced, not zero).
+
+Violations print ``bench_faults,FAIL,...`` and exit nonzero — this is the
+CI gate for the fault subsystem. ``--out-json`` writes the shared
+``BENCH_*.json`` envelope (degradation curves per config in ``rows``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import ArcaneCoprocessor
+from repro.core.program import issue_program, place_program
+from repro.dse.scenarios import MODEL_SCENARIOS
+from repro.sim import (FaultConfig, PipelinedRuntime, ServingConfig,
+                       ServingDriver, config_from_overrides,
+                       poisson_arrivals)
+from repro.sim.trace import Tracer
+
+#: (flip_rate, corrupt_rate) grid per scale. max_replays is raised far
+#: above the grid's corruption pressure so every random plan stays within
+#: the replay budget — these are the *recoverable* rows.
+RATE_GRID = {
+    "small": [(0.3, 0.2), (0.8, 0.5)],
+    "medium": [(0.1, 0.05), (0.3, 0.2), (0.8, 0.5)],
+    "large": [(0.05, 0.0), (0.1, 0.05), (0.3, 0.2), (0.6, 0.4), (0.9, 0.7)],
+}
+
+SCENARIOS = {
+    "small": ["cnn-deep-int8"],
+    "medium": ["cnn-deep-int8", "moe-granite"],
+    "large": ["cnn-deep-int8", "moe-granite", "decode-stablelm-3b"],
+}
+
+#: Runtime configurations swept (dotted overrides on arcane-default).
+CONFIGS = {
+    "4vpu": {},
+    "8vpu": {"cache.n_vpus": 8},
+}
+
+SERVING_REQUESTS = {"small": 5, "medium": 8, "large": 16}
+
+
+def _fault_counters(mrep: dict) -> dict:
+    c = mrep.get("counters", {})
+    return {name: c.get(f"faults.{name}", {}).get("value", 0)
+            for name in ("injected", "corrected", "replayed", "offlined")}
+
+
+def _model_run(cfg, scenario: str):
+    """One pipelined execution of a model scenario; returns
+    ``(runtime, flushed memory copy, wall seconds)``."""
+    prog = MODEL_SCENARIOS[scenario](vregs_per_vpu=cfg.vregs_per_vpu,
+                                     vlen_bytes=cfg.vlen_bytes)
+    rt = cfg.make_runtime("pipelined", tracer=Tracer(enabled=False))
+    cop = ArcaneCoprocessor(runtime=rt)
+    t0 = time.perf_counter()
+    addrs = place_program(cop, prog)
+    issue_program(cop, prog, addrs)
+    seconds = time.perf_counter() - t0
+    rt.cache.flush_all()
+    return rt, rt.memory.data.copy(), seconds, prog.n_ops
+
+
+def run_model_rows(config: str, scenario: str, scale: str,
+                   seed: int) -> list[dict]:
+    """Fault-free baseline + the recoverable rate grid + one hard fault."""
+    base_cfg = config_from_overrides("arcane-default", CONFIGS[config])
+    rt0, image0, _, n_ops = _model_run(base_cfg, scenario)
+    baseline = rt0.sim_time
+    rows = []
+
+    def row(kind: str, overrides: dict, **extra) -> dict:
+        cfg = config_from_overrides(
+            "arcane-default", {**CONFIGS[config], **overrides})
+        rt, image, seconds, _ = _model_run(cfg, scenario)
+        mrep = rt.metrics_report()
+        counters = _fault_counters(mrep)
+        injected = counters["injected"]
+        recovered = counters["corrected"] + counters["replayed"]
+        return {
+            "kind": kind,
+            "config": config,
+            "scenario": scenario,
+            "n_ops": n_ops,
+            "completed": rt.stats.kernels_run == n_ops,
+            "makespan": rt.sim_time,
+            "baseline_makespan": baseline,
+            "degradation": rt.sim_time / baseline if baseline else 1.0,
+            "bit_identical": bool(np.array_equal(image0, image)),
+            "conservation_ok": bool(mrep.get("conservation_ok", False)),
+            "seconds": seconds,
+            **counters,
+            "recovery_fraction": (recovered / injected) if injected else None,
+            **extra,
+        }
+
+    for flip, corrupt in RATE_GRID[scale]:
+        rows.append(row("recoverable",
+                        {"faults.flip_rate": flip,
+                         "faults.corrupt_rate": corrupt,
+                         "faults.max_replays": 8,
+                         "faults.seed": seed},
+                        flip_rate=flip, corrupt_rate=corrupt))
+    rows.append(row("hard",
+                    {"faults.hard_at": max(1, baseline // 2),
+                     "faults.hard_vpu": 1},
+                    hard_at=max(1, baseline // 2), hard_vpu=1))
+    return rows
+
+
+def run_serving_row(config: str, scale: str, seed: int) -> dict:
+    """The serving scenario through a mid-run hard VPU fault."""
+    n = SERVING_REQUESTS[scale]
+    reqs = poisson_arrivals(n, 15_000, prompt_range=(3, 8),
+                            new_range=(2, 5), seed=seed)
+    scfg = ServingConfig(kv_max=24, slots=4)
+    n_vpus = CONFIGS[config].get("cache.n_vpus", 4)
+
+    def drive(faults):
+        rt = PipelinedRuntime(n_vpus=n_vpus, metrics=True,
+                              tracer=Tracer(enabled=False), faults=faults)
+        drv = ServingDriver(rt, scfg)
+        return drv, drv.run(reqs)
+
+    base_drv, s0 = drive(None)
+    hard_at = max(1, base_drv.session.now() // 2)
+    drv, s = drive(FaultConfig(hard_at=hard_at, hard_vpu=1))
+    mrep = drv.session.rt.metrics_report()
+    return {
+        "kind": "serving",
+        "config": config,
+        "scenario": "serving-poisson",
+        "hard_at": hard_at,
+        "requests": s["requests"],
+        "finished": s["finished"],
+        "tokens": s["tokens_generated"],
+        "goodput_tokens_per_kcycle": s["goodput_tokens_per_kcycle"],
+        "baseline_goodput_tokens_per_kcycle":
+            s0["goodput_tokens_per_kcycle"],
+        "makespan": drv.session.now(),
+        "baseline_makespan": base_drv.session.now(),
+        "conservation_ok":
+            drv.session.rt.metrics.stalls.conservation_ok(),
+        **_fault_counters(mrep),
+    }
+
+
+def gate(rows: list[dict]) -> list[str]:
+    """The CI conditions; returns the violations (empty = pass)."""
+    bad = []
+    for r in rows:
+        tag = f"{r['kind']},{r['config']},{r['scenario']}"
+        if r["kind"] in ("recoverable", "hard"):
+            if not r["completed"]:
+                bad.append(f"{tag}: run did not complete every kernel")
+            if not r["bit_identical"]:
+                bad.append(f"{tag}: memory image diverged from fault-free")
+            if not r["conservation_ok"]:
+                bad.append(f"{tag}: stall conservation violated")
+        if r["kind"] == "recoverable" and r["offlined"]:
+            bad.append(f"{tag}: recoverable row offlined a VPU")
+        if r["kind"] == "hard":
+            if r["makespan"] < r["baseline_makespan"]:
+                bad.append(f"{tag}: hard-fault makespan beat fault-free")
+            if r["offlined"] != 1:
+                bad.append(f"{tag}: expected exactly 1 offlined VPU, "
+                           f"got {r['offlined']}")
+        if r["kind"] == "serving":
+            if r["finished"] != r["requests"]:
+                bad.append(f"{tag}: {r['requests'] - r['finished']} requests "
+                           f"lost through the VPU offline")
+            if r["goodput_tokens_per_kcycle"] <= 0:
+                bad.append(f"{tag}: goodput collapsed to zero")
+            if not r["conservation_ok"]:
+                bad.append(f"{tag}: stall conservation violated")
+            if r["offlined"] != 1:
+                bad.append(f"{tag}: expected exactly 1 offlined VPU, "
+                           f"got {r['offlined']}")
+    return bad
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(
+        description="Fault-injection sweep: recovery overhead, bit-identity "
+                    "under recoverable faults, graceful VPU degradation")
+    p.add_argument("--scale", choices=sorted(RATE_GRID), default="medium")
+    p.add_argument("--configs", nargs="+", choices=sorted(CONFIGS),
+                   default=sorted(CONFIGS))
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write all rows + summary (BENCH_faults.json)")
+    args = p.parse_args(argv)
+
+    rows = []
+    for config in args.configs:
+        for scenario in SCENARIOS[args.scale]:
+            rows.extend(run_model_rows(config, scenario, args.scale,
+                                       args.seed))
+        rows.append(run_serving_row(config, args.scale, args.seed))
+    for r in rows:
+        if r["kind"] == "serving":
+            print(f"bench_faults,{r['config']},serving,"
+                  f"finished={r['finished']}/{r['requests']},"
+                  f"goodput={r['goodput_tokens_per_kcycle']}"
+                  f"(base {r['baseline_goodput_tokens_per_kcycle']}),"
+                  f"offlined={r['offlined']}")
+        else:
+            print(f"bench_faults,{r['config']},{r['scenario']},{r['kind']},"
+                  f"injected={r['injected']},corrected={r['corrected']},"
+                  f"replayed={r['replayed']},offlined={r['offlined']},"
+                  f"degradation={r['degradation']:.3f},"
+                  f"identical={r['bit_identical']}")
+
+    summary = {
+        c: {"max_recoverable_degradation":
+                max((r["degradation"] for r in rows
+                     if r["config"] == c and r["kind"] == "recoverable"),
+                    default=None),
+            "hard_fault_degradation":
+                max((r["degradation"] for r in rows
+                     if r["config"] == c and r["kind"] == "hard"),
+                    default=None),
+            "serving_goodput_retained":
+                next((r["goodput_tokens_per_kcycle"]
+                      / r["baseline_goodput_tokens_per_kcycle"]
+                      for r in rows
+                      if r["config"] == c and r["kind"] == "serving"
+                      and r["baseline_goodput_tokens_per_kcycle"]), None)}
+        for c in args.configs
+    }
+
+    if args.out_json:
+        sys.path.insert(0, __file__.rsplit("/", 1)[0])
+        from common import bench_doc, write_bench_json
+        doc = bench_doc(
+            "bench_faults",
+            config={"scale": args.scale, "configs": list(args.configs),
+                    "rate_grid": RATE_GRID[args.scale],
+                    "scenarios": SCENARIOS[args.scale], "seed": args.seed},
+            rows=rows, summary=summary)
+        write_bench_json(args.out_json, doc)
+        print(f"bench_faults,json,{args.out_json}")
+
+    failed = gate(rows)
+    if failed:
+        for why in failed:
+            print(f"bench_faults,FAIL,{why}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

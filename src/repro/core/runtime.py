@@ -58,11 +58,16 @@ class PhaseStats:
     # those skips avoided (excluded from allocation_cycles/total_cycles).
     reuse_hits: int = 0
     reused_dma_cycles: int = 0
+    # Fault-recovery overhead (ECC scrubs, replay backoff + re-execution):
+    # part of total_cycles — recovery really costs modeled time — but kept
+    # out of the four phase buckets so Fig. 3 shares stay comparable.
+    fault_cycles: int = 0
 
     @property
     def total_cycles(self) -> int:
         return (self.preamble_cycles + self.allocation_cycles
-                + self.compute_cycles + self.writeback_cycles)
+                + self.compute_cycles + self.writeback_cycles
+                + self.fault_cycles)
 
     def shares(self) -> dict[str, float]:
         t = max(self.total_cycles, 1)
@@ -122,11 +127,13 @@ class CacheRuntime:
         num_matrix_regs: int = NUM_MATRIX_REGS,
         geometry: Optional[VPUGeometry] = None,
         metrics: bool = True,
+        faults=None,
     ):
         # Function-level import: repro.sim.metrics is dependency-free, but a
         # module-level import would trigger repro.sim.__init__ → pipeline →
         # this module while it is still initialising.
         from repro.sim.metrics import SchedulerMetrics
+        from repro.sim.faults import as_fault_plan
         self.memory = memory or MainMemory(16 << 20)
         self.cache = ArcaneCache(self.memory, n_vpus=n_vpus,
                                  vregs_per_vpu=vregs_per_vpu,
@@ -154,6 +161,17 @@ class CacheRuntime:
         # Unified metrics layer (purely observational — never consulted by
         # any scheduling decision, so metrics on/off cannot change schedules).
         self.metrics = SchedulerMetrics(enabled=metrics)
+        # Fault-injection plan (None = faults off, the default). The plan is
+        # keyed by kernel id only, so both schedulers draw identical faults
+        # for the same program. ``offline`` holds hard-faulted VPU indices:
+        # they accept no new work, and their residents are evacuated.
+        self.faults = as_fault_plan(faults)
+        self.offline: set[int] = set()
+        if self.faults is not None and self.faults.cfg.hard_at and \
+                not 0 <= self.faults.cfg.hard_vpu < n_vpus:
+            raise ValueError(
+                f"faults.hard_vpu {self.faults.cfg.hard_vpu} out of range "
+                f"for {n_vpus} VPUs")
         # When set (by a scheduler wanting per-port timing), every
         # consolidation DMA appends (vpu, cycles) here — the transfer runs on
         # the port of the VPU *holding* the resident, not the dispatch VPU.
@@ -272,9 +290,14 @@ class CacheRuntime:
 
     # ============================================================== scheduler
     def _select_vpu(self, needed_lines: int) -> int:
-        """Fewest-dirty-lines policy (§IV-B2) among VPUs with capacity."""
+        """Fewest-dirty-lines policy (§IV-B2) among VPUs with capacity.
+
+        Offlined (hard-faulted) VPUs are never candidates — graceful
+        degradation redistributes work across the survivors."""
         best, best_key = -1, None
         for v in range(self.cache.n_vpus):
+            if v in self.offline:
+                continue
             free = self.cache.free_line_count(v)
             if free < needed_lines:
                 continue
@@ -311,6 +334,12 @@ class CacheRuntime:
 
     def _run_one(self, qk: QueuedKernel) -> None:
         t0 = time.perf_counter()
+        kid = qk.deps.kernel_id
+        # A scheduled hard fault due at (or before) the current clock fires
+        # before this kernel is placed, so placement sees the survivor set.
+        self._maybe_hard_fault(self.session_now())
+        kf = self.faults.kernel_faults(kid) if self.faults is not None \
+            else None
         vpu = self.vpus[self._choose_vpu(qk)]
 
         # -------------------------------------------------- allocation phase
@@ -320,11 +349,28 @@ class CacheRuntime:
         self.stats.writeback_cycles += alloc.wb_cycles
         self.stats.allocation_s += time.perf_counter() - t0
 
+        # ------------------------------------------- ECC tier (fault model)
+        fault_cycles = 0
+        if kf is not None and kf.ecc_bits:
+            fault_cycles += self._fault_scrub(qk, alloc, kf)
+
         # ----------------------------------------------------- compute phase
         t1 = time.perf_counter()
         cycles = self._compute_step(qk, vpu, alloc.src_res, alloc.dst_res)
         self.stats.compute_cycles += cycles
         self.stats.compute_s += time.perf_counter() - t1
+
+        # ---------------------------------------- replay tier (fault model)
+        if kf is not None and kf.replays:
+            for attempt in range(kf.replays):
+                self._fault_corrupt_dst(qk, alloc, attempt)
+                rc = self._compute_step(qk, vpu, alloc.src_res, alloc.dst_res)
+                fault_cycles += self.faults.backoff(attempt) + rc
+                self.metrics.inc("faults.injected")
+                self.metrics.inc("faults.replayed")
+                self.metrics.observe("fault.replay_latency_cycles",
+                                     self.faults.backoff(attempt) + rc)
+        self.stats.fault_cycles += fault_cycles
 
         # --------------------------------------------------- writeback phase
         t2 = time.perf_counter()
@@ -335,21 +381,30 @@ class CacheRuntime:
         # Serial stall synthesis: phases run back-to-back, so the window is
         # exactly the phase totals (conserved by construction).
         self.metrics.kernel_serial(
-            qk.deps.kernel_id, qk.spec.name, busy=cycles,
+            kid, qk.spec.name, busy=cycles,
             bins={"cache_lock": self.geometry.schedule_cycles,
                   "dma_wait": alloc.dma_cycles,
-                  "drain": alloc.wb_cycles + retire_wb})
-        self._notify_retired(qk.deps.kernel_id, self.session_now())
+                  "drain": alloc.wb_cycles + retire_wb,
+                  "fault_replay": fault_cycles})
+        self._notify_retired(kid, self.session_now())
+        # Retry exhaustion: the kernel completed on scrubbed state, but the
+        # datapath is deemed faulty — fence it after the retire.
+        if kf is not None and kf.exhausted:
+            self._offline_vpu(vpu.index, self.session_now())
 
     # ------------------------------------------------- shared scheduler steps
     # The serial scheduler above and repro.sim.pipeline.PipelinedRuntime both
     # drive exactly these four steps; only *when* each step runs differs, so
     # the numerical results are identical by construction.
     def _choose_vpu(self, qk: QueuedKernel) -> int:
-        """VPU selection: resident-operand affinity, else fewest-dirty-lines."""
+        """VPU selection: resident-operand affinity, else fewest-dirty-lines.
+
+        Affinity never points at an offlined VPU: its surviving residents
+        (if any) are consolidated through memory by the cross-VPU path in
+        ``_allocate_source`` when a healthy VPU picks the kernel up."""
         for s in qk.src_bindings:
             r = self.resident.get(s.phys_id)
-            if r is not None:
+            if r is not None and r.vpu not in self.offline:
                 return r.vpu
         return self._select_vpu(self._lines_for(qk))
 
@@ -415,6 +470,106 @@ class CacheRuntime:
 
     def _needed_later(self, phys_id: int) -> bool:
         return any(phys_id in qk.deps.sources for qk in self.queue)
+
+    # ============================================================ fault model
+    # Injection and recovery are *functionally exact*: injection really flips
+    # bits in the modeled SRAM array and recovery really re-fetches or
+    # recomputes, always inline at dispatch time — while the kernel's
+    # operands are guaranteed resident and valid — so a run whose faults are
+    # all recoverable flushes a memory image bit-identical to the fault-free
+    # run. The pipelined scheduler reuses these helpers for the functional
+    # side and layers its own event-timeline cost model on top.
+    def _maybe_hard_fault(self, t: int, eq=None) -> None:
+        """Fire the scheduled hard fault once the clock reaches ``hard_at``.
+
+        Checked lazily at scheduler steps (never via a posted event) so a
+        run that finishes before ``hard_at`` keeps its fault-free makespan.
+        """
+        f = self.faults
+        if f is None or not f.cfg.hard_at:
+            return
+        v = f.cfg.hard_vpu
+        if v in self.offline or t < f.cfg.hard_at:
+            return
+        self._offline_vpu(v, t, eq)
+
+    def _offline_vpu(self, v: int, t: int, eq=None) -> None:
+        """Hard-fault VPU ``v``: evacuate its residents (dirty ones land in
+        admission order, clean ones drop) and remove it from every placement
+        policy. Raises :class:`FaultError` when no healthy VPU remains."""
+        if v in self.offline:
+            return
+        self.offline.add(v)
+        self.metrics.inc("faults.offlined")
+        self._evacuate_vpu(v)
+        if len(self.offline) >= self.cache.n_vpus:
+            from repro.sim.faults import FaultError
+            raise FaultError(
+                f"hard fault offlined vpu{v}: no healthy VPU remains "
+                f"({len(self.offline)}/{self.cache.n_vpus} offline)")
+
+    def _evacuate_vpu(self, v: int) -> None:
+        """Consolidate every resident on ``v`` back to memory (the cache
+        controller can still drain a fenced VPU's data array). Mirrors
+        ``_drain_deferred_residents``: pending readers re-fetch the landed
+        bytes from a healthy VPU afterwards."""
+        for phys_id in list(self.resident):
+            res = self.resident.get(phys_id)
+            if res is None or res.vpu != v:
+                continue
+            if res.dirty:
+                b = self._binding_of(phys_id)
+                self.stats.writeback_cycles += (
+                    self._flush_older_aliases(b)
+                    + self._writeback_resident(b, res))
+                self.at.release(phys_id, RegionKind.DST)
+            else:
+                self._evict_resident(phys_id)
+                self.at.release(phys_id, RegionKind.DST)
+
+    def _fault_scrub(self, qk: QueuedKernel, alloc: Allocation,
+                     kf) -> int:
+        """ECC tier: flip bit(s) in the first freshly-fetched source line,
+        then recover — correct in place (single-bit, SECDED syndrome) or
+        replay the transfer from memory's clean architectural copy
+        (double-bit). Returns the recovery cycle charge (0 when the kernel
+        fetched nothing, i.e. every operand was already resident)."""
+        if not alloc.dma_segments:
+            return 0
+        kid = qk.deps.kernel_id
+        si = alloc.dma_segments[0][0]
+        res = alloc.src_res[si]
+        b = qk.src_bindings[si]
+        line = int(res.line_idxs[0])
+        span = min(b.row_bytes, self.cache.vlen_bytes)
+        byte, bit = self.faults.flip_position(kid, 0, span)
+        self.metrics.inc("faults.injected")
+        self.cache.data[line, byte] ^= 1 << bit
+        if kf.ecc_bits == 1:
+            # The syndrome pinpoints the bit: correct in place.
+            self.cache.data[line, byte] ^= 1 << bit
+            self.metrics.inc("faults.corrected")
+            return self.faults.cfg.ecc_penalty
+        # Double-bit: detected but uncorrectable — make the line genuinely
+        # bad with a second flip, then re-fetch the whole source region.
+        byte2, bit2 = self.faults.flip_position(kid, 1, span)
+        self.cache.data[line, byte2] ^= 1 << bit2
+        nbytes = self.cache.dma_in_2d(res.vpu, res.line_idxs, b.addr, b.rows,
+                                      b.row_bytes, b.stride_bytes)
+        self.metrics.inc("faults.replayed")
+        return (self.faults.cfg.ecc_penalty + self.faults.backoff(0)
+                + self.geometry.dma_cycles(nbytes, b.rows))
+
+    def _fault_corrupt_dst(self, qk: QueuedKernel, alloc: Allocation,
+                           attempt: int) -> None:
+        """Replay tier injection: flip one bit in the destination's first
+        line — the detected compute corruption the replay overwrites when
+        the kernel re-executes from its still-clean sources."""
+        kid = qk.deps.kernel_id
+        b = qk.dst_binding
+        span = min(b.row_bytes, self.cache.vlen_bytes)
+        byte, bit = self.faults.flip_position(kid, 16 + attempt, span)
+        self.cache.data[int(alloc.dst_res.line_idxs[0]), byte] ^= 1 << bit
 
     # ============================================================== allocator
     def _claim(self, vpu: VPU, b: MatrixBinding) -> ResidentMatrix:

@@ -10,6 +10,8 @@ Layout:
   * :mod:`repro.sim.trace`    — Chrome ``trace_event`` export
   * :mod:`repro.sim.metrics`  — stall attribution, critical path, typed
     counters/gauges/histograms (the unified metrics layer)
+  * :mod:`repro.sim.faults`   — seeded fault injection (ECC bit flips,
+    bounded instruction replay, hard VPU faults with graceful degradation)
 
 The serial :class:`repro.core.runtime.CacheRuntime` and the pipelined
 scheduler share the same decode/allocate/compute/retire steps, so their
@@ -29,7 +31,10 @@ from repro.sim.metrics import (METRICS_SCHEMA_VERSION, STALL_BINS, Activity,
                                MetricsRegistry, RequestLog, RequestRecord,
                                SchedulerMetrics, StallTable,
                                summarize_critical_path)
-from repro.sim.pipeline import PipelinedRuntime, PipelineReport, ReuseEntry
+from repro.sim.faults import (FaultConfig, FaultError, FaultPlan,
+                              KernelFaults)
+from repro.sim.pipeline import (DeadlockError, PipelinedRuntime,
+                                PipelineReport, ReuseEntry)
 from repro.sim.serving import (Request, ServingConfig, ServingDriver,
                                bursty_arrivals, poisson_arrivals)
 from repro.sim.trace import (PHASES, CounterRecord, FlowRecord, TraceRecord,
@@ -40,7 +45,9 @@ __all__ = [
     "config_from_overrides", "deep_merge", "load_config", "load_raw",
     "merge_overrides", "ChunkTrain", "Event", "EventQueue",
     "Interval", "Resource", "TileTrain", "Timeline", "interleave_blocks",
-    "row_chunks", "split_proportional", "tile_entries", "PipelinedRuntime",
+    "row_chunks", "split_proportional", "tile_entries", "DeadlockError",
+    "FaultConfig", "FaultError", "FaultPlan", "KernelFaults",
+    "PipelinedRuntime",
     "PipelineReport", "ReuseEntry", "Request", "ServingConfig",
     "ServingDriver", "bursty_arrivals", "poisson_arrivals",
     "PHASES", "TraceRecord", "Tracer",

@@ -39,6 +39,9 @@ _SECTIONS = {
     "pipeline": ("row_chunk", "dataflow", "tiling", "reuse"),
     "memory": ("bytes",),
     "metrics": ("enabled",),
+    "faults": ("flip_rate", "double_bit_fraction", "corrupt_rate",
+               "max_replays", "ecc_penalty", "replay_backoff",
+               "hard_at", "hard_vpu", "seed", "schedule"),
 }
 
 
@@ -66,6 +69,18 @@ class SimConfig:
     reuse: bool = False
     metrics: bool = True
     memory_bytes: int = 16 << 20
+    # ``faults:`` section — see repro.sim.faults.FaultConfig for semantics.
+    # All-zero defaults collapse to a fault-free run (no plan is built).
+    fault_flip_rate: float = 0.0
+    fault_double_bit_fraction: float = 0.25
+    fault_corrupt_rate: float = 0.0
+    fault_max_replays: int = 3
+    fault_ecc_penalty: int = 32
+    fault_replay_backoff: int = 64
+    fault_hard_at: int = 0
+    fault_hard_vpu: int = 0
+    fault_seed: int = 0
+    fault_schedule: tuple = ()
     description: str = ""
 
     def __post_init__(self):
@@ -101,6 +116,22 @@ class SimConfig:
             raise ConfigError(
                 "pipeline.tiling/reuse require pipeline.dataflow: on (the "
                 "legacy concatenated-stream model has no per-operand trains)")
+        if not isinstance(self.fault_schedule, (list, tuple)):
+            raise ConfigError(
+                f"faults.schedule must be a list of per-kernel entries, "
+                f"got {self.fault_schedule!r}")
+        object.__setattr__(self, "fault_schedule",
+                           tuple(self.fault_schedule))
+        try:
+            # FaultConfig owns range/shape validation; build it eagerly so a
+            # bad YAML fails at load time, not mid-run.
+            self.fault_config()
+        except (TypeError, ValueError) as e:
+            raise ConfigError(str(e)) from e
+        if self.fault_hard_at and not 0 <= self.fault_hard_vpu < self.n_vpus:
+            raise ConfigError(
+                f"faults.hard_vpu must name a VPU in [0, {self.n_vpus}), "
+                f"got {self.fault_hard_vpu}")
 
     @property
     def tiling(self):
@@ -124,6 +155,25 @@ class SimConfig:
             vlen_bytes=self.vlen_bytes,
         )
 
+    def fault_config(self):
+        """The ``faults:`` section as a :class:`repro.sim.faults.FaultConfig`,
+        or None when every fault source is disarmed (the common case — the
+        runtime then skips plan construction entirely)."""
+        from repro.sim.faults import FaultConfig
+        fc = FaultConfig(
+            flip_rate=self.fault_flip_rate,
+            double_bit_fraction=self.fault_double_bit_fraction,
+            corrupt_rate=self.fault_corrupt_rate,
+            max_replays=self.fault_max_replays,
+            ecc_penalty=self.fault_ecc_penalty,
+            replay_backoff=self.fault_replay_backoff,
+            hard_at=self.fault_hard_at,
+            hard_vpu=self.fault_hard_vpu,
+            seed=self.fault_seed,
+            schedule=self.fault_schedule,
+        )
+        return None if fc.is_noop else fc
+
     def make_runtime(self, scheduler: str = "serial", *, memory=None,
                      tracer=None):
         """Instantiate a runtime for this config.
@@ -140,6 +190,7 @@ class SimConfig:
             queue_capacity=self.queue_capacity,
             geometry=self.geometry(),
             metrics=self.metrics,
+            faults=self.fault_config(),
         )
         if scheduler == "serial":
             return CacheRuntime(**kwargs)
@@ -175,6 +226,8 @@ class SimConfig:
                     kwargs["memory_bytes"] = v
                 elif (section, k) == ("metrics", "enabled"):
                     kwargs["metrics"] = v
+                elif section == "faults":
+                    kwargs[f"fault_{k}"] = v
                 else:
                     kwargs[k] = v
         if raw:

@@ -345,7 +345,16 @@ class Resource:
         self.name = name
         self.free_at = 0
         self.busy_cycles = 0
+        self.fenced = False
         self.intervals: list[Interval] = []
+
+    def fence(self, t: int) -> None:
+        """Permanently fence the resource at ``t``: a hard fault offlined
+        the modeled unit, so any further :meth:`acquire` raises. ``free_at``
+        advances to the fence time so utilization reporting never sees
+        phantom idle headroom on a dead unit."""
+        self.fenced = True
+        self.free_at = max(self.free_at, int(t))
 
     def acquire(self, at: int, duration: int, label: str = "") -> Interval:
         """Book ``duration`` cycles starting no earlier than ``at``.
@@ -354,6 +363,10 @@ class Resource:
         resource is still busy). Zero-duration bookings are recorded too —
         they matter for trace completeness (e.g. a deferred write-back).
         """
+        if self.fenced:
+            raise RuntimeError(
+                f"{self.name}: resource is fenced (hard fault offlined it); "
+                f"the scheduler must not book new work here")
         if duration < 0:
             raise ValueError(f"{self.name}: negative duration {duration}")
         start = max(int(at), self.free_at)

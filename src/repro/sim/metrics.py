@@ -43,8 +43,11 @@ from typing import Any, Iterable, Optional
 #:   dma_wait      — compute piece waiting for operand tiles (DMA port busy)
 #:   datapath_busy — operand tiles landed but the datapath still runs another
 #:                   kernel's piece
+#:   fault_replay  — fault-recovery overhead: ECC scrub penalties on a
+#:                   corrupted operand fetch plus bounded instruction-replay
+#:                   attempts (backoff + requeue) after detected corruption
 STALL_BINS = ("raw_dep", "war_guard", "capacity", "cache_lock", "drain",
-              "dma_wait", "datapath_busy")
+              "dma_wait", "datapath_busy", "fault_replay")
 
 #: Version stamp of the metrics-report dict layout (and of the shared BENCH
 #: envelope in benchmarks/common.py, which embeds these reports).
@@ -282,16 +285,19 @@ class StallTable:
 
     def dispatched(self, kid: int, t: int, vpu: int, lock_end: int,
                    dma_start: int,
-                   pieces: Iterable[tuple[int, int, int]]) -> None:
+                   pieces: Iterable[tuple[int, int, int]],
+                   fault_end: int = 0) -> None:
         """Attribute the post-dispatch window.
 
         ``pieces`` is the kernel's compute pieces as ``(gate, start, end)``
         in datapath booking order (``gate`` = the cycle the piece's operand
         tiles were all landed). A cursor walks ``[t, last_end]``; every gap
         before a piece's start is split — cache-lock claim up to
-        ``lock_end``, consolidation drain up to ``dma_start``, operand-tile
-        wait up to the piece's gate, and datapath contention for the rest —
-        so ``busy + Σ bins`` covers the window with no double counting.
+        ``lock_end``, consolidation drain up to ``dma_start``, ECC scrub up
+        to ``fault_end`` (the end of the fault-recovery window that delayed
+        the operand fetch, 0 when the fetch was clean), operand-tile wait up
+        to the piece's gate, and datapath contention for the rest — so
+        ``busy + Σ bins`` covers the window with no double counting.
         """
         rec = self.records.get(kid)
         if rec is None:
@@ -312,6 +318,10 @@ class StallTable:
                     step = min(start, dma_start) - cursor
                     rec.bins["drain"] += step
                     cursor += step
+                if cursor < fault_end and cursor < start:
+                    step = min(start, fault_end) - cursor
+                    rec.bins["fault_replay"] += step
+                    cursor += step
                 if cursor < gate and cursor < start:
                     step = min(start, gate) - cursor
                     rec.bins["dma_wait"] += step
@@ -322,6 +332,20 @@ class StallTable:
             rec.busy += end - start
             cursor = max(cursor, end)
         rec._mark = cursor
+
+    def replayed(self, kid: int, start: int, end: int) -> None:
+        """Extend an open dispatch window with one replay attempt booked as
+        ``[start, end)`` on the datapath: the gap from the record's cursor
+        to ``start`` (replay backoff + port contention) charges to the
+        ``fault_replay`` bin and the re-execution counts as busy, so the
+        eventual :meth:`retired` check still conserves."""
+        rec = self.records.get(kid)
+        if rec is None:
+            return
+        if start > rec._mark:
+            rec.bins["fault_replay"] += start - rec._mark
+        rec.busy += end - start
+        rec._mark = max(rec._mark, end)
 
     def retired(self, kid: int, t: int) -> KernelStall:
         rec = self.records[kid]
@@ -593,14 +617,25 @@ class SchedulerMetrics:
             self.stalls.blocked(kid, t, reason)
 
     def kernel_dispatched(self, kid: int, t: int, vpu: int, lock_end: int,
-                          dma_start: int, pieces) -> None:
+                          dma_start: int, pieces, fault_end: int = 0) -> None:
         if not self.enabled:
             return
-        self.stalls.dispatched(kid, t, vpu, lock_end, dma_start, pieces)
+        self.stalls.dispatched(kid, t, vpu, lock_end, dma_start, pieces,
+                               fault_end=fault_end)
         self.inc("kernels.dispatched")
         rec = self.stalls.records.get(kid)
         if rec is not None:
             self.observe("kernel.dispatch_wait_cycles", t - rec.ready)
+
+    def kernel_replayed(self, kid: int, t: int, start: int, end: int) -> None:
+        """One instruction-replay attempt detected at ``t`` and re-executed
+        over ``[start, end)``: feeds the stall table (conservation), the
+        ``faults.replayed`` counter, and the replay-latency histogram."""
+        if not self.enabled:
+            return
+        self.stalls.replayed(kid, start, end)
+        self.inc("faults.replayed")
+        self.observe("fault.replay_latency_cycles", end - t)
 
     def kernel_retired(self, kid: int, t: int) -> None:
         if not self.enabled:
@@ -666,6 +701,7 @@ class RequestRecord:
     admitted: Optional[int] = None
     first_token: Optional[int] = None
     finished: Optional[int] = None
+    rejected: Optional[int] = None     # admission-validation bounce time
     tokens: int = 0
 
     @property
@@ -696,7 +732,8 @@ class RequestRecord:
         return {"rid": self.rid, "prompt_len": self.prompt_len,
                 "max_new": self.max_new, "arrived": self.arrived,
                 "admitted": self.admitted, "first_token": self.first_token,
-                "finished": self.finished, "tokens": self.tokens,
+                "finished": self.finished, "rejected": self.rejected,
+                "tokens": self.tokens,
                 "queue_wait": self.queue_wait, "ttft": self.ttft,
                 "tpot": self.tpot}
 
@@ -741,6 +778,15 @@ class RequestLog:
         self.metrics.inc("serving.requests.arrived")
         return rec
 
+    def reject(self, rid: int, t: int) -> None:
+        """Admission validation bounced the request (it can never fit the
+        per-request KV budget): it arrived but is never admitted, so it
+        stays out of every latency percentile."""
+        rec = self.records[rid]
+        rec.rejected = int(t)
+        self.metrics.inc("serving.rejected")
+        self.metrics.inc("serving.requests.rejected")
+
     def admit(self, rid: int, t: int) -> None:
         rec = self.records[rid]
         rec.admitted = int(t)
@@ -781,6 +827,8 @@ class RequestLog:
         return {
             "requests": len(self.records),
             "finished": len(done),
+            "rejected": sum(1 for r in self.records.values()
+                            if r.rejected is not None),
             "tokens_generated": toks,
             "ttft_p50": _exact_percentile(ttfts, 50),
             "ttft_p99": _exact_percentile(ttfts, 99),

@@ -37,7 +37,28 @@ from repro.core.regions import StridedRegion, contains_cached
 from repro.core.runtime import CacheRuntime, QueuedKernel
 from repro.sim.events import (EventQueue, Resource, TileTrain, Timeline,
                               row_chunks, split_proportional, tile_entries)
+from repro.sim.faults import FaultError
 from repro.sim.trace import Tracer
+
+
+class DeadlockError(RuntimeError):
+    """The open-loop session drain stopped making progress with work still
+    pending — a genuine dependency deadlock (e.g. a kernel whose RAW edge
+    can never be satisfied), not a capacity stall.
+
+    Structured diagnostics ride along for the operator:
+
+    * ``pending`` — ``{kernel_id: {"kernel": name, "blocked_on": reason,
+      "unmet_deps": [ids]}}`` for every stuck kernel, with the last blocked
+      reason the stall tracker observed (None when metrics are disabled);
+    * ``resources`` — ``{resource_name: free_at}`` for every modeled
+      resource at the moment the drain wedged.
+    """
+
+    def __init__(self, message: str, pending: dict, resources: dict):
+        super().__init__(message)
+        self.pending = pending
+        self.resources = resources
 
 
 @dataclasses.dataclass(frozen=True)
@@ -400,6 +421,10 @@ class PipelinedRuntime(CacheRuntime):
                 ev = eq.pop()
                 t = eq.advance_clock(ev.time)
                 self.events_processed += 1
+                # Lazy hard-fault check: fires at the first event at or
+                # after ``hard_at`` (never via a posted event, so runs that
+                # finish earlier keep their fault-free makespan).
+                self._maybe_hard_fault(t, eq)
                 if ev.kind == "dispatch":
                     # Decode finished: this kernel becomes examinable.
                     self._wake.add(ev.payload)
@@ -638,13 +663,19 @@ class PipelinedRuntime(CacheRuntime):
     def _choose_vpu_pipelined(self, qk: QueuedKernel, t: int) -> Optional[int]:
         """Same policy family as the serial scheduler — resident-operand
         affinity first — extended with earliest-free-datapath preference so
-        independent kernels spread across VPUs. Returns None to wait."""
+        independent kernels spread across VPUs. Returns None to wait.
+
+        Offlined VPUs never attract work: affinity to a resident stranded on
+        a fenced VPU falls through to the healthy candidates (the cross-VPU
+        path in ``_allocate_source`` consolidates the resident through
+        memory when the kernel lands elsewhere)."""
         for s in qk.src_bindings:
             r = self.resident.get(s.phys_id)
-            if r is not None:
-                return r.vpu if self._capacity_ok(qk, r.vpu) else None
+            if r is None or r.vpu in self.offline:
+                continue
+            return r.vpu if self._capacity_ok(qk, r.vpu) else None
         cands = [v for v in range(self.cache.n_vpus)
-                 if self._capacity_ok(qk, v)]
+                 if v not in self.offline and self._capacity_ok(qk, v)]
         if not cands:
             return None
         return min(cands, key=lambda v: (max(self.res_dp[v].free_at, t),
@@ -656,6 +687,8 @@ class PipelinedRuntime(CacheRuntime):
                   eq: EventQueue) -> None:
         kid = qk.deps.kernel_id
         vpu = self.vpus[v]
+        kf = self.faults.kernel_faults(kid) if self.faults is not None \
+            else None
         # Functional allocation happens NOW, in dependency order; the events
         # below only model when the hardware would finish each piece. (The
         # allocation's aliased-dirty flushes consolidate through
@@ -717,6 +750,29 @@ class PipelinedRuntime(CacheRuntime):
                                   "writeback", f"vpu{wv}.dma", wb_iv.start,
                                   wb_iv.end, kernel=kid, vpu=wv)
             self.metrics.inc("wb.consolidations")
+
+        # ECC tier (fault model): the injection + recovery is functional —
+        # bits really flip in the data array and the scrub really corrects
+        # or re-fetches (see CacheRuntime._fault_scrub) — and the recovery
+        # cycles book as a window on this VPU's DMA port ahead of the
+        # operand tile trains (FIFO order pushes the trains behind it). The
+        # window's end feeds the stall table so the delay bins as
+        # ``fault_replay``, keeping per-kernel conservation exact.
+        fault_end = 0
+        if kf is not None and kf.ecc_bits:
+            scrub_cycles = self._fault_scrub(qk, alloc, kf)
+            if scrub_cycles:
+                f_iv = self.res_dma[v].acquire(dma_start, scrub_cycles,
+                                               label=f"k{kid} ecc-scrub")
+                fault_end = f_iv.end
+                self.stats.fault_cycles += scrub_cycles
+                kind = "correct" if kf.ecc_bits == 1 else "refetch"
+                self.tracer.emit(f"{qk.spec.name} k{kid} ecc-{kind}",
+                                 "allocation", f"vpu{v}.dma", f_iv.start,
+                                 f_iv.duration, kernel=kid, vpu=v)
+                self.metrics.activity(f"{qk.spec.name} k{kid} ecc-{kind}",
+                                      "allocation", f"vpu{v}.dma", f_iv.start,
+                                      f_iv.end, kernel=kid, vpu=v)
 
         # Tile-train DMA-in (intra-instruction pipelining): each source
         # operand streams as its OWN train of (row-band × column-tile)
@@ -833,6 +889,15 @@ class PipelinedRuntime(CacheRuntime):
         compute_cycles = self._compute_step(qk, vpu, alloc.src_res,
                                             alloc.dst_res)
         self.stats.compute_cycles += compute_cycles
+        # Replay tier (fault model), functional half: each corrupted attempt
+        # flips a destination bit and re-executes from the still-resident,
+        # still-clean sources — inline, while they are guaranteed valid (a
+        # later kernel's consolidation sweep may evict them mid-flight).
+        # The *timing* of each replay attempt books at compute_done.
+        if kf is not None and kf.replays:
+            for attempt in range(kf.replays):
+                self._fault_corrupt_dst(qk, alloc, attempt)
+                self._compute_step(qk, vpu, alloc.src_res, alloc.dst_res)
         # Matching compute pieces. Dataflow gating: the output-tile grid is
         # paced row-wise by the longest row-streaming train and column-wise
         # by the widest column-streaming train, and tile (i, j) waits for the
@@ -914,11 +979,15 @@ class PipelinedRuntime(CacheRuntime):
             piece_spans.append((lock_iv.end, dp_iv.start, dp_iv.end))
 
         self.metrics.kernel_dispatched(kid, t, v, lock_iv.end, dma_start,
-                                       piece_spans)
+                                       piece_spans, fault_end=fault_end)
         if self.reuse:
             for region, landed in streamed:
                 self._reuse_note(v, region, landed)
-        inflight[kid] = (qk, v, alloc.src_res, alloc.dst_res)
+        # attempt counts the replay bookings already modeled (0 = the first
+        # compute_done is the initial execution); compute_cycles is carried
+        # so each replay re-books the same datapath occupancy.
+        inflight[kid] = (qk, v, alloc.src_res, alloc.dst_res,
+                        kf, 0, compute_cycles)
         self._emit_counters(t)
         eq.push(dp_iv.end, "compute_done", kid)
 
@@ -973,7 +1042,31 @@ class PipelinedRuntime(CacheRuntime):
 
     def _handle_compute_done(self, kid: int, t: int, inflight: dict,
                              eq: EventQueue) -> None:
-        qk, v, src_res, dst_res = inflight.pop(kid)
+        qk, v, src_res, dst_res, kf, attempt, compute_cycles = inflight[kid]
+        # Replay tier, timing half: each attempt re-books the datapath after
+        # its backoff and re-fires compute_done — timing only; the replayed
+        # execution already ran inline at dispatch, so the functional result
+        # is correct no matter how many attempts the timing models. A VPU
+        # offlined mid-flight skips the bookings (its datapath is fenced;
+        # the hard-fault path owns the rest of the story).
+        if kf is not None and attempt < kf.replays and v not in self.offline:
+            backoff = self.faults.backoff(attempt)
+            dp_iv = self.res_dp[v].acquire(t + backoff, compute_cycles,
+                                           label=f"k{kid} replay{attempt}")
+            self.tracer.emit(f"{qk.spec.name} k{kid} replay[{attempt}]",
+                             "compute", f"vpu{v}.datapath", dp_iv.start,
+                             dp_iv.duration, kernel=kid, vpu=v)
+            self.metrics.activity(f"{qk.spec.name} k{kid} replay[{attempt}]",
+                                  "compute", f"vpu{v}.datapath", dp_iv.start,
+                                  dp_iv.end, kernel=kid, vpu=v)
+            self.metrics.inc("faults.injected")
+            self.metrics.kernel_replayed(kid, t, dp_iv.start, dp_iv.end)
+            self.stats.fault_cycles += dp_iv.end - t
+            inflight[kid] = (qk, v, src_res, dst_res,
+                             kf, attempt + 1, compute_cycles)
+            eq.push(dp_iv.end, "compute_done", kid)
+            return
+        inflight.pop(kid)
         self.metrics.kernel_retired(kid, t)
         wb, segs = self._retire_timed(qk, src_res, dst_res)
         self.stats.writeback_cycles += wb
@@ -982,6 +1075,14 @@ class PipelinedRuntime(CacheRuntime):
             self._book_writebacks(segs, (v, wb), t,
                                   f"{qk.spec.name} k{kid} writeback", eq,
                                   kernel=kid)
+        if v in self.offline:
+            # The VPU died while this kernel was in flight: its (now retired)
+            # destination must not stay deferred-resident on a fenced VPU.
+            self._evacuate_vpu_timed(v, t, eq)
+        elif kf is not None and kf.exhausted:
+            # Retry exhaustion: the final attempt completed on scrubbed
+            # state, but the datapath is deemed faulty — fence it now.
+            self._offline_vpu(v, t, eq)
         self._drain_idle_dma(t, inflight, eq)
         self._emit_counters(t)
         # This completion satisfies dependency edges out of ``kid``, and the
@@ -1005,7 +1106,7 @@ class PipelinedRuntime(CacheRuntime):
         headroom; each port takes one drain per sweep, and the ``wb_done``
         event triggers the next sweep."""
         busy_phys: set[int] = set()
-        for qk, _, _, _ in inflight.values():
+        for qk, *_ in inflight.values():
             busy_phys.update(s.phys_id for s in qk.src_bindings)
             busy_phys.add(qk.dst_binding.phys_id)
         eligible = []
@@ -1037,6 +1138,62 @@ class PipelinedRuntime(CacheRuntime):
             self._book_writebacks(segs, (v, wb), t, f"drain phys{phys_id}",
                                   eq, phys=phys_id)
 
+    # ---------------------------------------------------------- fault model
+    def _offline_vpu(self, v: int, t: int, eq=None) -> None:
+        """Hard-fault VPU ``v`` under the event timeline: fence its datapath
+        (any further booking raises), evacuate its residents with timed
+        write-backs, and mark it offline for every placement policy.
+        Kernels already in flight on ``v`` run to completion — their
+        functional work happened at dispatch — and their leftovers are
+        evacuated at their retire. Raises :class:`FaultError` when the last
+        healthy VPU dies."""
+        if v in self.offline:
+            return
+        self.offline.add(v)
+        self.res_dp[v].fence(t)
+        self.metrics.inc("faults.offlined")
+        self.tracer.emit(f"vpu{v} offline (hard fault)", "writeback",
+                         f"vpu{v}.datapath", t, 0, instant=True, vpu=v)
+        self._evacuate_vpu_timed(v, t, eq)
+        if len(self.offline) >= self.cache.n_vpus:
+            raise FaultError(
+                f"hard fault offlined vpu{v}: no healthy VPU remains "
+                f"({len(self.offline)}/{self.cache.n_vpus} offline)")
+        # Survivors may now be the only capacity left — re-examine blocked
+        # kernels so pending work redistributes immediately.
+        self._wake_capacity_blocked()
+        self._wake.update(self._pending_map)
+
+    def _evacuate_vpu_timed(self, v: int, t: int, eq=None) -> None:
+        """Timed counterpart of ``_evacuate_vpu``: consolidations book on
+        the owning VPU's DMA port (the cache controller still drains a
+        fenced VPU's data array — only the datapath is dead). Residents of
+        in-flight kernels are skipped; the retire path re-runs the sweep."""
+        busy_phys: set[int] = set()
+        for qk, *_ in self._inflight.values():
+            busy_phys.update(s.phys_id for s in qk.src_bindings)
+            busy_phys.add(qk.dst_binding.phys_id)
+        for phys_id in list(self.resident):
+            res = self.resident.get(phys_id)
+            if res is None or res.vpu != v or phys_id in busy_phys:
+                continue
+            if res.dirty:
+                b = self._binding_of(phys_id)
+                self._wb_segments = segs = []
+                try:
+                    wb = (self._flush_older_aliases(b)
+                          + self._writeback_resident(b, res))
+                finally:
+                    self._wb_segments = None
+                self.stats.writeback_cycles += wb
+                self.at.release(phys_id, RegionKind.DST)
+                self._book_writebacks(segs, (v, wb), t,
+                                      f"evacuate phys{phys_id}", eq,
+                                      phys=phys_id)
+            else:
+                self._evict_resident(phys_id)
+                self.at.release(phys_id, RegionKind.DST)
+
     # -------------------------------------------------------------- pending
     def _needed_later(self, phys_id: int) -> bool:
         if self._pending_src_count.get(phys_id, 0) > 0:
@@ -1056,7 +1213,7 @@ class PipelinedRuntime(CacheRuntime):
         wall0 = time.perf_counter()
         t = self._timeline.now
         busy_phys: set[int] = set()
-        for qk, _, _, _ in self._inflight.values():
+        for qk, *_ in self._inflight.values():
             busy_phys.update(s.phys_id for s in qk.src_bindings)
             busy_phys.add(qk.dst_binding.phys_id)
         for phys_id in list(self.resident):
@@ -1121,6 +1278,30 @@ class PipelinedRuntime(CacheRuntime):
         self._timeline.advance_clock(until)
         self._wall_seconds += time.perf_counter() - wall0
 
+    def _deadlock_error(self) -> DeadlockError:
+        """Assemble the structured diagnostics for a wedged drain: every
+        stuck kernel with its last blocked reason and unmet dependency ids,
+        plus each resource's ``free_at`` — enough to tell a dependency
+        deadlock from a mis-modeled resource without re-running under a
+        debugger."""
+        pending: dict[int, dict] = {}
+        stalls = getattr(self.metrics, "stalls", None)
+        for qk in [*self._pending_map.values(), *self.queue]:
+            kid = qk.deps.kernel_id
+            rec = stalls.records.get(kid) if stalls is not None else None
+            pending[kid] = {
+                "kernel": qk.spec.name,
+                "blocked_on": rec._reason if rec is not None else None,
+                "unmet_deps": sorted(self.tracker.unmet_deps(kid)),
+            }
+        resources = {r.name: r.free_at for r in self._all_resources()}
+        ids = ", ".join(f"k{kid}" for kid in sorted(pending))
+        return DeadlockError(
+            f"session drain made no progress with {len(pending)} kernel(s) "
+            f"still pending ({ids}) — dependency deadlock; see "
+            f"err.pending / err.resources for per-kernel blocked reasons "
+            f"and resource horizons", pending, resources)
+
     def session_drain(self) -> None:
         """Run the timeline dry (arrivals included), settle, and flush —
         the open-session counterpart of :meth:`barrier`.
@@ -1129,14 +1310,33 @@ class PipelinedRuntime(CacheRuntime):
         settle fallback fires retire callbacks, and those may issue fresh
         programs (a continuous-batching driver chaining its next step), so
         the pass repeats until a full pass makes no progress. A stuck
-        remainder then falls through to :meth:`barrier`'s deadlock check."""
+        remainder raises :class:`DeadlockError` with the pending kernels,
+        their last blocked reasons, and resource horizons — instead of
+        wedging silently or falling through to the generic barrier check."""
         was, self._session_open = self._session_open, False
         try:
             while self.queue or self._pending_map or self._timeline:
-                before = (self.events_processed, self.stats.total_cycles)
+                before = (self.stats.kernels_run, self.events_processed,
+                          self.stats.total_cycles)
                 self.run_pending()
-                if (self.events_processed, self.stats.total_cycles) == before:
+                after = (self.stats.kernels_run, self.events_processed,
+                         self.stats.total_cycles)
+                if after == before:
+                    # A full pass moved nothing at all: if work remains it
+                    # can never complete (event re-bookings would at least
+                    # bump events_processed).
+                    if self.queue or self._pending_map or self._inflight:
+                        raise self._deadlock_error()
                     break
+                if (after[0] == before[0]
+                        and (self.queue or self._pending_map)
+                        and not self._timeline and not self._inflight):
+                    # Events ticked but no kernel retired, nothing is in
+                    # flight, and the timeline is dry — the remaining
+                    # kernels are re-examined each pass without ever
+                    # becoming ready. Progress in the counters is an
+                    # artifact of re-booked decode events, not real work.
+                    raise self._deadlock_error()
             self.barrier()
         finally:
             self._session_open = was

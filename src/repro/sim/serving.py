@@ -277,11 +277,6 @@ class ServingDriver:
         """Post every arrival onto the timeline, drain to completion, and
         return the request-lifecycle summary (exact percentiles)."""
         for r in arrivals:
-            total = r.prompt_len + r.max_new
-            if total > self.cfg.kv_max + 1:
-                raise ProgramError(
-                    f"request {r.rid}: prompt {r.prompt_len} + max_new "
-                    f"{r.max_new} exceeds kv_max {self.cfg.kv_max} + 1")
             self.session.post(r.arrival, lambda t, r=r: self._arrive(r, t))
         self.session.drain()
         if self.active or self.waiting:
@@ -296,6 +291,14 @@ class ServingDriver:
         # stall can delay the callback past r.arrival, and that wait must
         # land in queue_wait/TTFT, not vanish from them.
         self.log.arrive(r.rid, r.prompt_len, r.max_new, r.arrival)
+        # Admission control: a request whose context could outgrow kv_max
+        # is rejected *here* — with a `serving.rejected` count — instead of
+        # blowing up mid-tape in a decode step after cycles were spent on
+        # its prefill. kv_len peaks at prompt_len + (max_new - 1).
+        if (not 1 <= r.prompt_len <= self.cfg.kv_max
+                or r.prompt_len + r.max_new > self.cfg.kv_max + 1):
+            self.log.reject(r.rid, t)
+            return
         if len(self.active) < self.cfg.slots:
             self._admit(r, t)
         else:

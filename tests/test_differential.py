@@ -363,6 +363,77 @@ def test_generator_covers_the_space():
     assert aliased_dst > 5
 
 
+# ----------------------------------------------------------- fault plans
+def gen_fault_schedule(seed: int, n_ops: int):
+    """A seeded *recoverable* fault schedule over kernel ids 0..n_ops-1:
+    ~70% of kernels take a fault, drawn over all three recoverable kinds
+    (single/double-bit ECC, 1–3 corrupt-replay attempts), always within the
+    replay budget so no VPU is ever offlined."""
+    from repro.sim import FaultConfig
+    rng = np.random.default_rng(seed + 999)
+    entries = []
+    for kid in range(n_ops):
+        if rng.random() < 0.3:
+            continue
+        kind = ("single", "double", "corrupt")[int(rng.integers(3))]
+        ent = {"kernel": kid, "kind": kind}
+        if kind == "corrupt":
+            ent["replays"] = int(rng.integers(1, 4))
+        entries.append(ent)
+    return FaultConfig(schedule=tuple(entries), max_replays=4,
+                       ecc_penalty=17, replay_backoff=23)
+
+
+def check_fault_program(seed: int, gen=gen_program):
+    """Recoverable-fault differential oracle: for both schedulers, a seeded
+    fault schedule over a random program must flush a memory image
+    byte-identical to the fault-free run, retire every kernel without
+    deadlock or offlining, and keep per-kernel stall conservation
+    (including the ``fault_replay`` bin) intact."""
+    prog = gen(seed)
+    n_ops = prog["program"].n_ops
+    fc = gen_fault_schedule(seed, n_ops)
+    for sched in ("serial", "pipelined"):
+        clean = _run(prog, sched)
+        if sched == "serial":
+            rt = CacheRuntime(**prog["rt"], faults=fc)
+        else:
+            rt = PipelinedRuntime(**prog["rt"], **prog["pipe"], faults=fc,
+                                  metrics=True)
+        faulted = run_program(rt, prog["program"])
+        clean.rt.cache.flush_all()
+        rt.cache.flush_all()
+        np.testing.assert_array_equal(
+            clean.rt.memory.data, rt.memory.data,
+            err_msg=f"seed {seed}: {sched} memory diverged under "
+                    f"recoverable faults")
+        assert rt.stats.kernels_run == n_ops, \
+            f"seed {seed}: {sched} lost kernels under faults"
+        assert not rt.queue and not rt.offline
+        if sched == "pipelined":
+            assert rt.at.live_count() == 0
+            assert rt.metrics.stalls.conservation_ok(), \
+                f"seed {seed}: fault_replay broke stall conservation"
+            if fc.schedule:
+                c = rt.metrics_report()["counters"]
+                assert c.get("faults.injected", {}).get("value", 0) > 0, \
+                    f"seed {seed}: schedule injected nothing"
+
+
+@pytest.mark.parametrize("batch", range(4))
+def test_fault_differential_fuzz(batch):
+    """Fuzz: seeded recoverable fault plans over random programs are
+    bit-identical to the fault-free runs on both schedulers."""
+    per = (max(N_PROGRAMS // 2, 12) + 3) // 4
+    for seed in range(batch * per, (batch + 1) * per):
+        check_fault_program(seed)
+
+
+def test_fault_differential_long_chain():
+    for seed in range(2):
+        check_fault_program(seed, gen=lambda s: gen_chain_program(s, 48))
+
+
 # --------------------------------------------------- session equivalence
 def _session_run(prog: dict, scheduler: str, *, at=None,
                  queue_capacity=None):

@@ -1,0 +1,338 @@
+"""Fault injection, instruction replay, and graceful VPU degradation.
+
+Covers ``repro.sim.faults`` and its hooks across the scheduler stack:
+
+  * **plan determinism** — fault outcomes are a pure function of
+    ``(seed, kernel_id)``; explicit schedule entries override the rates;
+  * **recoverable tiers are functionally exact** — ECC single/double-bit
+    flips and bounded instruction replay leave the flushed memory image
+    bit-identical to the fault-free run on *both* schedulers, with the
+    recovery work visible in the ``faults.*`` counters, the
+    ``fault_replay`` stall bin, and the replay-latency histogram;
+  * **graceful degradation** — replay exhaustion and scheduled hard faults
+    offline the victim VPU; every model-catalog scenario still completes on
+    the survivors (oracle-identical), serving keeps admitting at reduced
+    goodput, and only the *last* VPU dying raises :class:`FaultError`;
+  * **drain diagnostics** — a wedged open-session drain raises a structured
+    :class:`DeadlockError` naming the stuck kernels, their blocked reasons,
+    and per-resource horizons;
+  * **DSE integration** — ``faults.*`` dotted overrides run through
+    ``repro.dse.run_point`` with the golden-tape verification still green.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ArcaneCoprocessor, reference_images, run_program
+from repro.core.program import issue_program, place_program
+from repro.core.runtime import CacheRuntime
+from repro.core.session import RuntimeSession
+from repro.dse import MODEL_SCENARIOS, run_point
+from repro.sim import (DeadlockError, FaultConfig, FaultError, FaultPlan,
+                       KernelFaults, PipelinedRuntime, Request, ServingConfig,
+                       ServingDriver, config_from_overrides)
+from repro.sim.faults import as_fault_plan
+
+from test_differential import gen_chain_program, gen_program
+
+TIERS = FaultConfig(max_replays=3, ecc_penalty=17, replay_backoff=23,
+                    schedule=({"kernel": 0, "kind": "single"},
+                              {"kernel": 1, "kind": "double"},
+                              {"kernel": 2, "kind": "corrupt", "replays": 2}))
+
+
+def _run(prog: dict, scheduler: str, faults=None, metrics=True):
+    if scheduler == "serial":
+        rt = CacheRuntime(**prog["rt"], faults=faults)
+    else:
+        rt = PipelinedRuntime(**prog["rt"], **prog["pipe"], faults=faults,
+                              metrics=metrics)
+    return run_program(rt, prog["program"])
+
+
+def _counters(rt) -> dict:
+    return {name: d["value"]
+            for name, d in rt.metrics_report()["counters"].items()
+            if name.startswith("faults.")}
+
+
+# ----------------------------------------------------------------- the plan
+def test_plan_deterministic_and_keyed_by_kernel_id():
+    cfg = FaultConfig(flip_rate=0.4, corrupt_rate=0.3, seed=11)
+    a, b = FaultPlan(cfg), FaultPlan(cfg)
+    draws = [a.kernel_faults(kid) for kid in range(64)]
+    assert draws == [b.kernel_faults(kid) for kid in range(64)]
+    # the rates genuinely produce a mix, including clean kernels
+    assert any(d is None for d in draws)
+    assert any(d is not None and d.ecc_bits == 1 for d in draws)
+    assert any(d is not None and d.ecc_bits == 2 for d in draws)
+    assert any(d is not None and d.replays for d in draws)
+    # reordering queries does not change outcomes (pure in kid)
+    c = FaultPlan(cfg)
+    assert [c.kernel_faults(kid) for kid in reversed(range(64))] \
+        == list(reversed(draws))
+    # a different seed is a different plan
+    assert draws != [FaultPlan(FaultConfig(flip_rate=0.4, corrupt_rate=0.3,
+                                           seed=12)).kernel_faults(kid)
+                     for kid in range(64)]
+    # flip positions are per-(kid, salt) and in range
+    for salt in (0, 1, 16):
+        byte, bit = a.flip_position(3, salt, 40)
+        assert 0 <= byte < 40 and 0 <= bit < 8
+
+
+def test_schedule_overrides_win_over_rates():
+    cfg = FaultConfig(flip_rate=1.0, double_bit_fraction=1.0, max_replays=2,
+                      schedule=({"kernel": 5, "kind": "corrupt",
+                                 "replays": 7},))
+    plan = FaultPlan(cfg)
+    assert plan.kernel_faults(0) == KernelFaults(ecc_bits=2)
+    # replays clamp to the budget; the overflow marks exhaustion
+    assert plan.kernel_faults(5) == KernelFaults(replays=2, exhausted=True)
+
+
+def test_noop_configs_collapse_to_none():
+    assert as_fault_plan(None) is None
+    assert as_fault_plan(FaultConfig()) is None
+    assert as_fault_plan({"flip_rate": 0.0}) is None
+    assert as_fault_plan({"flip_rate": 0.5}) is not None
+    with pytest.raises(TypeError):
+        as_fault_plan("not a config")
+    with pytest.raises(ValueError):
+        FaultConfig(flip_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(schedule=({"kind": "single"},))     # no kernel id
+
+
+# --------------------------------------------------------- recoverable tiers
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_recoverable_tiers_bit_identical(scheduler):
+    """One kernel through each recovery tier: the flushed memory image is
+    bit-identical to the fault-free run and the counters attribute every
+    injection to its tier."""
+    for seed in (4, 5):                 # ≥3-op programs under these seeds
+        prog = gen_program(seed)
+        if prog["program"].n_ops < 3:
+            continue
+        base = _run(prog, scheduler)
+        faulted = _run(prog, scheduler, faults=TIERS)
+        base.rt.cache.flush_all()
+        faulted.rt.cache.flush_all()
+        np.testing.assert_array_equal(
+            base.rt.memory.data, faulted.rt.memory.data,
+            err_msg=f"seed {seed}: recoverable faults changed the image")
+        assert faulted.rt.stats.kernels_run == prog["program"].n_ops
+        c = _counters(faulted.rt)
+        # single-bit: injected + corrected; double-bit: injected + replayed
+        # (refetch); corrupt(2): 2 injected + 2 replayed. ECC kernels only
+        # count when their fetch actually DMA-ed a source.
+        assert c["faults.injected"] >= 3
+        assert c["faults.corrected"] >= 1
+        assert c["faults.replayed"] >= 2
+        assert c.get("faults.offlined", 0) == 0
+
+
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_random_plan_bit_identical(scheduler):
+    """Rate-driven plans (no schedule): still bit-identical while faults
+    stay recoverable, on a long dependency chain."""
+    prog = gen_chain_program(3, 24)
+    fc = FaultConfig(flip_rate=0.6, double_bit_fraction=0.5,
+                     corrupt_rate=0.4, max_replays=6, seed=5)
+    base = _run(prog, scheduler)
+    faulted = _run(prog, scheduler, faults=fc)
+    assert _counters(faulted.rt).get("faults.offlined", 0) == 0, \
+        "test premise: this seed must stay within the replay budget"
+    base.rt.cache.flush_all()
+    faulted.rt.cache.flush_all()
+    np.testing.assert_array_equal(base.rt.memory.data, faulted.rt.memory.data)
+    assert _counters(faulted.rt)["faults.injected"] > 0
+
+
+def test_replay_cycles_land_in_fault_replay_bin():
+    """Pipelined conservation: replay backoff + re-execution cycles tile
+    into the ``fault_replay`` stall bin (busy + Σ stalls == latency holds),
+    and every attempt lands in the replay-latency histogram."""
+    prog = gen_chain_program(1, 12)
+    fc = FaultConfig(max_replays=3, replay_backoff=40,
+                     schedule=({"kernel": 2, "kind": "corrupt", "replays": 2},
+                               {"kernel": 7, "kind": "corrupt", "replays": 1}))
+    faulted = _run(prog, "pipelined", faults=fc)
+    rep = faulted.rt.metrics_report()
+    assert rep["conservation_ok"]
+    bins = {kid: rec.bins["fault_replay"]
+            for kid, rec in faulted.rt.metrics.stalls.records.items()}
+    assert bins[2] >= 40 + 80           # two attempts' backoff at least
+    assert bins[7] >= 40
+    assert all(v == 0 for kid, v in bins.items() if kid not in (2, 7))
+    hist = rep["histograms"]["fault.replay_latency_cycles"]
+    assert hist["count"] == 3
+    # serial accounting: the same plan charges stats.fault_cycles and the
+    # kernel_serial fault_replay bin without touching the phase shares
+    serial = _run(prog, "serial", faults=fc)
+    assert serial.rt.stats.fault_cycles >= 40 + 80 + 40
+    assert serial.rt.stats.total_cycles \
+        > serial.rt.stats.total_cycles - serial.rt.stats.fault_cycles
+
+
+# ------------------------------------------------------- graceful degradation
+@pytest.mark.parametrize("scheduler", ["serial", "pipelined"])
+def test_replay_exhaustion_offlines_the_vpu(scheduler):
+    """A kernel whose corruption outlasts the replay budget retires (its
+    last attempt completes on scrubbed state), then its VPU is fenced; the
+    rest of the program completes on the survivors, bit-identically."""
+    prog = gen_chain_program(1, 24)
+    prog["rt"]["n_vpus"] = 2
+    fc = FaultConfig(max_replays=2,
+                     schedule=({"kernel": 3, "kind": "hard"},))
+    base = _run(prog, scheduler)
+    faulted = _run(prog, scheduler, faults=fc)
+    assert faulted.rt.stats.kernels_run == prog["program"].n_ops
+    assert len(faulted.rt.offline) == 1
+    assert _counters(faulted.rt)["faults.offlined"] == 1
+    base.rt.cache.flush_all()
+    faulted.rt.cache.flush_all()
+    np.testing.assert_array_equal(base.rt.memory.data, faulted.rt.memory.data)
+
+
+@pytest.mark.parametrize("scenario", sorted(MODEL_SCENARIOS))
+def test_hard_fault_completes_every_model_scenario(scenario):
+    """A mid-run hard VPU fault: every model-catalog scenario completes on
+    the surviving VPUs, matches the numpy oracle, and its makespan never
+    beats the fault-free run."""
+    cfg = config_from_overrides("arcane-default", {})
+    prog = MODEL_SCENARIOS[scenario](vregs_per_vpu=cfg.vregs_per_vpu,
+                                     vlen_bytes=cfg.vlen_bytes)
+    ref = reference_images(prog)
+
+    def execute(faults):
+        rt = cfg.make_runtime("pipelined")
+        rt.faults = as_fault_plan(faults)
+        cop = ArcaneCoprocessor(runtime=rt)
+        addrs = place_program(cop, prog)
+        issue_program(cop, prog, addrs)
+        return rt, addrs
+
+    rt0, _ = execute(None)
+    hard_at = max(1, rt0.sim_time // 2)
+    rt1, addrs = execute(FaultConfig(hard_at=hard_at, hard_vpu=1))
+    assert rt1.stats.kernels_run == prog.n_ops
+    assert rt1.offline == {1}
+    assert _counters(rt1)["faults.offlined"] == 1
+    assert rt1.sim_time >= rt0.sim_time
+    rt0.cache.flush_all()
+    rt1.cache.flush_all()
+    np.testing.assert_array_equal(rt0.memory.data, rt1.memory.data)
+    from repro.core.program import np_dtype
+    dt = np_dtype(prog.width)
+    for b in prog.buffers:
+        raw = rt1.memory.data[addrs[b.name]:addrs[b.name]
+                              + b.nbytes(prog.width)]
+        np.testing.assert_array_equal(
+            raw.copy().view(dt).reshape(b.rows, b.cols), ref[b.name],
+            err_msg=f"{scenario}: {b.name} diverged after the hard fault")
+
+
+def test_hard_fault_serial_scheduler():
+    cfg = config_from_overrides("arcane-default", {})
+    prog = MODEL_SCENARIOS["moe-granite"](vregs_per_vpu=cfg.vregs_per_vpu,
+                                          vlen_bytes=cfg.vlen_bytes)
+    rt0 = cfg.make_runtime("serial")
+    run_program(rt0, prog)
+    rt1 = cfg.make_runtime("serial")
+    rt1.faults = as_fault_plan(FaultConfig(
+        hard_at=max(1, rt0.stats.total_cycles // 2), hard_vpu=1))
+    run_program(rt1, prog)
+    assert rt1.stats.kernels_run == prog.n_ops and rt1.offline == {1}
+    rt0.cache.flush_all()
+    rt1.cache.flush_all()
+    np.testing.assert_array_equal(rt0.memory.data, rt1.memory.data)
+
+
+def test_last_vpu_dying_raises_fault_error():
+    prog = gen_chain_program(2, 8)
+    prog["rt"]["n_vpus"] = 1
+    fc = FaultConfig(max_replays=1,
+                     schedule=({"kernel": 0, "kind": "hard"},))
+    with pytest.raises(FaultError, match="no healthy VPU remains"):
+        _run(prog, "pipelined", faults=fc)
+    with pytest.raises(FaultError, match="no healthy VPU remains"):
+        _run(prog, "serial", faults=fc)
+
+
+def test_serving_survives_midrun_vpu_offline():
+    """Serving keeps admitting and finishing through a mid-run hard fault:
+    every request completes on the survivor and goodput stays nonzero."""
+    reqs = [Request(rid=i, arrival=i * 9_000,
+                    prompt_len=3 + i % 3, max_new=2 + i % 2)
+            for i in range(5)]
+    base = ServingDriver(PipelinedRuntime(n_vpus=2, metrics=True),
+                         ServingConfig(kv_max=16, slots=2))
+    s0 = base.run(reqs)
+    assert s0["finished"] == len(reqs)
+    hard_at = base.session.now() // 2
+    drv = ServingDriver(
+        PipelinedRuntime(n_vpus=2, metrics=True,
+                         faults=FaultConfig(hard_at=hard_at, hard_vpu=1)),
+        ServingConfig(kv_max=16, slots=2))
+    s1 = drv.run(reqs)
+    assert s1["finished"] == s1["requests"] == len(reqs)
+    assert s1["tokens_generated"] == s0["tokens_generated"]
+    assert s1["goodput_tokens_per_kcycle"] > 0
+    assert _counters(drv.session.rt)["faults.offlined"] == 1
+    assert drv.session.rt.offline == {1}
+
+
+# --------------------------------------------------------- drain diagnostics
+def test_session_drain_raises_structured_deadlock_error():
+    """A drain that stops making progress with kernels still pending raises
+    DeadlockError carrying the stuck kernel ids, their last blocked reason
+    from the stall tracker, and per-resource free_at horizons."""
+    prog = gen_program(0)
+    rt = PipelinedRuntime(**prog["rt"], **prog["pipe"], metrics=True)
+    sess = RuntimeSession(rt)
+    # Sever the dependency tracker: every kernel reports one unmet dep that
+    # no kernel will ever retire — a genuine, permanent deadlock (both the
+    # dispatch gate and the settle fallback's readiness check).
+    rt.tracker.unmet_deps = lambda kid: (10 ** 6,)
+    rt.tracker.ready = lambda kid: False
+    sess.issue(prog["program"])
+    with pytest.raises(DeadlockError) as exc:
+        sess.drain()
+    err = exc.value
+    assert err.pending and err.resources
+    for kid, info in err.pending.items():
+        assert info["kernel"]
+        assert info["blocked_on"] == "raw_dep"
+        assert info["unmet_deps"] == [10 ** 6]
+    assert any(name.endswith(".datapath") or name.endswith(".dma")
+               for name in err.resources)
+    assert all(isinstance(v, int) for v in err.resources.values())
+    assert "deadlock" in str(err)
+
+
+# ------------------------------------------------------------ DSE integration
+def test_dse_point_with_fault_overrides_stays_verified():
+    """``faults.*`` are ordinary dotted-override sweep axes: the DSE golden
+    tape (serial ≡ pipelined ≡ oracle) stays green under recoverable faults
+    and under a mid-run hard fault — recovery is functionally exact."""
+    row = run_point({"point_id": "f0", "scenario": "cnn-small",
+                     "overrides": {"faults.flip_rate": 0.5,
+                                   "faults.corrupt_rate": 0.3,
+                                   "faults.seed": 3}})
+    assert row["verified"] and row["conservation_ok"]
+    row = run_point({"point_id": "f1", "scenario": "cnn-small",
+                     "overrides": {"faults.hard_at": 600,
+                                   "faults.hard_vpu": 1}})
+    assert row["verified"] and row["conservation_ok"]
+
+
+def test_yaml_faults_section_round_trip():
+    cfg = config_from_overrides(
+        "arcane-default",
+        {"faults.corrupt_rate": 0.2, "faults.max_replays": 5,
+         "faults.seed": 9})
+    fc = cfg.fault_config()
+    assert fc is not None and fc.corrupt_rate == 0.2 and fc.max_replays == 5
+    rt = cfg.make_runtime("pipelined")
+    assert rt.faults is not None and rt.faults.cfg.seed == 9
+    assert config_from_overrides("arcane-default", {}).fault_config() is None

@@ -64,10 +64,26 @@ def test_bursty_arrivals_structure():
         assert base <= r.arrival < base + 50      # jitter stays in-burst
 
 
-def test_request_exceeding_kv_capacity_rejected():
-    drv = ServingDriver(PipelinedRuntime(n_vpus=2), ServingConfig(kv_max=8))
-    with pytest.raises(ProgramError, match="exceeds kv_max"):
-        drv.run([Request(rid=0, arrival=0, prompt_len=7, max_new=3)])
+@pytest.mark.parametrize("make_rt", [
+    lambda: CacheRuntime(n_vpus=2),
+    lambda: PipelinedRuntime(n_vpus=2, metrics=True),
+], ids=["serial", "pipelined"])
+def test_request_exceeding_kv_capacity_rejected(make_rt):
+    """Admission control: an oversized request is rejected at arrival —
+    counted in `serving.rejected` — instead of failing mid-tape, and the
+    well-sized requests around it still finish."""
+    drv = ServingDriver(make_rt(), ServingConfig(kv_max=8))
+    s = drv.run([
+        Request(rid=0, arrival=0, prompt_len=7, max_new=3),     # 7+3 > 8+1
+        Request(rid=1, arrival=10, prompt_len=4, max_new=2),
+        Request(rid=2, arrival=20, prompt_len=9, max_new=1),    # prompt > 8
+    ])
+    assert s["requests"] == 3
+    assert s["rejected"] == 2
+    assert s["finished"] == 1
+    assert s["tokens_generated"] == 2
+    rec = drv.log.records[0]
+    assert rec.rejected is not None and rec.admitted is None
 
 
 # ---------------------------------------------------------------- driving
